@@ -1,0 +1,260 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+    Table 1  → bench_comm_complexity   (iterations & bits to ε-stationarity:
+               MARINA vs DIANA vs DCGD, RandK sweep — the paper's headline)
+    Fig. 1   → bench_binclass          (eq. 11 problem, full-batch methods)
+    Fig. 1b  → bench_vr                (VR-MARINA vs VR-DIANA oracle complexity)
+    Table PP → bench_pp                (PP-MARINA client-sampling sweep)
+    Fig. 2   → bench_lm                (LM training proxy for ResNet18/CIFAR100:
+               loss reached per transmitted bit)
+    §Kernels → bench_kernels           (compression kernel wall time vs jnp ref)
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = step wall time;
+derived = the figure-of-merit for that table).
+
+Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    DCGD,
+    Diana,
+    Marina,
+    PPMarina,
+    RandK,
+    VRMarina,
+    diana_alpha,
+    diana_gamma,
+    make_gd,
+    marina_gamma,
+    pp_marina_gamma,
+    vr_marina_gamma,
+)
+from repro.core.problems import (
+    BinClassData,
+    binclass_full_grad,
+    binclass_smoothness,
+    make_synthetic_binclass,
+    nonconvex_binclass_loss,
+    sample_minibatch,
+)
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us: float, derived: str):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.2f},{derived}", flush=True)
+
+
+def _grad_sqnorm(x, data, d):
+    flat = BinClassData(a=data.a.reshape(-1, d), y=data.y.reshape(-1))
+    return float(jnp.sum(binclass_full_grad(x, flat) ** 2))
+
+
+def _run_to_target(method, state, data, d, target, max_steps, extra=None):
+    step = jax.jit(method.step)
+    bits = 0.0
+    t0 = time.time()
+    k = 0
+    for k in range(max_steps):
+        key = jax.random.PRNGKey(k)
+        if extra is not None:
+            state, met = step(state, key, data, extra(key))
+        else:
+            state, met = step(state, key, data)
+        bits += float(met.bits_per_worker)
+        if (k + 1) % 50 == 0 and _grad_sqnorm(state.params, data, d) < target:
+            break
+    us = (time.time() - t0) / (k + 1) * 1e6
+    return state, bits, k + 1, us
+
+
+# ---------------------------------------------------------------------------
+
+
+def bench_comm_complexity(quick=False):
+    """Table 1: bits-to-ε for MARINA vs DIANA vs DCGD across RandK levels."""
+    n, m, d = 10, 128, 100
+    data = make_synthetic_binclass(jax.random.PRNGKey(0), n, m, d)
+    L = binclass_smoothness(data)
+    grad_fn = jax.grad(nonconvex_binclass_loss)
+    x0 = jnp.zeros((d,))
+    target = 1e-4
+    max_steps = 800 if quick else 4000
+    for K in ((5,) if quick else (1, 5, 10)):
+        comp = RandK(k=K)
+        omega = comp.omega(d)
+        p = comp.default_p(d)
+        mar = Marina(grad_fn, comp, marina_gamma(L, omega, p, n), p)
+        _, bits, it, us = _run_to_target(mar, mar.init(x0, data), data, d, target, max_steps)
+        emit(f"table1/marina_rand{K}", us, f"iters={it};Mbits={bits/1e6:.3f}")
+        dia = Diana(grad_fn, comp, diana_gamma(L, omega, n), diana_alpha(omega), n)
+        _, bits, it, us = _run_to_target(dia, dia.init(x0), data, d, target, max_steps)
+        emit(f"table1/diana_rand{K}", us, f"iters={it};Mbits={bits/1e6:.3f}")
+        dc = DCGD(grad_fn, comp, 0.25 / (L * (1 + omega / n)), n)
+        _, bits, it, us = _run_to_target(dc, dc.init(x0), data, d, target, max_steps)
+        emit(f"table1/dcgd_rand{K}", us, f"iters={it};Mbits={bits/1e6:.3f}")
+
+
+def bench_binclass(quick=False):
+    """Fig. 1 row 1: MARINA vs GD on eq. (11), bits to target."""
+    n, m, d = 5, 256, 80
+    data = make_synthetic_binclass(jax.random.PRNGKey(1), n, m, d)
+    L = binclass_smoothness(data)
+    grad_fn = jax.grad(nonconvex_binclass_loss)
+    x0 = jnp.zeros((d,))
+    target = 1e-4
+    steps = 500 if quick else 3000
+    gd = make_gd(grad_fn, 1.0 / L)
+    _, bits, it, us = _run_to_target(gd, gd.init(x0, data), data, d, target, steps)
+    emit("fig1/gd", us, f"iters={it};Mbits={bits/1e6:.3f}")
+    comp = RandK(k=5)
+    p = comp.default_p(d)
+    mar = Marina(grad_fn, comp, marina_gamma(L, comp.omega(d), p, n), p)
+    _, bits, it, us = _run_to_target(mar, mar.init(x0, data), data, d, target, steps)
+    emit("fig1/marina_rand5", us, f"iters={it};Mbits={bits/1e6:.3f}")
+
+
+def bench_vr(quick=False):
+    """Fig. 1 row 2: VR-MARINA — oracle calls & bits to target with b'≈m/16."""
+    n, m, d = 5, 128, 60
+    data = make_synthetic_binclass(jax.random.PRNGKey(2), n, m, d)
+    L = binclass_smoothness(data)
+    grad_fn = jax.grad(nonconvex_binclass_loss)
+    comp = RandK(k=3)
+    bprime = max(2, m // 16)
+    p = min(comp.default_p(d), bprime / (m + bprime))
+    gamma = vr_marina_gamma(L, L, comp.omega(d), p, n, bprime)
+    vr = VRMarina(grad_fn, grad_fn, comp, gamma, p)
+    target = 3e-4
+    steps = 600 if quick else 6000
+
+    state = vr.init(jnp.zeros((d,)), data)
+    step = jax.jit(vr.step)
+    bits = oracle = 0.0
+    t0 = time.time()
+    k = 0
+    for k in range(steps):
+        key = jax.random.PRNGKey(k)
+        mb = sample_minibatch(jax.random.fold_in(key, 1), data, bprime)
+        state, met = step(state, key, data, mb)
+        bits += float(met.bits_per_worker)
+        oracle += float(met.oracle_calls)
+        if (k + 1) % 100 == 0 and _grad_sqnorm(state.params, data, d) < target:
+            break
+    us = (time.time() - t0) / (k + 1) * 1e6
+    emit("fig1/vr_marina_rand3", us,
+         f"iters={k+1};oracle={oracle:.0f};Mbits={bits/1e6:.3f}")
+
+
+def bench_pp(quick=False):
+    """PP-MARINA (Table 1 PP rows): total uplink vs participation r."""
+    n, m, d = 20, 64, 50
+    data = make_synthetic_binclass(jax.random.PRNGKey(3), n, m, d)
+    L = binclass_smoothness(data)
+    grad_fn = jax.grad(nonconvex_binclass_loss)
+    comp = RandK(k=3)
+    target = 3e-4
+    steps = 800 if quick else 8000
+    for r in ((4,) if quick else (20, 8, 4)):
+        p = comp.default_p(d) * r / n
+        m_ = PPMarina(grad_fn, comp, pp_marina_gamma(L, comp.omega(d), p, r), p, r)
+        _, bits, it, us = _run_to_target(
+            m_, m_.init(jnp.zeros((d,)), data), data, d, target, steps
+        )
+        emit(f"pp/r{r}", us, f"iters={it};total_Mbits={bits*n/1e6:.3f}")
+
+
+def bench_lm(quick=False):
+    """Fig. 2 proxy: tiny-LM loss after a fixed bit budget, VR-MARINA vs baselines."""
+    from repro.models import init_params
+    from repro.models.config import ModelConfig, dense_stack
+    from repro.train import TrainConfig, Trainer
+
+    cfg = ModelConfig(
+        name="bench-lm", arch_type="dense", d_model=64, num_heads=4,
+        num_kv_heads=2, d_ff=128, vocab_size=256, segments=dense_stack(2),
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    steps = 10 if quick else 40
+    for method, gamma in (("vr_marina", 0.1), ("diana", 0.1), ("dcgd", 0.1)):
+        tcfg = TrainConfig(
+            method=method, compressor="randk", comp_kwargs={"k": 0.02},
+            gamma=gamma, n_workers=3, batch_per_worker=4, mb_per_worker=2,
+            steps=steps, log_every=max(1, steps // 4),
+        )
+        t0 = time.time()
+        _, hist = Trainer(cfg, tcfg, params).run()
+        us = (time.time() - t0) / steps * 1e6
+        emit(
+            f"fig2/{method}", us,
+            f"loss0={hist.loss[0]:.3f};lossK={hist.loss[-1]:.3f};"
+            f"Mbits={hist.bits_cum[-1]/1e6:.2f}",
+        )
+
+
+def bench_kernels(quick=False):
+    """Kernel wall time (interpret mode on CPU — correctness path) vs jnp ref."""
+    from repro.kernels import ops, ref
+
+    d = 1 << 16
+    x = jax.random.normal(jax.random.PRNGKey(0), (d,))
+    key = jax.random.PRNGKey(1)
+    reps = 3 if quick else 10
+
+    def timeit(fn):
+        fn()  # compile
+        t0 = time.time()
+        for _ in range(reps):
+            jax.block_until_ready(fn())
+        return (time.time() - t0) / reps * 1e6
+
+    us = timeit(lambda: ops.randk_compress(x, key, kb=8))
+    emit("kernels/randk_compress_interp", us, f"d={d};kb=8")
+    v, o = ops.randk_compress(x, key, kb=8)
+    us = timeit(lambda: ops.randk_decompress_mean(v[None], o[None], d))
+    emit("kernels/scatter_decompress_interp", us, f"d={d}")
+    us = timeit(lambda: ops.qsgd_compress(x, key, s=4))
+    emit("kernels/qsgd_compress_interp", us, f"d={d};s=4")
+
+    x2d = ops.pad_to_blocks(x, 1024)
+    offs = ops.jittered_offsets(key, x2d.shape[0], 1024, 8)
+    ref_fn = jax.jit(lambda: ref.randk_block_compress_ref(x2d, offs, 128.0))
+    us = timeit(ref_fn)
+    emit("kernels/randk_ref_jnp", us, f"d={d}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    benches = {
+        "comm_complexity": bench_comm_complexity,
+        "binclass": bench_binclass,
+        "vr": bench_vr,
+        "pp": bench_pp,
+        "lm": bench_lm,
+        "kernels": bench_kernels,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        fn(quick=args.quick)
+    print(f"# {len(ROWS)} rows", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Serving example (deliverable b): batched prefill + decode with every cache
+flavour — full KV, sliding-window ring, recurrent state, MLA latent cache.
+
+Picks a reduced assigned architecture (selectable with --arch), prefill a
+batch of prompts, then decodes tokens greedily, printing throughput.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --arch gemma3-27b
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import PUBLIC_TO_MODULE, get_arch
+from repro.models import decode_step, init_params, prefill, reduced
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-27b", choices=sorted(PUBLIC_TO_MODULE))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch)
+    cfg = reduced(arch.model, layers=2, d_model=128)
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+
+    B, P, G = args.batch, args.prompt_len, args.gen
+    total = P + G
+    prompts = jax.random.randint(key, (B, P), 0, cfg.vocab_size)
+    prefix = (
+        jax.random.normal(key, (B, 8, cfg.d_model)) * 0.02
+        if arch.prefix_len
+        else None
+    )
+
+    print(f"arch={args.arch} (reduced) | batch={B} prompt={P} gen={G}")
+    t0 = time.time()
+    pre = jax.jit(lambda p, t, pe: prefill(p, cfg, t, pe, max_len=total + 8))
+    logits, cache = pre(params, prompts, prefix)
+    logits.block_until_ready()
+    print(f"prefill: {time.time()-t0:.2f}s ({B*P} tokens)")
+
+    dec = jax.jit(lambda p, c, t, pos: decode_step(p, cfg, c, t, pos))
+    tok = jnp.argmax(logits, axis=-1)
+    out = [tok]
+    off = 0 if prefix is None else prefix.shape[1]
+    t0 = time.time()
+    for i in range(G - 1):
+        logits, cache = dec(params, cache, tok, off + P + i)
+        tok = jnp.argmax(logits, axis=-1)
+        out.append(tok)
+    jax.block_until_ready(out[-1])
+    dt = time.time() - t0
+    gen = jnp.stack(out, axis=1)
+    print(f"decode: {G-1} steps × {B} seqs in {dt:.2f}s "
+          f"({(G-1)*B/dt:.1f} tok/s)")
+    print("sample continuation ids:", gen[0, :12].tolist())
+    assert bool(jnp.all((gen >= 0) & (gen < cfg.vocab_size)))
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""End-to-end driver (deliverable b): distributed LM training with VR-MARINA.
+
+Trains a transformer LM on the synthetic heterogeneous token pipeline with
+compressed communication, logging loss vs *bits uplinked per worker* — the
+paper's Fig. 2 axes, with ResNet18/CIFAR100 replaced by the modern equivalent
+workload (DESIGN.md §6).
+
+Default config is a ~100M-parameter model (for real hardware / the mesh
+launcher). ``--smoke`` runs a ~5M-parameter variant for a few dozen steps so
+the driver completes on this CPU container.
+
+Run:  PYTHONPATH=src python examples/train_lm.py --smoke
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_params, param_count
+from repro.models.config import ModelConfig, dense_stack
+from repro.train import TrainConfig, Trainer
+
+
+def model_100m() -> ModelConfig:
+    return ModelConfig(
+        name="lm-100m",
+        arch_type="dense",
+        d_model=768,
+        num_heads=12,
+        num_kv_heads=12,
+        d_ff=3072,
+        vocab_size=32768,
+        segments=dense_stack(12),
+    )
+
+
+def model_smoke() -> ModelConfig:
+    return ModelConfig(
+        name="lm-smoke",
+        arch_type="dense",
+        d_model=160,
+        num_heads=4,
+        num_kv_heads=2,
+        d_ff=512,
+        vocab_size=2048,
+        segments=dense_stack(3),
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--method", default="vr_marina")
+    ap.add_argument("--k-frac", type=float, default=0.02)
+    ap.add_argument("--gamma", type=float, default=0.25)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = model_smoke() if args.smoke else model_100m()
+    steps = args.steps or (30 if args.smoke else 300)
+    tcfg = TrainConfig(
+        method=args.method,
+        compressor="randk",
+        comp_kwargs={"k": args.k_frac},
+        gamma=args.gamma,
+        n_workers=4,
+        batch_per_worker=8 if args.smoke else 16,
+        mb_per_worker=4 if args.smoke else 8,
+        steps=steps,
+        log_every=max(1, steps // 10),
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=max(1, steps // 3) if args.ckpt_dir else 0,
+    )
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    print(f"model={cfg.name} params={param_count(params):,} method={tcfg.method}")
+    trainer = Trainer(cfg, tcfg, params)
+    print(f"compressor ζ/d ≈ {args.k_frac}, p = {trainer.p:.4f}\n")
+
+    state, hist = trainer.run()
+    print(f"\n{'step':>6} {'loss':>8} {'||g||':>10} {'Mbits/worker':>13}")
+    for s, l, g, b in zip(hist.step, hist.loss, hist.grad_est_norm, hist.bits_cum):
+        print(f"{s:>6} {l:>8.4f} {g:>10.4f} {b/1e6:>13.2f}")
+
+    assert hist.loss[-1] < hist.loss[0], "training must reduce loss"
+    print("\nOK: loss decreased with compressed communication.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""§Perf iteration 1 table: whole-loss remat (v0) vs per-layer remat + (R,L)
+compression layout (v1), per train combo. Prints a markdown table."""
+
+import glob
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+V0 = os.path.join(ROOT, "experiments", "dryrun_v0")
+V1 = os.path.join(ROOT, "experiments", "dryrun")
+
+
+def pick(d, arch, mesh):
+    p = os.path.join(d, f"{arch}__train_4k__{mesh}.json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def main():
+    archs = sorted(
+        {os.path.basename(f).split("__")[0] for f in glob.glob(V0 + "/*train_4k*")}
+    )
+    print("| arch | mesh | step | mem_ms v0→v1 | coll_ms v0→v1 | temp GB v0→v1 |")
+    print("|---|---|---|---|---|---|")
+    for arch in archs:
+        for mesh in ("single", "multi"):
+            r0, r1 = pick(V0, arch, mesh), pick(V1, arch, mesh)
+            if not (r0 and r1):
+                continue
+            for sname in ("sync_step", "compressed_step"):
+                s0 = r0["steps"].get(sname, {})
+                s1 = r1["steps"].get(sname, {})
+                if not (s0.get("ok") and s1.get("ok")):
+                    continue
+                t0 = s0.get("memory_analysis", {}).get("temp_size_in_bytes", 0) / 1e9
+                t1 = s1.get("memory_analysis", {}).get("temp_size_in_bytes", 0) / 1e9
+                print(
+                    f"| {arch} | {mesh} | {sname} "
+                    f"| {s0['memory_s']*1e3:.0f} → {s1['memory_s']*1e3:.0f} "
+                    f"| {s0['collective_s']*1e3:.0f} → {s1['collective_s']*1e3:.0f} "
+                    f"| {t0:.1f} → {t1:.1f} |"
+                )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Render the §Roofline table in EXPERIMENTS.md from experiments/dryrun/*.json.
+
+Usage: python scripts/update_experiments.py
+"""
+
+import glob
+import json
+import os
+import re
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+DRY = os.path.join(ROOT, "experiments", "dryrun")
+EXP = os.path.join(ROOT, "EXPERIMENTS.md")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = [
+    "deepseek-v3-671b", "qwen1.5-0.5b", "xlstm-350m", "recurrentgemma-2b",
+    "llama4-scout-17b-a16e", "musicgen-medium", "qwen3-32b", "internvl2-1b",
+    "deepseek-coder-33b", "gemma3-27b",
+]
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "—"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def build_table():
+    rows = []
+    for f in glob.glob(os.path.join(DRY, "*.json")):
+        with open(f) as fh:
+            r = json.load(fh)
+        rows.append(r)
+
+    def key(r):
+        a = ARCH_ORDER.index(r["arch"]) if r["arch"] in ARCH_ORDER else 99
+        s = SHAPE_ORDER.index(r["shape"]) if r["shape"] in SHAPE_ORDER else 99
+        return (a, s, r["mesh"])
+
+    rows.sort(key=key)
+    out = [
+        "| arch | shape | mesh | step | comp_ms (analytic/HLO) | mem_ms | coll_ms | dominant | useful | HBM/dev | note |",
+        "|---|---|---|---|---:|---:|---:|---|---:|---:|---|",
+    ]
+    n_ok = n_fail = 0
+    for r in rows:
+        for sname in ("sync_step", "compressed_step", "train_step",
+                      "prefill_step", "decode_step"):
+            s = r["steps"].get(sname)
+            if s is None:
+                continue
+            if not s.get("ok"):
+                n_fail += 1
+                out.append(
+                    f"| {r['arch']} | {r['shape']} | {r['mesh']} | {sname} "
+                    f"| — | — | — | FAIL | — | — | {s.get('error','')[:60]} |"
+                )
+                continue
+            n_ok += 1
+            ma = s.get("memory_analysis", {})
+            hbm = None
+            if ma:
+                hbm = (
+                    ma.get("argument_size_in_bytes", 0)
+                    + ma.get("output_size_in_bytes", 0)
+                    + ma.get("temp_size_in_bytes", 0)
+                    - ma.get("alias_size_in_bytes", 0)
+                )
+            ur = s.get("useful_ratio")
+            note = ""
+            if hbm and hbm > 16e9:
+                note = "exceeds 16GB v5e HBM"
+            # analytic compute term (recomputed for older JSONs)
+            ana = s.get("analytic_compute_s")
+            if ana is None:
+                mft = s.get("model_flops_total") or 0.0
+                ana = mft / s.get("n_devices", r["n_devices"]) / 197e12
+            dom = s["dominant"]
+            if max(ana, s["compute_s"]) >= max(s["memory_s"], s["collective_s"]):
+                dom = "compute"
+            out.append(
+                "| {a} | {sh} | {m} | {st} | {an:.1f}/{c:.1f} | {me:.1f} | {co:.1f} "
+                "| {dom} | {u} | {h} | {note} |".format(
+                    a=r["arch"], sh=r["shape"], m=r["mesh"], st=sname,
+                    an=ana * 1e3, c=s["compute_s"] * 1e3, me=s["memory_s"] * 1e3,
+                    co=s["collective_s"] * 1e3, dom=dom,
+                    u=f"{ur:.2f}" if ur else "—", h=fmt_bytes(hbm), note=note,
+                )
+            )
+    out.append("")
+    out.append(f"({n_ok} step-lowerings ok, {n_fail} failed; "
+               f"{len(rows)} (arch × shape × mesh) combinations recorded)")
+    return "\n".join(out)
+
+
+def main():
+    table = build_table()
+    with open(EXP) as f:
+        text = f.read()
+    marker = "<!-- ROOFLINE_TABLE -->"
+    pattern = re.compile(
+        re.escape(marker) + r".*?(?=\n## |\Z)", re.DOTALL
+    )
+    replacement = marker + "\n\n" + table + "\n"
+    text = pattern.sub(replacement.replace("\\", "\\\\"), text, count=1)
+    with open(EXP, "w") as f:
+        f.write(text)
+    print(table[-400:])
+    print("updated EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""Render the §Perf hillclimbing log in EXPERIMENTS.md from
+experiments/perf/*.json (+ baselines in experiments/dryrun/).
+
+Usage: python scripts/update_perf.py
+"""
+
+import glob
+import json
+import os
+import re
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+PERF = os.path.join(ROOT, "experiments", "perf")
+DRY = os.path.join(ROOT, "experiments", "dryrun")
+EXP = os.path.join(ROOT, "EXPERIMENTS.md")
+
+# hypothesis text per variant (mirrors repro/launch/perf.py VARIANTS)
+HYPOTHESES = {
+    "shared_mask": "shared RandK mask ⇒ worker-mean before the collective: "
+    "K-value psum replaces the n·K payload all-gather ⇒ collective term ↓ "
+    "(theory cost: ω instead of ω/√n in Thm 2.1).",
+    "packed_payload": "bf16 values + int8 jitter on the wire (8→3 B/coord) ⇒ "
+    "payload collective bytes ↓ ~2.7× with no algorithmic change.",
+    "shared_and_packed": "both payload optimizations composed.",
+    "no_remat": "dropping rematerialization ⇒ compute term ↓ (no recompute) "
+    "at the cost of activation memory ↑.",
+    "replicate_params": "small model: abandon tensor parallelism; model axis "
+    "becomes within-worker data parallelism ⇒ the per-timestep reshard "
+    "collectives of the recurrent scan disappear; only one dense grad "
+    "all-reduce remains.",
+    "chunk_2048": "wider attention chunks ⇒ fewer online-softmax merge passes "
+    "and better MXU utilization; memory term ↑ slightly.",
+    "chunk_512": "narrower chunks ⇒ smaller live set, memory term ↓, more "
+    "merge overhead.",
+    "cap_1.0": "lower MoE capacity factor ⇒ dispatch buffers and expert "
+    "GEMM flops ↓ proportionally (more drops).",
+    "workers_pod_data": "more MARINA workers (thinner model shards) ⇒ "
+    "compression collective n↑ but per-worker gradient cheaper.",
+    "f32_params": "fp32 parameters ⇒ memory/collective terms ×2 (negative "
+    "control for the accounting).",
+    "staged_payload": "the v1 baseline's compressed-round collective term is "
+    "not the payload: GSPMD replicates the *dense gradient diffs* to satisfy "
+    "the replicated-payload layout (e.g. 43 TB wire at 671B). Pinning the "
+    "gather output to the worker-sharded layout first, then replicating only "
+    "the K-sized payload, restores the paper's ζ_Q-scale collective.",
+    "staged_shared": "staged constraints + shared mask: worker-mean psum of "
+    "the ζ-sized payload, fully sharded end to end (MARINA-SM — the scalable "
+    "giant-model schedule).",
+    "unstaged_payload": "negative control for staged_payload.",
+    "last_logits": "prefill unembeds only the final position: the (B,S,V) "
+    "logits tensor (e.g. 32×32k×152k) disappears from the serve step.",
+}
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_step(s):
+    return (
+        f"comp {s['compute_s']*1e3:.1f} / mem {s['memory_s']*1e3:.1f} / "
+        f"coll {s['collective_s']*1e3:.1f} ms (dom {s['dominant']})"
+    )
+
+
+def main():
+    entries = []
+    for f in sorted(glob.glob(os.path.join(PERF, "*.json"))):
+        r = load(f)
+        if r["variant"] == "baseline":
+            continue
+        base_perf = os.path.join(
+            PERF, f"{r['arch']}__{r['shape']}__{r['mesh']}__baseline.json"
+        )
+        base_dry = os.path.join(
+            DRY, f"{r['arch']}__{r['shape']}__{r['mesh']}.json"
+        )
+        base = None
+        if os.path.exists(base_perf):
+            base = load(base_perf)
+        elif os.path.exists(base_dry):
+            base = load(base_dry)
+        lines = [
+            f"### {r['arch']} × {r['shape']} × {r['mesh']} — `{r['variant']}`",
+            "",
+            f"*Hypothesis:* {HYPOTHESES.get(r['variant'], '(see perf.py)')}",
+            "",
+        ]
+        for sname, s in r["steps"].items():
+            if not s.get("ok"):
+                lines.append(f"* `{sname}`: FAILED — {s.get('error','')[:200]}")
+                continue
+            b = base["steps"].get(sname) if base else None
+            if b and b.get("ok"):
+                def delta(key):
+                    if b[key] == 0:
+                        return "n/a"
+                    return f"{(s[key]-b[key])/b[key]*100:+.1f}%"
+                lines.append(
+                    f"* `{sname}`: before {fmt_step(b)} → after {fmt_step(s)}"
+                    f" — Δcomp {delta('compute_s')}, Δmem {delta('memory_s')},"
+                    f" Δcoll {delta('collective_s')}"
+                )
+                dom = b["dominant"]
+                key = f"{dom}_s"
+                verdict = (
+                    "CONFIRMED" if s[key] < b[key] * 0.95
+                    else ("neutral" if s[key] < b[key] * 1.05 else "REFUTED")
+                )
+                lines.append(f"  * dominant-term ({dom}) verdict: **{verdict}**")
+            else:
+                lines.append(f"* `{sname}`: {fmt_step(s)} (no baseline found)")
+        lines.append("")
+        entries.append("\n".join(lines))
+
+    body = "\n".join(entries) if entries else "(no perf runs recorded yet)"
+    with open(EXP) as f:
+        text = f.read()
+    marker = "<!-- PERF_LOG -->"
+    pattern = re.compile(re.escape(marker) + r".*?(?=\n## |\Z)", re.DOTALL)
+    text = pattern.sub(
+        (marker + "\n\n" + body + "\n").replace("\\", "\\\\"), text, count=1
+    )
+    with open(EXP, "w") as f:
+        f.write(text)
+    print(f"rendered {len(entries)} perf entries")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""npz-based pytree checkpointing (orbax-free; the container is offline).
+
+Trees are flattened with '/'-joined key paths; dataclass states (MarinaState
+etc.) round-trip through their registered pytree flatten. Atomic via
+write-to-temp + rename. Exact restore is covered by tests/test_checkpoint.py.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+_SEP = "//"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return _SEP.join(parts)
+
+
+_BITCAST = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8, "float8_e5m2": np.uint8}
+
+
+def _encode(arr: np.ndarray) -> tuple[np.ndarray, str]:
+    """npz can't hold ml_dtypes (bf16 → void); store a bit-view + dtype tag."""
+    name = arr.dtype.name
+    if name in _BITCAST:
+        return arr.view(_BITCAST[name]), name
+    return arr, ""
+
+
+def save_checkpoint(directory: str, step: int, tree: PyTree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    arrays = {}
+    for path, leaf in flat:
+        arr, tag = _encode(np.asarray(leaf))
+        key = _path_str(path) + (f"::{tag}" if tag else "")
+        arrays[key] = arr
+    final = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(m.group(1))
+        for f in os.listdir(directory)
+        if (m := re.match(r"ckpt_(\d+)\.npz$", f))
+    ]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, step: int, like: PyTree) -> PyTree:
+    """Restore into the structure of `like` (shapes/dtypes preserved)."""
+    import ml_dtypes
+
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with np.load(path) as data:
+        tagged = {}
+        for k in data.files:
+            base, _, tag = k.partition("::")
+            tagged[base] = (k, tag)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for p, leaf in flat:
+            key = _path_str(p)
+            if key not in tagged:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            fkey, tag = tagged[key]
+            arr = data[fkey]
+            if tag:
+                arr = arr.view(np.dtype(getattr(ml_dtypes, tag)))
+            if arr.shape != leaf.shape:
+                raise ValueError(
+                    f"{key}: checkpoint shape {arr.shape} != expected {leaf.shape}"
+                )
+            leaves.append(jnp.asarray(arr).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,41 @@
+"""repro.core — the paper's contribution: MARINA-family optimizers + compression."""
+
+from .compressors import (
+    Compressor,
+    Identity,
+    NaturalCompression,
+    QSGD,
+    RandK,
+    SharedRandK,
+    TopK,
+    make_compressor,
+    tree_compress,
+    tree_decompress,
+    tree_dim,
+    tree_omega,
+    tree_payload_bits,
+    tree_roundtrip,
+)
+from .marina import Marina, MarinaState, PPMarina, StepMetrics, VRMarina, make_gd
+from .baselines import DCGD, Diana, ECSGD, VRDiana
+from .stepsize import (
+    diana_alpha,
+    diana_gamma,
+    marina_comm_per_worker,
+    marina_gamma,
+    marina_gamma_pl,
+    marina_iteration_bound,
+    pp_marina_gamma,
+    vr_marina_gamma,
+)
+
+__all__ = [
+    "Compressor", "Identity", "NaturalCompression", "QSGD", "RandK",
+    "SharedRandK", "TopK", "make_compressor", "tree_compress",
+    "tree_decompress", "tree_dim", "tree_omega", "tree_payload_bits",
+    "tree_roundtrip", "Marina", "MarinaState", "PPMarina", "StepMetrics",
+    "VRMarina", "make_gd", "DCGD", "Diana", "ECSGD", "VRDiana",
+    "diana_alpha", "diana_gamma", "marina_comm_per_worker", "marina_gamma",
+    "marina_gamma_pl", "marina_iteration_bound", "pp_marina_gamma",
+    "vr_marina_gamma",
+]

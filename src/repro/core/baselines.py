@@ -1,0 +1,277 @@
+"""Baseline distributed methods the paper compares against.
+
+* DIANA (Mishchenko et al. 2019): unbiased compression of gradient *shifts*.
+* VR-DIANA (Horváth et al. 2019): DIANA + SVRG-style local variance reduction.
+* QSGD-style DCGD (Alistarh et al. 2017): direct quantization of gradients.
+* EC-SGD (Seide et al. 2014; Stich & Karimireddy 2020): biased TopK + error
+  feedback.
+
+Same worker-stacked-tree conventions as core/marina.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .compressors import Compressor, tree_compress, tree_decompress, tree_dim, tree_payload_bits
+from .marina import GradFn, StepMetrics, _per_worker_grads
+from .tree_util import (
+    tree_axpy,
+    tree_mean_axis0,
+    tree_norm,
+    tree_sub,
+    tree_zeros_like,
+)
+
+PyTree = Any
+
+
+def _vmap_compress(comp: Compressor, key, trees, n):
+    keys = jax.random.split(key, n)
+    return jax.vmap(partial(tree_compress, comp))(keys, trees)
+
+
+def _vmap_decompress(comp: Compressor, payloads, like):
+    return jax.vmap(lambda p: tree_decompress(comp, p, like))(payloads)
+
+
+# ---------------------------------------------------------------------------
+# DIANA
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DianaState:
+    params: PyTree
+    h: PyTree        # per-worker shifts h_i, leading axis n
+    h_mean: PyTree   # server-side (1/n)Σ h_i
+    step: jax.Array
+
+
+@dataclasses.dataclass
+class Diana:
+    grad_fn: GradFn
+    compressor: Compressor
+    gamma: float
+    alpha: float  # shift stepsize, ≤ 1/(1+ω)
+    n: int
+
+    def init(self, params: PyTree) -> DianaState:
+        h = jax.tree.map(
+            lambda x: jnp.zeros((self.n, *x.shape), x.dtype), params
+        )
+        return DianaState(
+            params=params,
+            h=h,
+            h_mean=tree_zeros_like(params),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def step(self, state: DianaState, key: jax.Array, batches: PyTree):
+        grads = _per_worker_grads(self.grad_fn, state.params, batches)   # (n, …)
+        deltas = tree_sub(grads, state.h)                                # ∇f_i − h_i
+        payloads = _vmap_compress(self.compressor, key, deltas, self.n)
+        q = _vmap_decompress(self.compressor, payloads, state.params)    # Q(Δ_i)
+        g = jax.tree.map(jnp.add, state.h_mean, tree_mean_axis0(q))      # unbiased
+        h_new = jax.tree.map(lambda hi, qi: hi + self.alpha * qi, state.h, q)
+        h_mean_new = jax.tree.map(
+            lambda hm, qm: hm + self.alpha * qm, state.h_mean, tree_mean_axis0(q)
+        )
+        x_new = tree_axpy(-self.gamma, g, state.params)
+        metrics = StepMetrics(
+            grad_est_norm=tree_norm(g),
+            bits_per_worker=jnp.asarray(
+                tree_payload_bits(self.compressor, state.params)
+            ),
+            sync_round=jnp.zeros((), jnp.int32),
+            oracle_calls=jnp.asarray(1.0),
+        )
+        return (
+            DianaState(params=x_new, h=h_new, h_mean=h_mean_new, step=state.step + 1),
+            metrics,
+        )
+
+
+# ---------------------------------------------------------------------------
+# VR-DIANA (SVRG-flavoured local variance reduction, option II snapshots)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class VRDianaState:
+    params: PyTree
+    h: PyTree
+    h_mean: PyTree
+    snapshot: PyTree      # w_i — shared x at snapshot time (replicated)
+    mu: PyTree            # per-worker full gradients at the snapshot, axis n
+    step: jax.Array
+
+
+@dataclasses.dataclass
+class VRDiana:
+    full_grad_fn: GradFn
+    mb_grad_fn: GradFn
+    compressor: Compressor
+    gamma: float
+    alpha: float
+    n: int
+    snapshot_prob: float  # SVRG option II: refresh w_i with prob 1/m
+
+    def init(self, params: PyTree, full_batches: PyTree) -> VRDianaState:
+        mu = _per_worker_grads(self.full_grad_fn, params, full_batches)
+        h = jax.tree.map(lambda x: jnp.zeros((self.n, *x.shape), x.dtype), params)
+        return VRDianaState(
+            params=params,
+            h=h,
+            h_mean=tree_zeros_like(params),
+            snapshot=params,
+            mu=mu,
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def step(
+        self,
+        state: VRDianaState,
+        key: jax.Array,
+        full_batches: PyTree,
+        mb_batches: PyTree,
+    ):
+        k_q, k_snap = jax.random.split(key)
+        # SVRG estimator: v_i = ∇f_iB(x) − ∇f_iB(w) + µ_i
+        g_x = _per_worker_grads(self.mb_grad_fn, state.params, mb_batches)
+        g_w = _per_worker_grads(self.mb_grad_fn, state.snapshot, mb_batches)
+        v = jax.tree.map(lambda a, b, m: a - b + m, g_x, g_w, state.mu)
+
+        deltas = tree_sub(v, state.h)
+        payloads = _vmap_compress(self.compressor, k_q, deltas, self.n)
+        q = _vmap_decompress(self.compressor, payloads, state.params)
+        g = jax.tree.map(jnp.add, state.h_mean, tree_mean_axis0(q))
+        h_new = jax.tree.map(lambda hi, qi: hi + self.alpha * qi, state.h, q)
+        h_mean_new = jax.tree.map(
+            lambda hm, qm: hm + self.alpha * qm, state.h_mean, tree_mean_axis0(q)
+        )
+        x_new = tree_axpy(-self.gamma, g, state.params)
+
+        # Option-II snapshot refresh (shared coin; refresh costs m oracle calls).
+        refresh = jax.random.bernoulli(k_snap, self.snapshot_prob)
+
+        def do_refresh(_):
+            mu = _per_worker_grads(self.full_grad_fn, x_new, full_batches)
+            return x_new, mu
+
+        def no_refresh(_):
+            return state.snapshot, state.mu
+
+        snapshot, mu = jax.lax.cond(refresh, do_refresh, no_refresh, None)
+
+        m_full = jax.tree.leaves(full_batches)[0].shape[1]
+        b = jax.tree.leaves(mb_batches)[0].shape[1]
+        metrics = StepMetrics(
+            grad_est_norm=tree_norm(g),
+            bits_per_worker=jnp.asarray(
+                tree_payload_bits(self.compressor, state.params)
+            ),
+            sync_round=refresh.astype(jnp.int32),
+            oracle_calls=jnp.where(refresh, 2.0 * b + m_full, 2.0 * b),
+        )
+        return (
+            VRDianaState(
+                params=x_new,
+                h=h_new,
+                h_mean=h_mean_new,
+                snapshot=snapshot,
+                mu=mu,
+                step=state.step + 1,
+            ),
+            metrics,
+        )
+
+
+# ---------------------------------------------------------------------------
+# DCGD / QSGD: x^{k+1} = x^k − γ (1/n) Σ Q(∇f_i(x^k))
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DCGDState:
+    params: PyTree
+    step: jax.Array
+
+
+@dataclasses.dataclass
+class DCGD:
+    grad_fn: GradFn
+    compressor: Compressor
+    gamma: float
+    n: int
+
+    def init(self, params: PyTree) -> DCGDState:
+        return DCGDState(params=params, step=jnp.zeros((), jnp.int32))
+
+    def step(self, state: DCGDState, key: jax.Array, batches: PyTree):
+        grads = _per_worker_grads(self.grad_fn, state.params, batches)
+        payloads = _vmap_compress(self.compressor, key, grads, self.n)
+        q = _vmap_decompress(self.compressor, payloads, state.params)
+        g = tree_mean_axis0(q)
+        x_new = tree_axpy(-self.gamma, g, state.params)
+        metrics = StepMetrics(
+            grad_est_norm=tree_norm(g),
+            bits_per_worker=jnp.asarray(
+                tree_payload_bits(self.compressor, state.params)
+            ),
+            sync_round=jnp.zeros((), jnp.int32),
+            oracle_calls=jnp.asarray(1.0),
+        )
+        return DCGDState(params=x_new, step=state.step + 1), metrics
+
+
+# ---------------------------------------------------------------------------
+# EC-SGD: biased compressor + error feedback
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ECSGDState:
+    params: PyTree
+    e: PyTree  # per-worker error buffers, axis n
+    step: jax.Array
+
+
+@dataclasses.dataclass
+class ECSGD:
+    grad_fn: GradFn
+    compressor: Compressor  # typically TopK (biased)
+    gamma: float
+    n: int
+
+    def init(self, params: PyTree) -> ECSGDState:
+        e = jax.tree.map(lambda x: jnp.zeros((self.n, *x.shape), x.dtype), params)
+        return ECSGDState(params=params, e=e, step=jnp.zeros((), jnp.int32))
+
+    def step(self, state: ECSGDState, key: jax.Array, batches: PyTree):
+        grads = _per_worker_grads(self.grad_fn, state.params, batches)
+        # p_i = e_i + γ ∇f_i ; transmit C(p_i); e_i ← p_i − C(p_i)
+        p_i = jax.tree.map(lambda e, g: e + self.gamma * g, state.e, grads)
+        payloads = _vmap_compress(self.compressor, key, p_i, self.n)
+        c = _vmap_decompress(self.compressor, payloads, state.params)
+        e_new = tree_sub(p_i, c)
+        update = tree_mean_axis0(c)
+        x_new = tree_sub(state.params, update)
+        metrics = StepMetrics(
+            grad_est_norm=tree_norm(update) / self.gamma,
+            bits_per_worker=jnp.asarray(
+                tree_payload_bits(self.compressor, state.params)
+            ),
+            sync_round=jnp.zeros((), jnp.int32),
+            oracle_calls=jnp.asarray(1.0),
+        )
+        return ECSGDState(params=x_new, e=e_new, step=state.step + 1), metrics

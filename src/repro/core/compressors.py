@@ -1,0 +1,355 @@
+"""Unbiased quantization operators (Def. 1.1) and biased contractive compressors.
+
+Every compressor exposes the three quantities the MARINA theory consumes:
+
+* ``omega(d)``            — the variance parameter ω of Def. 1.1:
+                            ``E[Q(x)] = x`` and ``E‖Q(x) − x‖² ≤ ω‖x‖²``.
+* ``expected_density(d)`` — ζ_Q = sup_x E‖Q(x)‖₀ (Def. 1.1), used for p = ζ_Q/d.
+* ``payload_bits(d)``     — actual bits on the wire per compressed vector, used by the
+                            trainer's communication ledger and the benchmarks that
+                            reproduce the "total transmitted bits" axes of Fig. 1/2.
+
+Compression is defined on *flat* vectors; :func:`tree_compress` lifts a compressor to
+pytrees by splitting the budget proportionally to leaf sizes (Block-RandK — see
+DESIGN.md §3: unbiased with the same ω when the budget is proportional).
+
+All operators are pure functions of an explicit PRNG key so they are jit/vmap/shard_map
+safe. Payloads are fixed-shape pytrees (TPU-friendly: no data-dependent shapes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Payload = Any  # pytree of fixed-shape arrays
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Base class
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """Base for stochastic mappings Q: R^d -> R^d (Def. 1.1 when unbiased)."""
+
+    #: True for quantizations in the paper's sense (Def 1.1). Biased compressors
+    #: (TopK) are only valid inside error-feedback methods (EC-SGD).
+    unbiased: bool = dataclasses.field(default=True, init=False)
+
+    name: str = dataclasses.field(default="base", init=False)
+
+    # -- theory quantities -------------------------------------------------
+    def omega(self, d: int) -> float:
+        raise NotImplementedError
+
+    def expected_density(self, d: int) -> float:
+        raise NotImplementedError
+
+    def payload_bits(self, d: int) -> float:
+        """Bits per compressed vector of dimension d (32-bit value convention)."""
+        raise NotImplementedError
+
+    def default_p(self, d: int) -> float:
+        """The paper's synchronization probability choice p = ζ_Q/d (Cor. 2.1)."""
+        return min(1.0, max(self.expected_density(d) / max(d, 1), 1e-6))
+
+    # -- mechanics ----------------------------------------------------------
+    def compress(self, key: jax.Array, x: jax.Array) -> Payload:
+        raise NotImplementedError
+
+    def decompress(self, payload: Payload, d: int) -> jax.Array:
+        raise NotImplementedError
+
+    def __call__(self, key: jax.Array, x: jax.Array) -> jax.Array:
+        """Q(x) as a dense vector (compress → decompress round trip)."""
+        return self.decompress(self.compress(key, x), x.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# Identity — MARINA reduces to GD (paper §2: "if Q is identity ... GD")
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Identity(Compressor):
+    name: str = dataclasses.field(default="identity", init=False)
+
+    def omega(self, d: int) -> float:
+        return 0.0
+
+    def expected_density(self, d: int) -> float:
+        return float(d)
+
+    def payload_bits(self, d: int) -> float:
+        return 32.0 * d
+
+    def compress(self, key, x):
+        return {"dense": x}
+
+    def decompress(self, payload, d):
+        return payload["dense"]
+
+
+# ---------------------------------------------------------------------------
+# RandK sparsification — the paper's main experimental compressor
+# ---------------------------------------------------------------------------
+
+
+def _randk_indices(key: jax.Array, d: int, k: int) -> jax.Array:
+    """K uniform indices without replacement: top-K of iid uniform keys."""
+    u = jax.random.uniform(key, (d,))
+    _, idx = jax.lax.top_k(u, k)
+    return idx.astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class RandK(Compressor):
+    """Uniform-K sparsification with scaling d/K.
+
+    ω = d/K − 1, ζ_Q = K (Beznosikov et al. 2020). ``k`` may be an absolute count
+    (``k >= 1``) or a fraction of d (``0 < k < 1``).
+    """
+
+    k: float = 1
+    name: str = dataclasses.field(default="randk", init=False)
+
+    def k_for(self, d: int) -> int:
+        if self.k < 1:
+            return max(1, int(round(self.k * d)))
+        return min(int(self.k), d)
+
+    def omega(self, d: int) -> float:
+        return d / self.k_for(d) - 1.0
+
+    def expected_density(self, d: int) -> float:
+        return float(self.k_for(d))
+
+    def payload_bits(self, d: int) -> float:
+        # value (32b) + index (32b) per retained coordinate
+        return 64.0 * self.k_for(d)
+
+    def compress(self, key, x):
+        d = x.shape[0]
+        k = self.k_for(d)
+        idx = _randk_indices(key, d, k)
+        vals = x[idx] * (d / k)
+        return {"values": vals, "indices": idx}
+
+    def decompress(self, payload, d):
+        out = jnp.zeros((d,), payload["values"].dtype)
+        return out.at[payload["indices"]].add(payload["values"])
+
+
+@dataclasses.dataclass(frozen=True)
+class SharedRandK(RandK):
+    """RandK where all workers share the index key for a given round.
+
+    Beyond-paper optimization (EXPERIMENTS.md §Perf): with identical masks across
+    workers, the *sum* of worker payloads is supported on the same K indices, so
+    aggregation is a K-sized psum instead of an n×K all-gather. Still an unbiased
+    ω = d/K−1 quantization per worker; the cross-worker error correlation forfeits
+    the 1/n variance averaging (theory cost: ω instead of ω/√n in the rate), which
+    is exactly the trade the §Perf log quantifies.
+    """
+
+    name: str = dataclasses.field(default="shared_randk", init=False)
+
+
+# ---------------------------------------------------------------------------
+# TopK — biased, for the EC-SGD baseline
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK(Compressor):
+    """Greedy magnitude selection. Biased: E[Q(x)] ≠ x; contractive with δ = K/d.
+
+    Only valid inside error-feedback wrappers (paper §1.2 "Biased Compression";
+    plain distributed SGD + Top1 can diverge — Beznosikov et al. 2020).
+    """
+
+    k: float = 1
+    unbiased: bool = dataclasses.field(default=False, init=False)
+    name: str = dataclasses.field(default="topk", init=False)
+
+    def k_for(self, d: int) -> int:
+        if self.k < 1:
+            return max(1, int(round(self.k * d)))
+        return min(int(self.k), d)
+
+    def omega(self, d: int) -> float:  # not a Def-1.1 quantization
+        raise ValueError("TopK is biased; it has no ω. Use delta().")
+
+    def delta(self, d: int) -> float:
+        """Contraction factor: E‖Q(x) − x‖² ≤ (1 − δ)‖x‖²."""
+        return self.k_for(d) / d
+
+    def expected_density(self, d: int) -> float:
+        return float(self.k_for(d))
+
+    def payload_bits(self, d: int) -> float:
+        return 64.0 * self.k_for(d)
+
+    def compress(self, key, x):
+        del key  # deterministic
+        d = x.shape[0]
+        k = self.k_for(d)
+        _, idx = jax.lax.top_k(jnp.abs(x), k)
+        return {"values": x[idx.astype(jnp.int32)], "indices": idx.astype(jnp.int32)}
+
+    def decompress(self, payload, d):
+        out = jnp.zeros((d,), payload["values"].dtype)
+        return out.at[payload["indices"]].add(payload["values"])
+
+
+# ---------------------------------------------------------------------------
+# QSGD / ℓ2-quantization with s levels (Alistarh et al. 2017)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class QSGD(Compressor):
+    """Stochastic s-level ℓ2 quantization.
+
+    Q(x)_j = ‖x‖₂ · sign(x_j) · ξ_j / s with ξ_j = ⌊s|x_j|/‖x‖ + u_j⌋, u_j ~ U[0,1).
+    ω = min(d/s², √d/s) (Alistarh et al. 2017, Lemma 3.1).
+    Payload: one f32 norm + (sign, level) in int8 per coordinate (s ≤ 127).
+    """
+
+    s: int = 1
+    name: str = dataclasses.field(default="qsgd", init=False)
+
+    def __post_init__(self):
+        assert 1 <= self.s <= 127, "levels must fit int8 payload"
+
+    def omega(self, d: int) -> float:
+        return min(d / self.s**2, math.sqrt(d) / self.s)
+
+    def expected_density(self, d: int) -> float:
+        # Expected nnz ≤ s(s + √d) (Alistarh et al. Thm 3.2); cap at d.
+        return float(min(d, self.s * (self.s + math.sqrt(d))))
+
+    def payload_bits(self, d: int) -> float:
+        # norm + per-coordinate sign+level packed in ceil(log2(2s+1)) bits
+        return 32.0 + d * math.ceil(math.log2(2 * self.s + 1))
+
+    def compress(self, key, x):
+        norm = jnp.linalg.norm(x)
+        safe = jnp.where(norm > 0, norm, 1.0)
+        u = jax.random.uniform(key, x.shape)
+        level = jnp.floor(self.s * jnp.abs(x) / safe + u)
+        q = (jnp.sign(x) * level).astype(jnp.int8)
+        return {"q": q, "norm": norm}
+
+    def decompress(self, payload, d):
+        return payload["norm"] * payload["q"].astype(jnp.float32) / self.s
+
+
+# ---------------------------------------------------------------------------
+# Natural compression (Horváth et al. 2019) — exponent-only stochastic rounding
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class NaturalCompression(Compressor):
+    """C_nat: round |x| to a power of two, stochastically, preserving expectation.
+
+    ω = 1/8, density d, 9 bits/coordinate (sign + 8-bit exponent).
+    """
+
+    name: str = dataclasses.field(default="natural", init=False)
+
+    def omega(self, d: int) -> float:
+        return 1.0 / 8.0
+
+    def expected_density(self, d: int) -> float:
+        return float(d)
+
+    def payload_bits(self, d: int) -> float:
+        return 9.0 * d
+
+    def compress(self, key, x):
+        ax = jnp.abs(x)
+        lo_exp = jnp.floor(jnp.log2(jnp.where(ax > 0, ax, 1.0)))
+        lo = jnp.exp2(lo_exp)
+        prob_up = jnp.where(ax > 0, (ax - lo) / lo, 0.0)  # in [0,1)
+        up = jax.random.bernoulli(key, jnp.clip(prob_up, 0.0, 1.0))
+        mag = jnp.where(up, 2.0 * lo, lo)
+        q = jnp.where(ax > 0, jnp.sign(x) * mag, 0.0)
+        return {"dense": q.astype(x.dtype)}
+
+    def decompress(self, payload, d):
+        return payload["dense"]
+
+
+# ---------------------------------------------------------------------------
+# Tree lifting (Block-RandK semantics)
+# ---------------------------------------------------------------------------
+
+
+def tree_compress(comp: Compressor, key: jax.Array, tree: PyTree) -> PyTree:
+    """Compress each leaf independently with a per-leaf key (budget ∝ leaf size)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    payloads = [comp.compress(k, leaf.reshape(-1)) for k, leaf in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, payloads)
+
+
+def tree_decompress(comp: Compressor, payload_tree: PyTree, like: PyTree) -> PyTree:
+    """Inverse of tree_compress; `like` supplies leaf shapes."""
+    like_leaves, treedef = jax.tree.flatten(like)
+    # payload_tree has payload-dicts at the positions of `like` leaves
+    pay_leaves = treedef.flatten_up_to(payload_tree)
+    outs = [
+        comp.decompress(p, l.size).reshape(l.shape)
+        for p, l in zip(pay_leaves, like_leaves)
+    ]
+    return jax.tree.unflatten(treedef, outs)
+
+
+def tree_roundtrip(comp: Compressor, key: jax.Array, tree: PyTree) -> PyTree:
+    """Q applied leafwise, returning a dense tree (compress→decompress)."""
+    return tree_decompress(comp, tree_compress(comp, key, tree), tree)
+
+
+def tree_omega(comp: Compressor, tree: PyTree) -> float:
+    """Effective ω of the leafwise compressor = max over leaves (worst case)."""
+    return max(comp.omega(int(np.prod(l.shape))) for l in jax.tree.leaves(tree))
+
+
+def tree_payload_bits(comp: Compressor, tree: PyTree) -> float:
+    return sum(comp.payload_bits(int(np.prod(l.shape))) for l in jax.tree.leaves(tree))
+
+
+def tree_dim(tree: PyTree) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def make_compressor(name: str, **kw) -> Compressor:
+    name = name.lower()
+    if name in ("identity", "none"):
+        return Identity()
+    if name == "randk":
+        return RandK(**kw)
+    if name == "shared_randk":
+        return SharedRandK(**kw)
+    if name == "topk":
+        return TopK(**kw)
+    if name == "qsgd":
+        return QSGD(**kw)
+    if name == "natural":
+        return NaturalCompression()
+    raise ValueError(f"unknown compressor {name!r}")

@@ -1,0 +1,285 @@
+"""MARINA, VR-MARINA and PP-MARINA (Algorithms 1–4 of the paper).
+
+The algorithms are written against *worker-stacked* pytrees: every per-worker
+quantity (minibatch, payload, shift) carries a leading axis of size ``n``. On a
+single device this leading axis is a plain vmap dimension; on a mesh the launcher
+shards it over the worker mesh axes, so the same code runs in both the CPU
+simulation used by tests/examples and the multi-pod production path
+(see launch/distributed.py for the sharded LM instantiation that additionally
+annotates model-parallel dimensions).
+
+Faithfulness notes
+------------------
+* ``c_k ~ Be(p)`` is shared across workers (Alg. 1 line 4): a scalar drawn from the
+  step key, applied through ``lax.cond``.
+* ``g^0 = ∇f(x^0)`` exactly (Alg. 1 line 2) — init computes the full gradient.
+* Compressed rounds evaluate gradients at *both* points on the *same* minibatch
+  (Alg. 2 line 8); we recompute at the old point instead of storing a second full
+  gradient (PAGE-style; DESIGN.md §3).
+* Compressor randomness is independent across workers (the n-fold key split),
+  which is what gives the 1/n variance averaging in Thm 2.1's proof (eq. 21).
+  ``SharedRandK`` deliberately breaks this for the §Perf communication experiment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .compressors import (
+    Compressor,
+    Identity,
+    SharedRandK,
+    tree_compress,
+    tree_decompress,
+    tree_dim,
+    tree_payload_bits,
+)
+from .tree_util import (
+    tree_axpy,
+    tree_mean_axis0,
+    tree_norm,
+    tree_scale,
+    tree_sub,
+)
+
+PyTree = Any
+GradFn = Callable[[PyTree, PyTree], PyTree]  # (params, batch) -> grad tree
+
+
+class StepMetrics(NamedTuple):
+    grad_est_norm: jax.Array      # ‖g^k‖ (the estimator driving the step)
+    bits_per_worker: jax.Array    # bits uplinked by one worker this round
+    sync_round: jax.Array         # c_k (1 = dense round)
+    oracle_calls: jax.Array       # stochastic first-order oracle calls per worker
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MarinaState:
+    params: PyTree
+    g: PyTree          # server estimator g^k, replicated
+    step: jax.Array
+
+
+def _per_worker_grads(grad_fn: GradFn, params: PyTree, batches: PyTree) -> PyTree:
+    """∇f_i at params for every worker: vmap over the leading worker axis."""
+    return jax.vmap(grad_fn, in_axes=(None, 0))(params, batches)
+
+
+def _compress_workers(
+    comp: Compressor, key: jax.Array, diffs: PyTree, n: int
+) -> PyTree:
+    """Compress each worker's difference tree. Independent keys per worker,
+    except SharedRandK which reuses one key (correlated masks by design)."""
+    if isinstance(comp, SharedRandK):
+        keys = jnp.broadcast_to(key, (n, *key.shape))
+    else:
+        keys = jax.random.split(key, n)
+    return jax.vmap(partial(tree_compress, comp))(keys, diffs)
+
+
+def _decompress_mean(comp: Compressor, payloads: PyTree, like: PyTree, n: int) -> PyTree:
+    """Server aggregation: decompress all n payloads, average (Alg. 1 line 10)."""
+    dense = jax.vmap(lambda p: tree_decompress(comp, p, like))(payloads)
+    return tree_mean_axis0(dense)
+
+
+# ---------------------------------------------------------------------------
+# MARINA — Algorithm 1
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Marina:
+    """Algorithm 1. ``grad_fn(params, batch)`` must return the *local full*
+    gradient ∇f_i (the trainer passes each worker's full data shard — or, in the
+    online LM setting, the round's large batch, matching Alg. 3 line 8 c_k=1)."""
+
+    grad_fn: GradFn
+    compressor: Compressor
+    gamma: float
+    p: float
+
+    def init(self, params: PyTree, batches: PyTree) -> MarinaState:
+        g0 = tree_mean_axis0(_per_worker_grads(self.grad_fn, params, batches))
+        return MarinaState(params=params, g=g0, step=jnp.zeros((), jnp.int32))
+
+    def step(self, state: MarinaState, key: jax.Array, batches: PyTree):
+        n = jax.tree.leaves(batches)[0].shape[0]
+        k_bern, k_q = jax.random.split(key)
+        c_k = jax.random.bernoulli(k_bern, self.p)
+
+        x_old = state.params
+        x_new = tree_axpy(-self.gamma, state.g, x_old)  # Alg.1 line 7
+
+        def sync_branch(_):
+            grads = _per_worker_grads(self.grad_fn, x_new, batches)
+            return tree_mean_axis0(grads)
+
+        def compressed_branch(_):
+            g_new = _per_worker_grads(self.grad_fn, x_new, batches)
+            g_prev = _per_worker_grads(self.grad_fn, x_old, batches)
+            diffs = tree_sub(g_new, g_prev)
+            payloads = _compress_workers(self.compressor, k_q, diffs, n)
+            delta = _decompress_mean(self.compressor, payloads, state.params, n)
+            return jax.tree.map(jnp.add, state.g, delta)
+
+        g_next = jax.lax.cond(c_k, sync_branch, compressed_branch, None)
+
+        d = tree_dim(state.params)
+        bits_dense = jnp.asarray(32.0 * d)
+        bits_q = jnp.asarray(tree_payload_bits(self.compressor, state.params))
+        metrics = StepMetrics(
+            grad_est_norm=tree_norm(g_next),
+            bits_per_worker=jnp.where(c_k, bits_dense, bits_q),
+            sync_round=c_k.astype(jnp.int32),
+            oracle_calls=jnp.where(c_k, 1.0, 2.0),
+        )
+        return MarinaState(params=x_new, g=g_next, step=state.step + 1), metrics
+
+
+# ---------------------------------------------------------------------------
+# VR-MARINA — Algorithms 2 (finite-sum) and 3 (online)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class VRMarina:
+    """Algorithms 2/3. Two oracles:
+
+    * ``full_grad_fn(params, full_batch)`` — ∇f_i (finite-sum, Alg. 2) or the
+      b-minibatch gradient (online, Alg. 3) used on c_k = 1 rounds.
+    * ``mb_grad_fn(params, mb_batch)`` — the b′-minibatch gradient used at *both*
+      points on compressed rounds.
+
+    The trainer samples the batches; this keeps the algorithm agnostic to the
+    dataset layout (and identical between the finite-sum and online cases, which
+    differ only in what the oracles receive — exactly the Alg. 2 vs Alg. 3 delta).
+    """
+
+    full_grad_fn: GradFn
+    mb_grad_fn: GradFn
+    compressor: Compressor
+    gamma: float
+    p: float
+
+    def init(self, params: PyTree, full_batches: PyTree) -> MarinaState:
+        g0 = tree_mean_axis0(_per_worker_grads(self.full_grad_fn, params, full_batches))
+        return MarinaState(params=params, g=g0, step=jnp.zeros((), jnp.int32))
+
+    def step(
+        self,
+        state: MarinaState,
+        key: jax.Array,
+        full_batches: PyTree,
+        mb_batches: PyTree,
+    ):
+        n = jax.tree.leaves(full_batches)[0].shape[0]
+        k_bern, k_q = jax.random.split(key)
+        c_k = jax.random.bernoulli(k_bern, self.p)
+
+        x_old = state.params
+        x_new = tree_axpy(-self.gamma, state.g, x_old)
+
+        def sync_branch(_):
+            grads = _per_worker_grads(self.full_grad_fn, x_new, full_batches)
+            return tree_mean_axis0(grads)
+
+        def compressed_branch(_):
+            # Alg. 2 line 8: same minibatch at x^{k+1} and x^k.
+            g_new = _per_worker_grads(self.mb_grad_fn, x_new, mb_batches)
+            g_prev = _per_worker_grads(self.mb_grad_fn, x_old, mb_batches)
+            diffs = tree_sub(g_new, g_prev)
+            payloads = _compress_workers(self.compressor, k_q, diffs, n)
+            delta = _decompress_mean(self.compressor, payloads, state.params, n)
+            return jax.tree.map(jnp.add, state.g, delta)
+
+        g_next = jax.lax.cond(c_k, sync_branch, compressed_branch, None)
+
+        d = tree_dim(state.params)
+        m_full = jax.tree.leaves(full_batches)[0].shape[1]
+        b_prime = jax.tree.leaves(mb_batches)[0].shape[1]
+        metrics = StepMetrics(
+            grad_est_norm=tree_norm(g_next),
+            bits_per_worker=jnp.where(
+                c_k,
+                jnp.asarray(32.0 * d),
+                jnp.asarray(tree_payload_bits(self.compressor, state.params)),
+            ),
+            sync_round=c_k.astype(jnp.int32),
+            oracle_calls=jnp.where(c_k, float(m_full), 2.0 * b_prime),
+        )
+        return MarinaState(params=x_new, g=g_next, step=state.step + 1), metrics
+
+
+# ---------------------------------------------------------------------------
+# PP-MARINA — Algorithm 4
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PPMarina:
+    """Algorithm 4: on compressed rounds only r i.i.d.-sampled clients upload;
+    the server averages the r quantized differences (line 11, 1/r scaling)."""
+
+    grad_fn: GradFn
+    compressor: Compressor
+    gamma: float
+    p: float
+    r: int
+
+    def init(self, params: PyTree, batches: PyTree) -> MarinaState:
+        g0 = tree_mean_axis0(_per_worker_grads(self.grad_fn, params, batches))
+        return MarinaState(params=params, g=g0, step=jnp.zeros((), jnp.int32))
+
+    def step(self, state: MarinaState, key: jax.Array, batches: PyTree):
+        n = jax.tree.leaves(batches)[0].shape[0]
+        k_bern, k_sel, k_q = jax.random.split(key, 3)
+        c_k = jax.random.bernoulli(k_bern, self.p)
+
+        x_old = state.params
+        x_new = tree_axpy(-self.gamma, state.g, x_old)
+
+        def sync_branch(_):
+            grads = _per_worker_grads(self.grad_fn, x_new, batches)
+            return tree_mean_axis0(grads)
+
+        def compressed_branch(_):
+            # I'_k: r i.i.d. uniform samples over {1..n} (with replacement, as in
+            # Alg. 4 line 5).
+            sel = jax.random.randint(k_sel, (self.r,), 0, n)
+            take = lambda t: t[sel]
+            sel_batches = jax.tree.map(take, batches)
+            g_new = _per_worker_grads(self.grad_fn, x_new, sel_batches)
+            g_prev = _per_worker_grads(self.grad_fn, x_old, sel_batches)
+            diffs = tree_sub(g_new, g_prev)
+            payloads = _compress_workers(self.compressor, k_q, diffs, self.r)
+            delta = _decompress_mean(self.compressor, payloads, state.params, self.r)
+            return jax.tree.map(jnp.add, state.g, delta)
+
+        g_next = jax.lax.cond(c_k, sync_branch, compressed_branch, None)
+
+        d = tree_dim(state.params)
+        # Total (all-worker) uplink this round: n·32d dense vs r·bits(Q).
+        bits_total = jnp.where(
+            c_k,
+            jnp.asarray(32.0 * d * n),
+            jnp.asarray(tree_payload_bits(self.compressor, state.params) * self.r),
+        )
+        metrics = StepMetrics(
+            grad_est_norm=tree_norm(g_next),
+            bits_per_worker=bits_total / n,
+            sync_round=c_k.astype(jnp.int32),
+            oracle_calls=jnp.where(c_k, 1.0, 2.0 * self.r / n),
+        )
+        return MarinaState(params=x_new, g=g_next, step=state.step + 1), metrics
+
+
+def make_gd(grad_fn: GradFn, gamma: float) -> Marina:
+    """GD = MARINA with identity quantization (paper §2)."""
+    return Marina(grad_fn=grad_fn, compressor=Identity(), gamma=gamma, p=1.0)

@@ -1,0 +1,120 @@
+"""The paper's experimental objectives, for tests/benchmarks/examples.
+
+* :func:`nonconvex_binclass_loss` — eq. (11): ℓ(b,c) = (1 − 1/(1+exp(−bc)))²,
+  the non-convex loss used in §5.1 / Appendix A.1 on LibSVM data.
+* :func:`make_synthetic_binclass` — a heterogeneous synthetic stand-in for the
+  LibSVM splits (container is offline): each worker draws features from its own
+  rotated/shifted Gaussian so local losses are genuinely dissimilar, matching the
+  paper's "arbitrarily heterogeneous" regime.
+* :func:`quadratic_loss` / PL problems for the Thm 2.2 (PŁ) validation tests.
+
+Smoothness constants: for eq. (11), ℓ(a'x, y) has Hessian bounded by
+c·‖a‖² with c = sup|ℓ''| < 0.16; we expose an upper bound usable as L_i.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+# sup over z of |d²/dz² (1 − sigmoid(z))²| — numerically ≈ 0.1556
+_ELL_SMOOTH = 0.16
+
+
+class BinClassData(NamedTuple):
+    """Worker-stacked dataset: features (n, m, d), labels (n, m) in {−1, +1}."""
+
+    a: jax.Array
+    y: jax.Array
+
+
+def nonconvex_binclass_loss(x: jax.Array, batch: BinClassData) -> jax.Array:
+    """Eq. (11) mean loss for one worker's batch: x (d,), a (m, d), y (m,)."""
+    z = batch.a @ x * batch.y
+    s = jax.nn.sigmoid(z)
+    return jnp.mean((1.0 - s) ** 2)
+
+
+def binclass_full_grad(x: jax.Array, data: BinClassData) -> jax.Array:
+    return jax.grad(nonconvex_binclass_loss)(x, data)
+
+
+def binclass_smoothness(data: BinClassData) -> float:
+    """L with L² = (1/n) Σ L_i², L_i ≤ c · mean_t ‖a_t‖² (Assumption 1.2)."""
+    sq = np.asarray(jnp.mean(jnp.sum(data.a**2, axis=-1), axis=-1))  # (n,)
+    Li = _ELL_SMOOTH * sq
+    return float(np.sqrt(np.mean(Li**2)))
+
+
+def make_synthetic_binclass(
+    key: jax.Array, n_workers: int, m: int, d: int, heterogeneity: float = 1.0
+) -> BinClassData:
+    """Heterogeneous synthetic binary classification (stand-in for LibSVM splits).
+
+    Worker i's features ~ N(µ_i, Σ_i) with worker-specific mean/scale; labels from
+    a worker-specific noisy linear teacher. heterogeneity=0 → iid workers.
+    """
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    base = jax.random.normal(k1, (n_workers, m, d)) / jnp.sqrt(d)
+    shift = heterogeneity * jax.random.normal(k2, (n_workers, 1, d)) / jnp.sqrt(d)
+    scale = 1.0 + 0.5 * heterogeneity * jax.random.uniform(k3, (n_workers, 1, 1))
+    a = (base + shift) * scale
+    teacher = jax.random.normal(k4, (n_workers, d))
+    teacher = (
+        (1.0 - heterogeneity * 0.5) * teacher[0:1] + heterogeneity * 0.5 * teacher
+    )
+    logits = jnp.einsum("nmd,nd->nm", a, teacher) * jnp.sqrt(d)
+    flips = jax.random.bernoulli(k5, 0.05, logits.shape)
+    y = jnp.where(flips, -jnp.sign(logits), jnp.sign(logits))
+    y = jnp.where(y == 0, 1.0, y)
+    return BinClassData(a=a, y=y)
+
+
+def sample_minibatch(key: jax.Array, data: BinClassData, b: int) -> BinClassData:
+    """Per-worker i.i.d. uniform minibatch indices (Assumption 3.1 regime)."""
+    n, m, _ = data.a.shape
+    idx = jax.random.randint(key, (n, b), 0, m)
+    take = jax.vmap(lambda arr, ix: arr[ix])
+    return BinClassData(a=take(data.a, idx), y=take(data.y, idx))
+
+
+# ---------------------------------------------------------------------------
+# Quadratics (PŁ with µ = λ_min ≥ 0; strongly convex if λ_min > 0)
+# ---------------------------------------------------------------------------
+
+
+class QuadData(NamedTuple):
+    A: jax.Array  # (n, d, d) PSD per worker
+    b: jax.Array  # (n, d)
+
+
+def quadratic_loss(x: jax.Array, batch: QuadData) -> jax.Array:
+    """f_i(x) = ½ xᵀA_i x − b_iᵀx, averaged if batch carries extra dims."""
+    return 0.5 * x @ batch.A @ x - batch.b @ x
+
+
+def make_quadratic(key: jax.Array, n_workers: int, d: int, kappa: float = 10.0):
+    """Heterogeneous PSD quadratics with controlled condition number."""
+    kA, kb = jax.random.split(key)
+    qs = jax.random.normal(kA, (n_workers, d, d))
+    eigs = jnp.logspace(0, jnp.log10(kappa), d) / kappa  # in [1/κ, 1]
+    def mk(q):
+        qq, _ = jnp.linalg.qr(q)
+        return (qq * eigs) @ qq.T
+    A = jax.vmap(mk)(qs)
+    b = jax.random.normal(kb, (n_workers, d)) / jnp.sqrt(d)
+    data = QuadData(A=A, b=b)
+    L = float(jnp.max(jnp.linalg.eigvalsh(jnp.mean(A, 0))))
+    mu = float(jnp.min(jnp.linalg.eigvalsh(jnp.mean(A, 0))))
+    return data, L, mu
+
+
+def quad_optimum(data: QuadData) -> jax.Array:
+    Abar = jnp.mean(data.A, 0)
+    bbar = jnp.mean(data.b, 0)
+    return jnp.linalg.solve(Abar, bbar)

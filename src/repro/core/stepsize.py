@@ -1,0 +1,60 @@
+"""Theory stepsizes and iteration bounds from the paper's theorems.
+
+These are the *exact* admissible stepsizes of Theorems 2.1, 2.2, 3.1/3.2, 4.1 —
+the experiments in §5 / Appendix A run MARINA and DIANA with these theoretical
+choices, and our reproduction benchmarks do the same.
+"""
+
+from __future__ import annotations
+
+import math
+
+
+def marina_gamma(L: float, omega: float, p: float, n: int) -> float:
+    """Thm 2.1:  γ ≤ 1 / ( L (1 + sqrt((1-p) ω / (p n))) )."""
+    return 1.0 / (L * (1.0 + math.sqrt((1.0 - p) * omega / (p * n))))
+
+
+def marina_gamma_pl(L: float, omega: float, p: float, n: int, mu: float) -> float:
+    """Thm 2.2:  γ ≤ min{ 1/(L(1+sqrt(2(1-p)ω/(pn)))), p/(2µ) }."""
+    g1 = 1.0 / (L * (1.0 + math.sqrt(2.0 * (1.0 - p) * omega / (p * n))))
+    return min(g1, p / (2.0 * mu))
+
+
+def vr_marina_gamma(
+    L: float, calL: float, omega: float, p: float, n: int, b_prime: int
+) -> float:
+    """Thm 3.1/3.2:  γ ≤ 1 / ( L + sqrt((1-p)/(pn) (ω L² + (1+ω) 𝓛²/b')) )."""
+    inner = (1.0 - p) / (p * n) * (omega * L**2 + (1.0 + omega) * calL**2 / b_prime)
+    return 1.0 / (L + math.sqrt(inner))
+
+
+def pp_marina_gamma(L: float, omega: float, p: float, r: int) -> float:
+    """Thm 4.1:  γ ≤ 1 / ( L (1 + sqrt((1-p)(1+ω)/(p r))) )."""
+    return 1.0 / (L * (1.0 + math.sqrt((1.0 - p) * (1.0 + omega) / (p * r))))
+
+
+def diana_alpha(omega: float) -> float:
+    """DIANA shift learning rate α ≤ 1/(1+ω) (Mishchenko et al. 2019)."""
+    return 1.0 / (1.0 + omega)
+
+
+def diana_gamma(L: float, omega: float, n: int) -> float:
+    """Non-convex DIANA stepsize (Li & Richtárik 2020, simplified constants):
+
+    γ = 1 / ( L (1 + (1+ω) sqrt(ω/n) · c) ), c = O(1). We use c = 2 which satisfies
+    the admissibility condition of their Theorem 4.1 specialization.
+    """
+    return 1.0 / (L * (1.0 + 2.0 * (1.0 + omega) * math.sqrt(omega / n) + 2.0 * omega / n))
+
+
+def marina_iteration_bound(
+    delta0: float, L: float, omega: float, p: float, n: int, eps: float
+) -> float:
+    """Thm 2.1 iteration count K = 2Δ₀/(γ ε²) to reach E‖∇f‖² ≤ ε²."""
+    return 2.0 * delta0 / (marina_gamma(L, omega, p, n) * eps**2)
+
+
+def marina_comm_per_worker(d: int, zeta: float, p: float, K: float) -> float:
+    """Expected communicated coordinates per worker (eq. 19): d + K(pd + (1-p)ζ)."""
+    return d + K * (p * d + (1.0 - p) * zeta)

@@ -1,0 +1,68 @@
+"""Small pytree algebra used by the optimizer layer."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a: PyTree, s) -> PyTree:
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x: PyTree, y: PyTree) -> PyTree:
+    """alpha*x + y."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_zeros_like(a: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_mean_axis0(a: PyTree) -> PyTree:
+    """Mean over the leading (worker) axis of every leaf."""
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0), a)
+
+
+def tree_sum_sq(a: PyTree):
+    return sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(a))
+
+
+def tree_norm(a: PyTree):
+    return jnp.sqrt(tree_sum_sq(a))
+
+
+def tree_dot(a: PyTree, b: PyTree):
+    return sum(
+        jnp.sum(x * y) for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+def tree_size(a: PyTree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(a))
+
+
+def tree_stack_workers(trees: list[PyTree]) -> PyTree:
+    """Stack a list of per-worker trees into one tree with leading worker dim."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_worker_slice(tree: PyTree, i) -> PyTree:
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def tree_cast(a: PyTree, dtype) -> PyTree:
+    return jax.tree.map(lambda x: x.astype(dtype), a)

@@ -1,0 +1,15 @@
+from .pipeline import (
+    HeterogeneousLMData,
+    lm_batch_iterator,
+    make_lm_data,
+    make_prefix_embeddings,
+    worker_batches,
+)
+
+__all__ = [
+    "HeterogeneousLMData",
+    "lm_batch_iterator",
+    "make_lm_data",
+    "make_prefix_embeddings",
+    "worker_batches",
+]

@@ -1,0 +1,103 @@
+"""jit'd wrappers exposing the Pallas kernels on flat vectors.
+
+Handles the flat → (nblk, B) blocked layout, zero padding, host-side index
+sampling, and jittered-stratified offsets (one index per stride — unbiased with
+the same ω = d/K − 1 as classic RandK, see DESIGN.md §5). These wrappers are
+what core/ and the benchmarks call; `interpret=True` everywhere on this CPU
+container (the kernels are written for the TPU target).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import randk as _randk
+from . import quantize as _quant
+
+DEFAULT_BLOCK = 1024  # lanes-aligned (8 × 128) VMEM tile width
+
+
+def pad_to_blocks(x: jax.Array, block: int) -> jax.Array:
+    """Flat (d,) → (nblk, block) with zero padding."""
+    d = x.shape[0]
+    nblk = max(1, -(-d // block))
+    pad = nblk * block - d
+    return jnp.pad(x, (0, pad)).reshape(nblk, block)
+
+
+def jittered_offsets(key: jax.Array, nblk: int, block: int, kb: int) -> jax.Array:
+    """Stratified sampling: one uniform index inside each of kb strides per block.
+
+    Marginal inclusion probability of every coordinate is kb/block, so scaling by
+    block/kb is unbiased; distinct strides ⇒ distinct indices (no replacement).
+    """
+    stride = block // kb
+    base = jnp.arange(kb, dtype=jnp.int32) * stride
+    jitter = jax.random.randint(key, (nblk, kb), 0, stride, dtype=jnp.int32)
+    return base[None, :] + jitter
+
+
+@partial(jax.jit, static_argnames=("kb", "block", "interpret"))
+def randk_compress(
+    x: jax.Array,
+    key: jax.Array,
+    kb: int,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+):
+    """Blockwise jittered RandK of a flat vector. Returns (values, offsets, d).
+
+    Effective K = nblk·kb, scale = block/kb = d_padded/K.
+    """
+    x2d = pad_to_blocks(x, block)
+    nblk = x2d.shape[0]
+    offsets = jittered_offsets(key, nblk, block, kb)
+    scale = block / kb
+    values = _randk.randk_gather(x2d, offsets, scale, interpret=interpret)
+    return values, offsets
+
+
+@partial(jax.jit, static_argnames=("d", "block", "interpret"))
+def randk_decompress_mean(
+    values: jax.Array,
+    offsets: jax.Array,
+    d: int,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+) -> jax.Array:
+    """Server aggregation of n worker payloads (n, nblk, kb) → dense (d,)."""
+    dense = _randk.scatter_accum(values, offsets, block, interpret=interpret)
+    return dense.reshape(-1)[:d]
+
+
+@partial(jax.jit, static_argnames=("s", "block", "interpret"))
+def qsgd_compress(
+    x: jax.Array,
+    key: jax.Array,
+    s: int,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+):
+    """Fused two-pass QSGD: (q int8 (d_padded,), norm scalar)."""
+    x2d = pad_to_blocks(x, block)
+    sumsq = _quant.block_sumsq(x2d, interpret=interpret)
+    norm = jnp.sqrt(jnp.sum(sumsq))
+    u2d = jax.random.uniform(key, x2d.shape)
+    q = _quant.qsgd_quantize(x2d, u2d, norm, s, interpret=interpret)
+    return q, norm
+
+
+@partial(jax.jit, static_argnames=("s", "d", "block", "interpret"))
+def qsgd_decompress(
+    q: jax.Array,
+    norm: jax.Array,
+    s: int,
+    d: int,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+) -> jax.Array:
+    dense = _quant.qsgd_dequantize(q, norm, s, interpret=interpret)
+    return dense.reshape(-1)[:d]

@@ -1,0 +1,85 @@
+"""Pallas TPU kernels for fused QSGD (s-level ℓ2) quantization.
+
+Two-pass scheme sized for VMEM:
+  pass 1 — ``block_sumsq``: per-(1,B)-tile Σx² partial reduction,
+  pass 2 — ``qsgd_quantize``: sign/|·|/floor/int8-pack in one sweep using the
+            combined norm. Fusing scale+round+cast keeps the quantize pass
+            memory-bound at the int8 *output* bandwidth instead of three f32
+            round trips (the GPU reference does this with a thrust transform;
+            the TPU version is a single VPU pass per tile).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block_sumsq_kernel(x_ref, out_ref):
+    x = x_ref[...].astype(jnp.float32)   # (1, B)
+    out_ref[...] = jnp.sum(x * x, axis=-1, keepdims=True)  # (1, 1)
+
+
+def block_sumsq(x2d: jax.Array, *, interpret: bool = True) -> jax.Array:
+    nblk, B = x2d.shape
+    return pl.pallas_call(
+        _block_sumsq_kernel,
+        grid=(nblk,),
+        in_specs=[pl.BlockSpec((1, B), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblk, 1), jnp.float32),
+        interpret=interpret,
+    )(x2d).reshape(nblk)
+
+
+def _qsgd_kernel(x_ref, u_ref, norm_ref, out_ref, *, s: int):
+    x = x_ref[...].astype(jnp.float32)   # (1, B)
+    u = u_ref[...]                        # (1, B)
+    norm = norm_ref[0, 0]
+    safe = jnp.where(norm > 0, norm, 1.0)
+    level = jnp.floor(s * jnp.abs(x) / safe + u)
+    out_ref[...] = (jnp.sign(x) * level).astype(jnp.int8)
+
+
+def qsgd_quantize(
+    x2d: jax.Array, u2d: jax.Array, norm: jax.Array, s: int, *, interpret: bool = True
+) -> jax.Array:
+    """(nblk, B) f32/bf16 → (nblk, B) int8 levels; norm is the global ℓ2 norm."""
+    nblk, B = x2d.shape
+    return pl.pallas_call(
+        functools.partial(_qsgd_kernel, s=int(s)),
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, B), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblk, B), jnp.int8),
+        interpret=interpret,
+    )(x2d, u2d, norm.reshape(1, 1).astype(jnp.float32))
+
+
+def _dequant_kernel(q_ref, norm_ref, out_ref, *, s: int):
+    q = q_ref[...].astype(jnp.float32)
+    out_ref[...] = (q * (norm_ref[0, 0] / s)).astype(out_ref.dtype)
+
+
+def qsgd_dequantize(
+    q2d: jax.Array, norm: jax.Array, s: int, *, interpret: bool = True
+) -> jax.Array:
+    nblk, B = q2d.shape
+    return pl.pallas_call(
+        functools.partial(_dequant_kernel, s=int(s)),
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, B), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblk, B), jnp.float32),
+        interpret=interpret,
+    )(q2d, norm.reshape(1, 1).astype(jnp.float32))

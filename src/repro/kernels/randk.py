@@ -1,0 +1,176 @@
+"""Pallas TPU kernels for RandK compression / server-side decompression.
+
+TPU adaptation (DESIGN.md §3/§5): a GPU RandK uses cuRAND + global gather +
+atomics. Neither maps to the TPU. Instead:
+
+* the flat gradient is reshaped to ``(nblk, B)`` blocks; each grid step owns one
+  ``(1, B)`` VMEM tile (B a multiple of 128 → lane-aligned);
+* *gather* and *scatter* are expressed as one-hot matmuls against an iota —
+  a (kb, B) comparison matrix contracted on the MXU, which is the idiomatic
+  TPU way to move irregular indices through a systolic array;
+* the index sampler runs on the host side of the jit (indices are K ≪ d values,
+  so their HBM traffic is negligible), keeping the kernel deterministic and
+  exactly testable against ref.py. A seeded in-kernel sampler using
+  ``pltpu.prng_random_bits`` is provided for the production path
+  (``randk_seeded``) and validated statistically.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# Gather (compress): values[i, j] = x[i, offsets[i, j]] * scale
+# ---------------------------------------------------------------------------
+
+
+def _randk_gather_kernel(x_ref, off_ref, out_ref, *, scale: float):
+    x = x_ref[...]            # (1, B)
+    off = off_ref[...]        # (1, kb)
+    B = x.shape[-1]
+    kb = off.shape[-1]
+    # one-hot (kb, B) gather matrix; contraction runs on the MXU
+    iota = jax.lax.broadcasted_iota(jnp.int32, (kb, B), 1)
+    onehot = (iota == off.reshape(kb, 1)).astype(x.dtype)
+    vals = jax.lax.dot_general(
+        onehot, x.reshape(B, 1), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (kb, 1)
+    out_ref[...] = (vals.reshape(1, kb) * scale).astype(out_ref.dtype)
+
+
+def randk_gather(
+    x2d: jax.Array, offsets: jax.Array, scale: float, *, interpret: bool = True
+) -> jax.Array:
+    """x2d (nblk, B), offsets (nblk, kb) → (nblk, kb) scaled values."""
+    nblk, B = x2d.shape
+    _, kb = offsets.shape
+    return pl.pallas_call(
+        functools.partial(_randk_gather_kernel, scale=float(scale)),
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec((1, kb), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, kb), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblk, kb), x2d.dtype),
+        interpret=interpret,
+    )(x2d, offsets)
+
+
+# ---------------------------------------------------------------------------
+# Scatter-accumulate (decompress + server mean over n workers)
+# ---------------------------------------------------------------------------
+
+
+def _scatter_accum_kernel(vals_ref, off_ref, out_ref, *, n: int):
+    vals = vals_ref[...]      # (n, 1, kb)
+    offs = off_ref[...]       # (n, 1, kb)
+    kb = vals.shape[-1]
+    B = out_ref.shape[-1]
+
+    def body(w, acc):
+        off_w = jax.lax.dynamic_index_in_dim(offs, w, 0, keepdims=False)  # (1, kb)
+        val_w = jax.lax.dynamic_index_in_dim(vals, w, 0, keepdims=False)  # (1, kb)
+        iota = jax.lax.broadcasted_iota(jnp.int32, (kb, B), 1)
+        onehot = (iota == off_w.reshape(kb, 1)).astype(jnp.float32)
+        # (1, kb) @ (kb, B) scatter-as-matmul; duplicates accumulate.
+        return acc + jax.lax.dot_general(
+            val_w.astype(jnp.float32), onehot, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    acc = jax.lax.fori_loop(0, n, body, jnp.zeros((1, B), jnp.float32))
+    out_ref[...] = (acc / n).astype(out_ref.dtype)
+
+
+def scatter_accum(
+    values: jax.Array, offsets: jax.Array, block: int, *, interpret: bool = True
+) -> jax.Array:
+    """values/offsets (n, nblk, kb) → dense (nblk, block) mean over workers."""
+    n, nblk, kb = values.shape
+    return pl.pallas_call(
+        functools.partial(_scatter_accum_kernel, n=n),
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((n, 1, kb), lambda i: (0, i, 0)),
+            pl.BlockSpec((n, 1, kb), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblk, block), values.dtype),
+        interpret=interpret,
+    )(values, offsets)
+
+
+# ---------------------------------------------------------------------------
+# Seeded production sampler: indices from an on-chip counter-based PRNG
+# ---------------------------------------------------------------------------
+#
+# We use the murmur3 finalizer as a counter-based hash RNG: pure uint32 vector
+# arithmetic, so it lowers on the TPU VPU, runs in any interpreter, and is
+# *bit-exactly* reproducible by the pure-jnp oracle (ref.murmur_bits_ref).
+# (``pltpu.prng_random_bits`` would also work on hardware but is stubbed in the
+# CPU interpreter, making it untestable here.)
+
+
+def murmur_bits(seed: jax.Array, ctr: jax.Array) -> jax.Array:
+    """murmur3 finalizer over (seed, counter): uint32 → uint32 hash."""
+    x = ctr.astype(jnp.uint32) * jnp.uint32(0x9E3779B9) + seed.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _randk_seeded_kernel(seed_ref, x_ref, vals_ref, off_ref, *, scale: float):
+    i = pl.program_id(0)
+    x = x_ref[...]            # (1, B)
+    B = x.shape[-1]
+    kb = vals_ref.shape[-1]
+    ctr = jax.lax.broadcasted_iota(jnp.uint32, (1, kb), 1) + jnp.uint32(i * kb)
+    bits = murmur_bits(seed_ref[0].astype(jnp.uint32), ctr)
+    # B is a power of two in production layouts; mask instead of mod.
+    off = (bits & jnp.uint32(B - 1)).astype(jnp.int32)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (kb, B), 1)
+    onehot = (iota == off.reshape(kb, 1)).astype(x.dtype)
+    vals = jax.lax.dot_general(
+        onehot, x.reshape(B, 1), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    vals_ref[...] = (vals.reshape(1, kb) * scale).astype(vals_ref.dtype)
+    off_ref[...] = off
+
+
+def randk_seeded(
+    x2d: jax.Array, seed: jax.Array, kb: int, scale: float, *, interpret: bool = True
+):
+    """Production path: sample kb indices per block on-chip (with replacement —
+    unbiased with ω = B/kb, see DESIGN.md §5), gather, scale. Returns
+    (values, offsets), both (nblk, kb). B must be a power of two."""
+    nblk, B = x2d.shape
+    assert B & (B - 1) == 0, "block width must be a power of two"
+    return pl.pallas_call(
+        functools.partial(_randk_seeded_kernel, scale=float(scale)),
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, kb), lambda i: (i, 0)),
+            pl.BlockSpec((1, kb), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblk, kb), x2d.dtype),
+            jax.ShapeDtypeStruct((nblk, kb), jnp.int32),
+        ],
+        interpret=interpret,
+    )(seed.reshape(1).astype(jnp.int32), x2d)

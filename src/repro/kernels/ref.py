@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for the compression kernels.
+
+Every function here is the semantic ground truth for its Pallas counterpart;
+tests assert_allclose kernel-vs-ref over shape/dtype sweeps in interpret mode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def randk_block_compress_ref(x2d: jax.Array, offsets: jax.Array, scale: float) -> jax.Array:
+    """Gather per-block coordinates and scale.
+
+    x2d:     (nblk, B)   the flat gradient reshaped into VMEM-sized blocks
+    offsets: (nblk, kb)  local indices in [0, B) chosen by the (host) sampler
+    returns: (nblk, kb)  values · scale  (scale = d/K for unbiasedness)
+    """
+    gathered = jnp.take_along_axis(x2d, offsets, axis=1)
+    return gathered * jnp.asarray(scale, x2d.dtype)
+
+
+def scatter_accum_ref(
+    values: jax.Array, offsets: jax.Array, block: int
+) -> jax.Array:
+    """Server-side aggregation: mean over n workers of scatter-add payloads.
+
+    values:  (n, nblk, kb)
+    offsets: (n, nblk, kb) local indices in [0, block)
+    returns: (nblk, block) dense mean; duplicates within a worker accumulate
+             (with-replacement sampling is allowed).
+    """
+    n, nblk, kb = values.shape
+    out = jnp.zeros((nblk, block), values.dtype)
+
+    def per_block(vals_b, offs_b):
+        # vals_b, offs_b: (n, kb)
+        dense = jnp.zeros((block,), values.dtype)
+        return dense.at[offs_b.reshape(-1)].add(vals_b.reshape(-1))
+
+    dense = jax.vmap(per_block, in_axes=(1, 1))(values, offsets)  # (nblk, block)
+    return dense / n
+
+
+def qsgd_quantize_ref(
+    x2d: jax.Array, u2d: jax.Array, norm: jax.Array, s: int
+) -> jax.Array:
+    """Stochastic s-level quantization (QSGD): int8 levels with sign.
+
+    x2d/u2d: (nblk, B);  u ~ U[0,1) supplied by the host sampler
+    norm:    scalar ℓ2 norm of the full vector
+    returns: (nblk, B) int8, value = sign(x)·⌊s|x|/‖x‖ + u⌋
+    """
+    safe = jnp.where(norm > 0, norm, 1.0).astype(jnp.float32)
+    level = jnp.floor(s * jnp.abs(x2d.astype(jnp.float32)) / safe + u2d)
+    return (jnp.sign(x2d.astype(jnp.float32)) * level).astype(jnp.int8)
+
+
+def qsgd_dequantize_ref(q2d: jax.Array, norm: jax.Array, s: int) -> jax.Array:
+    return q2d.astype(jnp.float32) * (norm / s)
+
+
+def block_sumsq_ref(x2d: jax.Array) -> jax.Array:
+    """Per-block Σx² (pass 1 of the two-pass fused QSGD norm)."""
+    return jnp.sum(jnp.square(x2d.astype(jnp.float32)), axis=1)
+
+
+def murmur_bits_ref(seed: jax.Array, ctr: jax.Array) -> jax.Array:
+    """Bit-exact oracle for the kernel's counter-based RNG (murmur3 finalizer)."""
+    x = ctr.astype(jnp.uint32) * jnp.uint32(0x9E3779B9) + seed.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def randk_seeded_ref(x2d: jax.Array, seed: jax.Array, kb: int, scale: float):
+    """Oracle for randk_seeded: same hash, same masking, same gather."""
+    nblk, B = x2d.shape
+    ctr = (
+        jnp.arange(kb, dtype=jnp.uint32)[None, :]
+        + (jnp.arange(nblk, dtype=jnp.uint32) * kb)[:, None]
+    )
+    bits = murmur_bits_ref(seed, ctr)
+    off = (bits & jnp.uint32(B - 1)).astype(jnp.int32)
+    vals = jnp.take_along_axis(x2d, off, axis=1) * jnp.asarray(scale, x2d.dtype)
+    return vals, off

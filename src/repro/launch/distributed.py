@@ -1,0 +1,385 @@
+"""Sharded production steps: MARINA train rounds + serve prefill/decode.
+
+This is the mesh instantiation of the algorithm in core/marina.py (the
+simulation backend and this file share the update equations; the difference is
+explicit GSPMD shardings and payload collectives — DESIGN.md §3):
+
+* ``sync_step``       — the probability-p dense round: per-worker gradients
+  averaged across the worker axis (an all-reduce of d, exactly the paper's
+  "send dense ∇f_i" cost).
+* ``compressed_step`` — the probability-(1−p) round: per-worker two-point
+  gradient differences, Block-RandK compressed; payloads are *replicated across
+  the worker axes* (the HLO all-gather whose bytes are the paper's ζ_Q), then
+  scatter-decompressed and averaged locally by every device.
+* ``train_step``      — production step: Bernoulli(p) `lax.cond` over the two.
+  The dry-run lowers sync/compressed separately so §Roofline can attribute
+  costs per round type.
+
+Compression here is the pure-jnp Block-RandK (bit-identical to
+kernels/ref.py's jittered sampler); on real TPU hardware the inner
+gather/scatter dispatch to the Pallas kernels in repro.kernels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchConfig
+from repro.models import init_cache, init_params, lm_loss, decode_step as model_decode, prefill as model_prefill
+from repro.launch import sharding as shd
+from repro.launch.mesh import num_workers, worker_axis_names
+
+PyTree = Any
+
+BLOCK = 1024   # compression block width (8×128 VMEM tile)
+KB = 8         # retained coords per block → ζ/d = 1/128, ω = 127
+
+
+@dataclasses.dataclass(frozen=True)
+class StepBundle:
+    """Everything the dry-run needs for one (arch × mesh) combination."""
+
+    mesh: Any
+    n_workers: int
+    param_shapes: PyTree
+    param_shardings: PyTree
+    fns: dict  # name -> (jitted fn, example abstract args)
+
+
+# ---------------------------------------------------------------------------
+# Block-RandK on worker-stacked leaves (pure jnp; ref semantics of kernels/)
+# ---------------------------------------------------------------------------
+
+
+def _compress_decompress_mean(
+    key: jax.Array,
+    diffs: PyTree,
+    n: int,
+    mesh,
+    waxes: tuple = (),
+    shared_mask: bool = False,
+    packed_payload: bool = False,
+    staged_payload: bool = True,
+    out_shardings: "PyTree | None" = None,
+) -> PyTree:
+    """Per-leaf Block-RandK across workers → dense mean update.
+
+    Layout: each leaf (n, *shape) is treated as (n, R, L) with L = its last
+    dimension — gathers and scatters act along L only, so they stay local to
+    whatever sharding the leaf has on its leading dims, and scatter indices
+    never exceed L (no int64 pressure at 10^10-parameter scale). Sampling is
+    kb ≈ L/128 indices per row with replacement (unbiased, ω ≈ L/kb — same
+    class as kernels/randk.py's seeded sampler).
+
+    independent masks (paper-faithful): the n·K payload is replicated across
+    the mesh — the all-gather the paper prices at ζ_Q. Feasible for the
+    small/mid models; for ≥27B models the replicated payload itself exceeds
+    HBM, which the baseline records and §Perf resolves via:
+
+    shared_mask=True (beyond-paper, MARINA-SM): all workers share one mask, so
+    the worker mean commutes with the gather — a ζ-sized *psum* over the
+    worker axis replaces the n·ζ all-gather, payload and dense accumulator
+    both stay sharded, and the scheme scales to 671B. Theory cost: the
+    cross-worker error correlation forfeits the 1/n variance averaging
+    (ω instead of ω/√n in Thm 2.1).
+    """
+    leaves, treedef = jax.tree.flatten(diffs)
+    out_shard_leaves = (
+        jax.tree.leaves(out_shardings) if out_shardings is not None
+        else [None] * len(leaves)
+    )
+    keys = jax.random.split(key, len(leaves))
+    outs = []
+    for lk, leaf, osh in zip(keys, leaves, out_shard_leaves):
+        shape = leaf.shape[1:]
+        L = int(shape[-1])
+        R = int(np.prod(shape[:-1])) if len(shape) > 1 else 1
+        kb = max(1, L // 128)
+        scale = L / kb
+        x = leaf.reshape(n, R, L)
+
+        wspec = P(waxes if len(waxes) != 1 else waxes[0]) if waxes else P()
+        worker_sharded = NamedSharding(mesh, wspec)
+
+        if shared_mask:
+            idx = jax.random.randint(lk, (R, kb), 0, L, jnp.int32)
+            vals = jnp.take_along_axis(
+                x, jnp.broadcast_to(idx, (n, R, kb)), axis=-1
+            ) * scale
+            if staged_payload:
+                # pin the gather to the worker-sharded layout so the
+                # partitioner cannot replicate the dense diffs instead
+                vals = jax.lax.with_sharding_constraint(vals, worker_sharded)
+            # ζ-sized psum over the worker axis; stays sharded on R
+            vals_mean = jnp.mean(vals, axis=0)                     # (R, kb)
+            dense = jnp.zeros((R, L), leaf.dtype)
+            rows = jnp.broadcast_to(jnp.arange(R, dtype=jnp.int32)[:, None], (R, kb))
+            dense = dense.at[rows, idx].add(vals_mean.astype(leaf.dtype))
+        else:
+            idx = jax.random.randint(lk, (n, R, kb), 0, L, jnp.int32)
+            vals = jnp.take_along_axis(x, idx, axis=-1) * scale
+            if staged_payload:
+                # stage 1: gather under the worker-sharded layout (local);
+                # stage 2 (below): all-gather only the K-sized payload
+                vals = jax.lax.with_sharding_constraint(vals, worker_sharded)
+            repl = NamedSharding(mesh, P())
+            if packed_payload:
+                # §Perf: bf16 values + int16 indices on the wire (8 → 4 B/coord)
+                vals = jax.lax.with_sharding_constraint(
+                    vals.astype(jnp.bfloat16), repl
+                ).astype(leaf.dtype)
+                idx_wire = jax.lax.with_sharding_constraint(
+                    (idx if L > 32767 else idx.astype(jnp.int16)), repl
+                )
+                idx = idx_wire.astype(jnp.int32)
+            else:
+                vals = jax.lax.with_sharding_constraint(vals, repl)
+                idx = jax.lax.with_sharding_constraint(idx, repl)
+            dense = jnp.zeros((R, L), leaf.dtype)
+            rows = jnp.broadcast_to(
+                jnp.arange(R, dtype=jnp.int32)[None, :, None], idx.shape
+            )
+            dense = dense.at[rows.reshape(-1), idx.reshape(-1)].add(
+                vals.reshape(-1) / n
+            )
+
+        out = dense.reshape(shape)
+        if osh is not None and staged_payload:
+            # pin the decompressed accumulator to the destination leaf's
+            # sharding — otherwise the partitioner may materialize the scatter
+            # replicated (a 435 GB buffer for the 671B expert stack)
+            out = jax.lax.with_sharding_constraint(out, osh)
+        outs.append(out)
+    return jax.tree.unflatten(treedef, outs)
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def build_train_steps(
+    arch: ArchConfig,
+    mesh,
+    multi_pod: bool,
+    *,
+    global_batch: int,
+    seq_len: int,
+    gamma: float = 1e-3,
+    p: float = KB / BLOCK,
+    dtype=jnp.bfloat16,
+    shared_mask: bool = False,
+    remat: bool = True,
+    packed_payload: bool = False,
+    replicate_params: bool = False,
+    staged_payload: bool = True,
+):
+    """Returns (fns, abstract_args) for sync_step / compressed_step / train_step.
+
+    §Perf overrides:
+    * shared_mask      — SharedRandK: K-value psum instead of n·K all-gather
+    * packed_payload   — bf16 values + int8 jitter on the wire
+    * replicate_params — small-model mode: no tensor parallelism; the model
+      axis becomes within-worker data parallelism (per-worker batch sharded
+      over "model", params replicated)
+    """
+    cfg = dataclasses.replace(arch.model, remat=remat)
+    waxes = worker_axis_names(multi_pod, arch.worker_axes)
+    fsdp = arch.fsdp and not any(a in waxes for a in ("data",))
+    n = num_workers(mesh, multi_pod, arch.worker_axes)
+    per_worker = global_batch // n
+    inner_axis = "data" if (fsdp and "data" not in waxes) else None
+    if replicate_params:
+        inner_axis = "model"
+
+    param_shapes = jax.eval_shape(
+        lambda k: init_params(k, cfg, dtype), jax.random.PRNGKey(0)
+    )
+    if replicate_params:
+        p_shard = jax.tree.map(lambda _: shd.replicated(mesh), param_shapes)
+    else:
+        p_shard = shd.param_sharding_tree(param_shapes, mesh, fsdp)
+
+    # total positions = seq_len; frontend archs spend prefix_len of them on
+    # stub embeddings so S stays chunk-aligned
+    tok_len = seq_len - arch.prefix_len
+    tok_shape = (n, per_worker, tok_len)
+    batch = {"tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32)}
+    batch_shard = {
+        "tokens": NamedSharding(mesh, shd.batch_spec(waxes, inner_axis, 3))
+    }
+    if arch.prefix_len:
+        pshape = (n, per_worker, arch.prefix_len, cfg.d_model)
+        batch["prefix"] = jax.ShapeDtypeStruct(pshape, dtype)
+        batch_shard["prefix"] = NamedSharding(
+            mesh, shd.batch_spec(waxes, inner_axis, 4)
+        )
+
+    def loss_fn(params, one_batch):
+        return lm_loss(
+            params, cfg, one_batch["tokens"], one_batch.get("prefix")
+        )
+
+    # remat is per-layer inside the model (cfg.remat above)
+    grad_one = jax.grad(loss_fn)
+
+    def worker_grads(params, batch):
+        return jax.vmap(grad_one, in_axes=(None, 0))(params, batch)
+
+    def sync_step(params, g, batch):
+        x_new = jax.tree.map(lambda w, gg: w - gamma * gg.astype(w.dtype), params, g)
+        grads = worker_grads(x_new, batch)
+        g_new = jax.tree.map(lambda t: jnp.mean(t, axis=0), grads)
+        return x_new, g_new
+
+    def compressed_step(params, g, batch, key):
+        x_new = jax.tree.map(lambda w, gg: w - gamma * gg.astype(w.dtype), params, g)
+        g_plus = worker_grads(x_new, batch)
+        g_minus = worker_grads(params, batch)
+        diffs = jax.tree.map(jnp.subtract, g_plus, g_minus)
+        delta = _compress_decompress_mean(
+            key, diffs, n, mesh, waxes, shared_mask, packed_payload,
+            staged_payload, out_shardings=p_shard,
+        )
+        g_new = jax.tree.map(jnp.add, g, delta)
+        return x_new, g_new
+
+    def train_step(params, g, batch, key):
+        k_b, k_q = jax.random.split(key)
+        c_k = jax.random.bernoulli(k_b, p)
+        return jax.lax.cond(
+            c_k,
+            lambda _: sync_step(params, g, batch),
+            lambda _: compressed_step(params, g, batch, k_q),
+            None,
+        )
+
+    g_shard = p_shard  # estimator g^k lives like the params
+    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    repl = shd.replicated(mesh)
+
+    fns = {
+        "sync_step": (
+            jax.jit(
+                sync_step,
+                in_shardings=(p_shard, g_shard, batch_shard),
+                out_shardings=(p_shard, g_shard),
+                donate_argnums=(0, 1),
+            ),
+            (param_shapes, param_shapes, batch),
+        ),
+        "compressed_step": (
+            jax.jit(
+                compressed_step,
+                in_shardings=(p_shard, g_shard, batch_shard, repl),
+                out_shardings=(p_shard, g_shard),
+                donate_argnums=(0, 1),
+            ),
+            (param_shapes, param_shapes, batch, key_spec),
+        ),
+        "train_step": (
+            jax.jit(
+                train_step,
+                in_shardings=(p_shard, g_shard, batch_shard, repl),
+                out_shardings=(p_shard, g_shard),
+                donate_argnums=(0, 1),
+            ),
+            (param_shapes, param_shapes, batch, key_spec),
+        ),
+    }
+    return StepBundle(
+        mesh=mesh,
+        n_workers=n,
+        param_shapes=param_shapes,
+        param_shardings=p_shard,
+        fns=fns,
+    )
+
+
+def build_serve_steps(
+    arch: ArchConfig,
+    mesh,
+    multi_pod: bool,
+    *,
+    batch: int,
+    seq_len: int,
+    mode: str,  # "prefill" | "decode"
+    dtype=jnp.bfloat16,
+    last_logits: bool = False,
+):
+    cfg = arch.model
+    param_shapes = jax.eval_shape(
+        lambda k: init_params(k, cfg, dtype), jax.random.PRNGKey(0)
+    )
+    p_shard = shd.param_sharding_tree(param_shapes, mesh, arch.fsdp)
+    baxes = shd.serve_batch_axes(mesh, batch)
+    repl = shd.replicated(mesh)
+
+    fns = {}
+    if mode == "prefill":
+        P_len = arch.prefix_len
+        tok_len = seq_len - P_len
+        toks = jax.ShapeDtypeStruct((batch, tok_len), jnp.int32)
+        tok_shard = NamedSharding(
+            mesh, P(baxes if not baxes or len(baxes) > 1 else baxes[0], None)
+        )
+        args = [toks]
+        shards = [tok_shard]
+        if P_len:
+            pre = jax.ShapeDtypeStruct((batch, P_len, cfg.d_model), dtype)
+            args.append(pre)
+            shards.append(
+                NamedSharding(
+                    mesh,
+                    P(baxes if not baxes or len(baxes) > 1 else baxes[0], None, None),
+                )
+            )
+
+        def prefill_step(params, tokens, prefix=None):
+            return model_prefill(
+                params, cfg, tokens, prefix, max_len=seq_len,
+                last_logits_only=last_logits,
+            )
+
+        fns["prefill_step"] = (
+            jax.jit(
+                prefill_step,
+                in_shardings=(p_shard, *shards),
+                out_shardings=None,
+            ),
+            (param_shapes, *args),
+        )
+    else:
+        cache_shapes = jax.eval_shape(
+            lambda: init_cache(cfg, batch, seq_len, dtype)
+        )
+        c_shard = shd.cache_sharding_tree(cache_shapes, mesh, baxes)
+        tok = jax.ShapeDtypeStruct((batch,), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def serve_step(params, cache, token, pos):
+            return model_decode(params, cfg, cache, token, pos)
+
+        fns["decode_step"] = (
+            jax.jit(
+                serve_step,
+                in_shardings=(p_shard, c_shard, repl, repl),
+                out_shardings=(None, c_shard),
+                donate_argnums=(1,),
+            ),
+            (param_shapes, cache_shapes, tok, pos),
+        )
+    return StepBundle(
+        mesh=mesh,
+        n_workers=1,
+        param_shapes=param_shapes,
+        param_shardings=p_shard,
+        fns=fns,
+    )

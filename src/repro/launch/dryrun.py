@@ -1,0 +1,224 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture × input-shape × mesh) combination and record memory analysis,
+cost analysis, and the roofline terms.
+
+MUST be run as a script/module so the XLA_FLAGS above land before jax
+initializes devices (do not import this module from tests).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-27b --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # full grid, resumable
+    PYTHONPATH=src python -m repro.launch.dryrun --table          # print result table
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import PUBLIC_TO_MODULE, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.launch import param_math
+from repro.roofline import analyze_compiled
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+
+# cheap-to-expensive order so a long grid run banks results early
+_ORDER = [
+    "qwen1.5-0.5b", "internvl2-1b", "xlstm-350m", "musicgen-medium",
+    "recurrentgemma-2b", "gemma3-27b", "qwen3-32b", "deepseek-coder-33b",
+    "llama4-scout-17b-a16e", "deepseek-v3-671b",
+]
+
+
+def combos():
+    for arch_name in _ORDER:
+        arch = get_arch(arch_name)
+        for shape_name in SHAPES:
+            if shape_name == "long_500k" and not arch.runs_long_context:
+                continue
+            for mesh_name in ("single", "multi"):
+                yield arch_name, shape_name, mesh_name
+
+
+def out_path(arch_name, shape_name, mesh_name):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    return os.path.join(OUT_DIR, f"{arch_name}__{shape_name}__{mesh_name}.json")
+
+
+def run_one(arch_name: str, shape_name: str, mesh_name: str, overrides=None) -> dict:
+    from repro.launch.distributed import build_serve_steps, build_train_steps
+
+    arch = get_arch(arch_name)
+    spec = SHAPES[shape_name]
+    multi_pod = mesh_name == "multi"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = 512 if multi_pod else 256
+    overrides = overrides or {}
+
+    t0 = time.time()
+    if spec["kind"] == "train":
+        bundle = build_train_steps(
+            arch, mesh, multi_pod,
+            global_batch=spec["global_batch"], seq_len=spec["seq_len"],
+            **overrides,
+        )
+        tokens = spec["global_batch"] * spec["seq_len"]
+    else:
+        bundle = build_serve_steps(
+            arch, mesh, multi_pod,
+            batch=spec["global_batch"], seq_len=spec["seq_len"],
+            mode=spec["kind"], **overrides,
+        )
+        tokens = (
+            spec["global_batch"] * spec["seq_len"]
+            if spec["kind"] == "prefill"
+            else spec["global_batch"]
+        )
+    # forward-only steps do ~2·N·D per token; train ~6·N·D (fwd+bwd)
+    mf = param_math.model_flops(arch.model, tokens)
+    if spec["kind"] != "train":
+        mf /= 3.0
+
+    result = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "n_devices": n_dev,
+        "n_workers": bundle.n_workers,
+        "params": param_math.count_params(arch.model),
+        "active_params": param_math.count_active_params(arch.model),
+        "steps": {},
+    }
+    with bundle.mesh:
+        for name, (fn, args) in bundle.fns.items():
+            entry = {}
+            try:
+                t1 = time.time()
+                lowered = fn.lower(*args)
+                entry["lower_s"] = time.time() - t1
+                t1 = time.time()
+                compiled = lowered.compile()
+                entry["compile_s"] = time.time() - t1
+                # MODEL_FLOPS accounting: compressed rounds re-evaluate the
+                # old point (2× oracle), sync rounds evaluate once
+                step_mf = mf * (2.0 if name == "compressed_step" else 1.0) \
+                    if name != "train_step" else mf
+                rep = analyze_compiled(compiled, n_dev, model_flops_total=step_mf)
+                entry.update(rep.to_dict())
+                try:
+                    ma = compiled.memory_analysis()
+                    entry["memory_analysis"] = {
+                        k: float(getattr(ma, k))
+                        for k in (
+                            "argument_size_in_bytes",
+                            "output_size_in_bytes",
+                            "temp_size_in_bytes",
+                            "alias_size_in_bytes",
+                            "generated_code_size_in_bytes",
+                        )
+                        if hasattr(ma, k)
+                    }
+                except Exception as e:  # pragma: no cover
+                    entry["memory_analysis_error"] = str(e)
+                entry["ok"] = True
+            except Exception as e:
+                entry["ok"] = False
+                entry["error"] = f"{type(e).__name__}: {e}"
+                entry["traceback"] = traceback.format_exc()[-4000:]
+            result["steps"][name] = entry
+    result["wall_s"] = time.time() - t0
+    return result
+
+
+def print_table():
+    import glob
+
+    rows = []
+    for f in sorted(glob.glob(os.path.join(OUT_DIR, "*.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        for sname, s in r["steps"].items():
+            if not s.get("ok"):
+                rows.append((r["arch"], r["shape"], r["mesh"], sname, "FAIL", "", "", "", ""))
+                continue
+            rows.append(
+                (
+                    r["arch"], r["shape"], r["mesh"], sname,
+                    r.get("dominant", s.get("dominant", "")),
+                    f"{s['compute_s']*1e3:9.2f}",
+                    f"{s['memory_s']*1e3:9.2f}",
+                    f"{s['collective_s']*1e3:9.2f}",
+                    f"{(s.get('useful_ratio') or 0):5.2f}",
+                )
+            )
+    hdr = ("arch", "shape", "mesh", "step", "dom", "comp_ms", "mem_ms", "coll_ms", "useful")
+    print(("{:<24}{:<12}{:<7}{:<17}{:<11}{:>10}{:>10}{:>10}{:>7}").format(*hdr))
+    for row in rows:
+        dom = row[4] if len(row) > 4 else ""
+        print(
+            "{:<24}{:<12}{:<7}{:<17}{:<11}{:>10}{:>10}{:>10}{:>7}".format(
+                *row[:4], row[4] if row[4] else "", *row[5:]
+            )
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default=None, choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--table", action="store_true")
+    args = ap.parse_args()
+
+    if args.table:
+        print_table()
+        return
+
+    if args.all:
+        todo = list(combos())
+    else:
+        assert args.arch and args.shape and args.mesh
+        todo = [(args.arch, args.shape, args.mesh)]
+
+    for arch_name, shape_name, mesh_name in todo:
+        path = out_path(arch_name, shape_name, mesh_name)
+        if os.path.exists(path) and not args.force:
+            print(f"skip {path}")
+            continue
+        print(f"=== {arch_name} × {shape_name} × {mesh_name} ===", flush=True)
+        res = run_one(arch_name, shape_name, mesh_name)
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        for sname, s in res["steps"].items():
+            status = "ok" if s.get("ok") else "FAIL " + s.get("error", "")[:200]
+            extra = ""
+            if s.get("ok"):
+                extra = (
+                    f" dom={s['dominant']} comp={s['compute_s']*1e3:.1f}ms"
+                    f" mem={s['memory_s']*1e3:.1f}ms coll={s['collective_s']*1e3:.1f}ms"
+                )
+            print(f"  {sname}: {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

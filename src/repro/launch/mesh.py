@@ -1,0 +1,37 @@
+"""Production meshes.
+
+Defined as functions (never module-level constants) so importing this module
+does not touch jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; tests and benches see the real single device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod (256 chips) or 2×16×16 two-pod (512 chips) mesh."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 2):
+    """Small mesh for CPU sharding tests (requires ≥ data·model host devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def worker_axis_names(multi_pod: bool, worker_axes: str) -> tuple[str, ...]:
+    """Which mesh axes form the MARINA worker dimension (DESIGN.md §3)."""
+    if not multi_pod:
+        return ("data",)
+    return ("pod",) if worker_axes == "pod" else ("pod", "data")
+
+
+def num_workers(mesh, multi_pod: bool, worker_axes: str) -> int:
+    n = 1
+    for ax in worker_axis_names(multi_pod, worker_axes):
+        n *= mesh.shape[ax]
+    return n

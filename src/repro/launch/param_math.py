@@ -1,0 +1,53 @@
+"""Analytic parameter/FLOP accounting for full-size configs (no allocation).
+
+Uses ``jax.eval_shape`` over ``init_params`` so the count is exactly what the
+dry-run will lower, and provides MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D
+(MoE) for the §Roofline usefulness ratio.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import init_params
+from repro.models.config import ModelConfig
+
+
+@functools.lru_cache(maxsize=None)
+def _shapes(cfg: ModelConfig, dtype_str: str):
+    dtype = jnp.dtype(dtype_str)
+    return jax.eval_shape(
+        lambda k: init_params(k, cfg, dtype), jax.random.PRNGKey(0)
+    )
+
+
+def param_shapes(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return _shapes(cfg, jnp.dtype(dtype).name)
+
+
+def count_params(cfg: ModelConfig) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(param_shapes(cfg)))
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """Parameters touched per token: MoE experts count at top_k/E (+ shared)."""
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(param_shapes(cfg))[0]:
+        n = int(np.prod(leaf.shape))
+        keys = "/".join(str(p) for p in path)
+        if cfg.moe is not None and any(
+            f"'{w}'" in keys for w in ("moe_gate", "moe_up", "moe_down")
+        ) and leaf.ndim >= 3:
+            # stacked expert weights: (repeat?, E, d, f)
+            n = int(n * cfg.moe.top_k / cfg.moe.num_experts)
+        total += n
+    return total
+
+
+def model_flops(cfg: ModelConfig, tokens: int) -> float:
+    """6·N_active·D — the §Roofline 'useful compute' yardstick."""
+    return 6.0 * count_active_params(cfg) * tokens

@@ -1,0 +1,174 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""§Perf hillclimbing runner: re-lower a selected (arch × shape × mesh) pair
+with one named variant applied, and record the roofline delta vs baseline.
+
+Each variant encodes one hypothesis from EXPERIMENTS.md §Perf. Results land in
+experiments/perf/<arch>__<shape>__<mesh>__<variant>.json and are rendered into
+the §Perf log by scripts/update_perf.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.perf --arch xlstm-350m \
+      --shape train_4k --mesh single --variant replicate_params
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.launch import param_math
+from repro.launch.dryrun import SHAPES, OUT_DIR
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import analyze_compiled
+
+PERF_DIR = os.path.join(os.path.dirname(OUT_DIR), "perf")
+
+# variant name -> (builder overrides, model-config replaces, arch replaces)
+VARIANTS = {
+    "baseline": ({}, {}, {}),
+    # compression / collective schedule
+    "shared_mask": ({"shared_mask": True}, {}, {}),
+    "packed_payload": ({"packed_payload": True}, {}, {}),
+    "shared_and_packed": ({"shared_mask": True, "packed_payload": True}, {}, {}),
+    # memory/compute policy
+    "no_remat": ({"remat": False}, {}, {}),
+    "f32_params": ({"dtype": jnp.float32}, {}, {}),
+    # small-model distribution: model axis → within-worker data parallelism
+    "replicate_params": ({"replicate_params": True}, {}, {}),
+    # attention chunking
+    "chunk_2048": ({}, {"attn_chunk": 2048}, {}),
+    "chunk_512": ({}, {"attn_chunk": 512}, {}),
+    # MoE capacity
+    "cap_1.0": ({}, {}, {"moe_cap": 1.0}),
+    # giant models: worker = pod+data (more workers, thinner shards)
+    "workers_pod_data": ({}, {}, {"worker_axes": "pod_data"}),
+    # serving: unembed only the final position during prefill
+    "last_logits": ({"last_logits": True}, {}, {}),
+    # staged payload constraints (new default; variant isolates the delta
+    # against the v1 baselines which lowered without staging)
+    "staged_payload": ({}, {}, {}),
+    "unstaged_payload": ({"staged_payload": False}, {}, {}),
+    "staged_shared": ({"shared_mask": True}, {}, {}),
+}
+
+
+def run_variant(arch_name, shape_name, mesh_name, variant):
+    from repro.launch.distributed import build_serve_steps, build_train_steps
+
+    overrides, model_repl, arch_repl = VARIANTS[variant]
+    arch = get_arch(arch_name)
+    if model_repl:
+        arch = dataclasses.replace(
+            arch, model=dataclasses.replace(arch.model, **model_repl)
+        )
+    if "moe_cap" in arch_repl and arch.model.moe is not None:
+        moe = dataclasses.replace(arch.model.moe, capacity_factor=arch_repl["moe_cap"])
+        arch = dataclasses.replace(arch, model=dataclasses.replace(arch.model, moe=moe))
+    if "worker_axes" in arch_repl:
+        arch = dataclasses.replace(arch, worker_axes=arch_repl["worker_axes"])
+
+    spec = SHAPES[shape_name]
+    multi_pod = mesh_name == "multi"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = 512 if multi_pod else 256
+
+    if spec["kind"] == "train":
+        bundle = build_train_steps(
+            arch, mesh, multi_pod,
+            global_batch=spec["global_batch"], seq_len=spec["seq_len"],
+            **overrides,
+        )
+        tokens = spec["global_batch"] * spec["seq_len"]
+        mf = param_math.model_flops(arch.model, tokens)
+    else:
+        serve_over = {
+            k: v for k, v in overrides.items() if k in ("dtype", "last_logits")
+        }
+        bundle = build_serve_steps(
+            arch, mesh, multi_pod,
+            batch=spec["global_batch"], seq_len=spec["seq_len"],
+            mode=spec["kind"], **serve_over,
+        )
+        tokens = (
+            spec["global_batch"] * spec["seq_len"]
+            if spec["kind"] == "prefill" else spec["global_batch"]
+        )
+        mf = param_math.model_flops(arch.model, tokens) / 3.0
+
+    result = {
+        "arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+        "variant": variant, "steps": {},
+    }
+    with bundle.mesh:
+        for name, (fn, args) in bundle.fns.items():
+            entry = {}
+            try:
+                t0 = time.time()
+                compiled = fn.lower(*args).compile()
+                entry["compile_s"] = time.time() - t0
+                step_mf = mf * (2.0 if name == "compressed_step" else 1.0) \
+                    if name != "train_step" else mf
+                rep = analyze_compiled(compiled, n_dev, model_flops_total=step_mf)
+                entry.update(rep.to_dict())
+                try:
+                    ma = compiled.memory_analysis()
+                    entry["memory_analysis"] = {
+                        k: float(getattr(ma, k))
+                        for k in (
+                            "argument_size_in_bytes", "output_size_in_bytes",
+                            "temp_size_in_bytes", "alias_size_in_bytes",
+                        ) if hasattr(ma, k)
+                    }
+                except Exception:
+                    pass
+                entry["ok"] = True
+            except Exception as e:
+                entry["ok"] = False
+                entry["error"] = f"{type(e).__name__}: {e}"
+                entry["traceback"] = traceback.format_exc()[-3000:]
+            result["steps"][name] = entry
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--mesh", required=True, choices=["single", "multi"])
+    ap.add_argument("--variant", required=True, choices=list(VARIANTS))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(PERF_DIR, exist_ok=True)
+    path = os.path.join(
+        PERF_DIR, f"{args.arch}__{args.shape}__{args.mesh}__{args.variant}.json"
+    )
+    if os.path.exists(path) and not args.force:
+        print(f"skip {path}")
+        return
+    res = run_variant(args.arch, args.shape, args.mesh, args.variant)
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    for sname, s in res["steps"].items():
+        if s.get("ok"):
+            print(
+                f"{sname}: comp={s['compute_s']*1e3:.1f}ms mem={s['memory_s']*1e3:.1f}ms "
+                f"coll={s['collective_s']*1e3:.1f}ms dom={s['dominant']}",
+                flush=True,
+            )
+        else:
+            print(f"{sname}: FAIL {s['error'][:300]}")
+
+
+if __name__ == "__main__":
+    main()

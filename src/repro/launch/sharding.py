@@ -1,0 +1,186 @@
+"""Path-based GSPMD sharding rules for parameters, batches, and caches.
+
+Every rule is a *preference*; ``_fit`` drops any axis that does not divide the
+corresponding dimension (e.g. 10 attention heads over a 16-way model axis →
+replicated, while the flattened H·hd projection column still shards). This is
+what lets one rule table drive all 10 architectures on both meshes.
+
+Roles:
+* ``M`` — prefer the model axis (tensor/expert parallelism)
+* ``F`` — prefer the fsdp axis ("data") when the arch runs worker-per-pod
+* ``None`` — replicate
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+M, F = "M", "F"
+
+# name → right-aligned dim roles (extra leading dims, e.g. scan stacks, replicate)
+_RULES: dict[str, tuple] = {
+    # embeddings: (V, d) — vocab-parallel
+    "embed": (M, F),
+    "lm_head": (M, F),
+    # in-projections (d_in, d_out): column-parallel
+    **{k: (F, M) for k in (
+        "wq", "wk", "wv", "w_uq", "w_uk", "w_uv", "w_dq", "w_dkv", "w_kr",
+        "w_in", "ff_up", "w_x", "w_y", "w_a", "w_i", "w_q", "w_k", "w_v",
+        "w_up_mlp", "proj",
+    )},
+    "w_gate": (F, M),
+    "w_up": (F, M),
+    # MoE expert stacks (E, d_in, d_out) / (E, d_out, d_in): experts → model (EP)
+    "moe_gate": (M, F, None),
+    "moe_up": (M, F, None),
+    "moe_down": (M, None, F),
+    # out-projections (d_out, d_in): row-parallel
+    **{k: (M, F) for k in ("wo", "w_down", "ff_down", "w_out")},
+    # gates with tiny output dims
+    "w_if": (F, None),
+    # conv (W, C)
+    "w": (None, M),
+    "b": (M,),
+    # small / replicated
+    **{k: () for k in ("lam", "r_z", "r_i", "r_f", "r_o")},
+    # router (d, E): replicate E (small), fsdp the input dim
+    "router": (F, None),
+}
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            return str(p.key)
+    return ""
+
+
+def _fit(roles: tuple, shape: tuple, mesh: Mesh, fsdp: bool) -> P:
+    """Right-align roles to shape, drop non-dividing axes, map roles to axes."""
+    axes: list[Optional[str]] = [None] * len(shape)
+    used = set()
+    for i, role in enumerate(roles):
+        dim = len(shape) - len(roles) + i
+        if dim < 0 or role is None:
+            continue
+        ax = "model" if role == M else ("data" if fsdp else None)
+        if ax is None or ax in used or ax not in mesh.shape:
+            continue
+        if shape[dim] % mesh.shape[ax] == 0 and shape[dim] > 0:
+            axes[dim] = ax
+            used.add(ax)
+    return P(*axes)
+
+
+def param_spec(path, leaf, mesh: Mesh, fsdp: bool) -> P:
+    name = _leaf_name(path)
+    shape = tuple(leaf.shape)
+    roles = _RULES.get(name)
+    if roles is None:
+        roles = (F, M) if len(shape) >= 2 else ()
+    spec = _fit(roles, shape, mesh, fsdp)
+    # fallback: a large leaf whose preferred dim didn't divide (e.g. an odd
+    # vocab) still gets the model axis on any dividing dim, rightmost first
+    if (
+        all(s is None for s in spec)
+        and int(np.prod(shape)) > 1_000_000
+        and "model" in mesh.shape
+    ):
+        axes: list[Optional[str]] = [None] * len(shape)
+        for dim in range(len(shape) - 1, -1, -1):
+            if shape[dim] % mesh.shape["model"] == 0:
+                axes[dim] = "model"
+                break
+        spec = P(*axes)
+    return spec
+
+
+def param_sharding_tree(shapes: PyTree, mesh: Mesh, fsdp: bool) -> PyTree:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    specs = [NamedSharding(mesh, param_spec(p, l, mesh, fsdp)) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# activations / batches / caches
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(worker_axes: tuple[str, ...], inner_batch_axis: Optional[str], ndim: int) -> P:
+    """(n_workers, per_worker_batch, ...) — workers on dim 0; optionally shard
+    the per-worker batch over the fsdp axis (worker-per-pod archs)."""
+    axes: list = [worker_axes if len(worker_axes) > 1 else worker_axes[0]]
+    axes.append(inner_batch_axis)
+    axes += [None] * (ndim - 2)
+    return P(*axes)
+
+
+def serve_batch_axes(mesh: Mesh, B: int) -> Optional[tuple]:
+    """Best axes to shard a serving batch dim of size B over."""
+    cands = [ax for ax in ("pod", "data") if ax in mesh.shape]
+    chosen = []
+    size = 1
+    for ax in cands:
+        if B % (size * mesh.shape[ax]) == 0:
+            chosen.append(ax)
+            size *= mesh.shape[ax]
+    if not chosen:
+        return None
+    return tuple(chosen)
+
+
+def cache_leaf_spec(path, leaf, mesh: Mesh, batch_axes) -> P:
+    """Decode-cache leaves: (repeat, B, ...). Shard B over batch axes, then try
+    the model axis on head-ish dims, then the unused data axes on the time dim
+    (sequence-parallel KV for long contexts)."""
+    name = _leaf_name(path)
+    shape = tuple(leaf.shape)
+    axes: list = [None] * len(shape)
+    used = set()
+    if len(shape) >= 2 and batch_axes:
+        bsz = int(np.prod([mesh.shape[a] for a in batch_axes]))
+        if shape[1] % bsz == 0:
+            axes[1] = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+            used.update(batch_axes)
+    # trailing feature dims: try model axis once, rightmost-but-one first
+    if "model" in mesh.shape:
+        for dim in range(len(shape) - 2, 1, -1):
+            if shape[dim] % mesh.shape["model"] == 0 and "model" not in used:
+                axes[dim] = "model"
+                used.add("model")
+                break
+        else:
+            if (
+                len(shape) >= 3
+                and "model" not in used
+                and shape[-1] % mesh.shape["model"] == 0
+            ):
+                axes[-1] = "model"
+                used.add("model")
+    # time dim (dim 2 for (repeat,B,S,...) caches): spread over leftover axes
+    if name in ("k", "v", "ckv", "k_rope") and len(shape) >= 4:
+        leftover = [a for a in ("pod", "data") if a in mesh.shape and a not in used]
+        if leftover:
+            size = int(np.prod([mesh.shape[a] for a in leftover]))
+            if shape[2] % size == 0:
+                axes[2] = tuple(leftover) if len(leftover) > 1 else leftover[0]
+                used.update(leftover)
+    return P(*axes)
+
+
+def cache_sharding_tree(cache_shapes: PyTree, mesh: Mesh, batch_axes) -> PyTree:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    specs = [
+        NamedSharding(mesh, cache_leaf_spec(p, l, mesh, batch_axes))
+        for p, l in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

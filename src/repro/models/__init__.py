@@ -1,0 +1,24 @@
+from .config import (
+    LayerSpec,
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    Segment,
+    dense_stack,
+    reduced,
+)
+from .model import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    lm_loss,
+    param_count,
+    prefill,
+)
+
+__all__ = [
+    "LayerSpec", "MLAConfig", "MoEConfig", "ModelConfig", "Segment",
+    "dense_stack", "reduced", "decode_step", "forward", "init_cache",
+    "init_params", "lm_loss", "param_count", "prefill",
+]

@@ -1,0 +1,337 @@
+"""Attention mixers: GQA (full / sliding-window) and DeepSeek MLA.
+
+Training/prefill use a chunked online-softmax formulation (pure JAX "flash"):
+memory is O(S·chunk) instead of O(S²), which is what makes the 32k prefill
+shape lowerable. Sliding-window layers ("attn_local") only visit the two kv
+chunks that can intersect the window (requires window ≤ chunk), so their
+compute is O(S·window) — the property that qualifies gemma3/recurrentgemma
+for the long_500k shape.
+
+Decode attends one query token against the cache:
+* global attention — full (B, S, KV, hd) cache;
+* local attention  — O(window) ring-buffer cache;
+* MLA              — compressed (B, S, kv_lora + rope_dim) cache with the
+  weight-absorption trick (queries projected into the latent space), which is
+  the architecture's entire point and gives a 512+64 wide cache instead of
+  2·128·128.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import MLAConfig, ModelConfig
+from .layers import init_dense, init_rmsnorm, rmsnorm, rope
+
+PyTree = Any
+
+_NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention core
+# ---------------------------------------------------------------------------
+
+
+def _attend_chunk(q, k, v, mask):
+    """q (B,Cq,H,hd), k/v (B,Ck,H,hd), mask (B,Cq,Ck) → partial (logits-max, den, num)."""
+    scale = 1.0 / jnp.sqrt(q.shape[-1])
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    logits = jnp.where(mask[:, None, :, :], logits, _NEG_INF)
+    m = jnp.max(logits, axis=-1)                      # (B,H,Cq)
+    p = jnp.exp(logits - m[..., None])
+    den = jnp.sum(p, axis=-1)                         # (B,H,Cq)
+    num = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+    return m, den, num
+
+
+def _merge(carry, m, den, num):
+    m0, den0, num0 = carry
+    m_new = jnp.maximum(m0, m)
+    a0 = jnp.exp(m0 - m_new)
+    a1 = jnp.exp(m - m_new)
+    den_new = den0 * a0 + den * a1
+    num_new = num0 * a0.transpose(0, 2, 1)[..., None].astype(num0.dtype) + \
+        num * a1.transpose(0, 2, 1)[..., None].astype(num.dtype)
+    return m_new, den_new, num_new
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    positions: jax.Array,
+    *,
+    window: int | None = None,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Causal (optionally banded) attention. q (B,S,H,hd), k/v (B,S,KV,hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    hd_v = v.shape[3]
+    chunk = min(chunk, S)
+    S_orig = S
+    pad = (-S) % chunk
+    if pad:
+        # self-pad to a chunk multiple; padded keys get sentinel positions so
+        # no real query attends to them, padded query rows are sliced off
+        zq = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        q = jnp.pad(q, zq)
+        k = jnp.pad(k, zq)
+        v = jnp.pad(v, zq)
+        positions = jnp.pad(positions, [(0, 0), (0, pad)], constant_values=2**30)
+        S = S + pad
+    nch = S // chunk
+    if window is not None:
+        # the banded path only visits chunks {qi-1, qi}; with a single chunk
+        # plain causal masking already covers any window
+        assert window <= chunk or nch == 1, "sliding window must fit one chunk"
+    rep = H // KV
+
+    qc = q.reshape(B, nch, chunk, H, hd)
+    kc = k.reshape(B, nch, chunk, KV, hd)
+    vc = v.reshape(B, nch, chunk, KV, hd_v)
+    pc = positions.reshape(B, nch, chunk)
+
+    def expand(x):  # GQA: repeat kv heads to H
+        return jnp.repeat(x, rep, axis=2) if rep > 1 else x
+
+    def mask_fn(pq, pk):
+        m = pk[:, None, :] <= pq[:, :, None]
+        if window is not None:
+            m &= (pq[:, :, None] - pk[:, None, :]) < window
+        return m
+
+    def q_block(_, qi):
+        q_i = jax.lax.dynamic_index_in_dim(qc, qi, 1, keepdims=False)
+        p_i = jax.lax.dynamic_index_in_dim(pc, qi, 1, keepdims=False)
+        init = (
+            jnp.full((B, H, chunk), _NEG_INF, jnp.float32),
+            jnp.zeros((B, H, chunk), jnp.float32),
+            jnp.zeros((B, chunk, H, hd_v), v.dtype),
+        )
+
+        if window is not None:
+            # banded: only chunks qi-1 and qi can intersect the window
+            carry = init
+            for delta in (1, 0):
+                kj = jnp.maximum(qi - delta, 0)
+                k_j = expand(jax.lax.dynamic_index_in_dim(kc, kj, 1, keepdims=False))
+                v_j = expand(jax.lax.dynamic_index_in_dim(vc, kj, 1, keepdims=False))
+                p_j = jax.lax.dynamic_index_in_dim(pc, kj, 1, keepdims=False)
+                m = mask_fn(p_i, p_j) & (qi - delta >= 0)
+                carry = _merge(carry, *_attend_chunk(q_i, k_j, v_j, m))
+            m_f, den, num = carry
+        else:
+            def kv_block(carry, kj):
+                k_j = expand(kc[:, kj])
+                v_j = expand(vc[:, kj])
+                m = mask_fn(p_i, pc[:, kj]) & (kj <= qi)
+                return _merge(carry, *_attend_chunk(q_i, k_j, v_j, m)), None
+
+            (m_f, den, num), _ = jax.lax.scan(kv_block, init, jnp.arange(nch))
+
+        den = jnp.maximum(den, 1e-30)
+        out = num / den.transpose(0, 2, 1)[..., None].astype(num.dtype)
+        return None, out
+
+    _, outs = jax.lax.scan(q_block, None, jnp.arange(nch))  # (nch,B,chunk,H,hd_v)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd_v)
+    return out[:, :S_orig]
+
+
+# ---------------------------------------------------------------------------
+# GQA layer
+# ---------------------------------------------------------------------------
+
+
+def init_attn(key, cfg: ModelConfig, dtype):
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": init_dense(ks[0], d, H * hd, dtype),
+        "wk": init_dense(ks[1], d, KV * hd, dtype),
+        "wv": init_dense(ks[2], d, KV * hd, dtype),
+        "wo": init_dense(ks[3], H * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, dtype)
+        p["k_norm"] = init_rmsnorm(hd, dtype)
+    return p
+
+
+def _qkv(p, cfg: ModelConfig, x, positions):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.pos_emb == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_train(p, cfg: ModelConfig, x, positions, *, local: bool, chunk: int = 1024):
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+    window = cfg.window if local else None
+    chunk = max(chunk, window or 0)
+    out = chunked_attention(q, k, v, positions, window=window, chunk=chunk)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def init_attn_cache(cfg: ModelConfig, B: int, max_len: int, *, local: bool, dtype):
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    L = min(cfg.window, max_len) if local else max_len
+    return {
+        "k": jnp.zeros((B, L, KV, hd), dtype),
+        "v": jnp.zeros((B, L, KV, hd), dtype),
+    }
+
+
+def attn_decode(p, cfg: ModelConfig, cache, x_t, pos, *, local: bool):
+    """x_t (B,1,d); pos scalar int (current absolute position). Returns y, cache."""
+    B = x_t.shape[0]
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_t, v_t = _qkv(p, cfg, x_t, positions)
+
+    L = cache["k"].shape[1]
+    slot = (pos % L) if local else pos
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_t.astype(cache["k"].dtype), slot, 1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_t.astype(cache["v"].dtype), slot, 1)
+
+    # key positions for masking
+    idx = jnp.arange(L)
+    if local:
+        # ring buffer: slot s holds absolute position p with p % L == s, and the
+        # newest write is at `slot`; valid if 0 <= pos - kpos < window
+        kpos = pos - ((slot - idx) % L)
+    else:
+        kpos = idx
+    valid = (kpos >= 0) & (kpos <= pos)
+    if local:
+        valid &= (pos - kpos) < cfg.window
+
+    rep = H // KV
+    k_e = jnp.repeat(k, rep, axis=2) if rep > 1 else k
+    v_e = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+    scale = 1.0 / jnp.sqrt(hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k_e).astype(jnp.float32) * scale
+    logits = jnp.where(valid[None, None, None, :], logits, _NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w.astype(v_e.dtype), v_e)
+    y = out.reshape(B, 1, -1) @ p["wo"]
+    return y, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# DeepSeek MLA
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelConfig, dtype):
+    m: MLAConfig = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    ks = jax.random.split(key, 7)
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "w_dq": init_dense(ks[0], d, m.q_lora_rank, dtype),
+        "q_ln": init_rmsnorm(m.q_lora_rank, dtype),
+        "w_uq": init_dense(ks[1], m.q_lora_rank, H * qd, dtype),
+        "w_dkv": init_dense(ks[2], d, m.kv_lora_rank, dtype),
+        "kv_ln": init_rmsnorm(m.kv_lora_rank, dtype),
+        "w_kr": init_dense(ks[3], d, m.qk_rope_head_dim, dtype),
+        "w_uk": init_dense(ks[4], m.kv_lora_rank, H * m.qk_nope_head_dim, dtype),
+        "w_uv": init_dense(ks[5], m.kv_lora_rank, H * m.v_head_dim, dtype),
+        "wo": init_dense(ks[6], H * m.v_head_dim, d, dtype),
+    }
+
+
+def _mla_qkv(p, cfg: ModelConfig, x, positions):
+    m: MLAConfig = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    cq = rmsnorm(x @ p["w_dq"], p["q_ln"], cfg.norm_eps)
+    q = (cq @ p["w_uq"]).reshape(B, S, H, -1)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = rmsnorm(x @ p["w_dkv"], p["kv_ln"], cfg.norm_eps)          # (B,S,r)
+    k_rope = rope(
+        (x @ p["w_kr"])[:, :, None, :], positions, cfg.rope_theta
+    )  # (B,S,1,rd) shared across heads
+    return q_nope, q_rope, ckv, k_rope
+
+
+def mla_train(p, cfg: ModelConfig, x, positions, *, chunk: int = 1024):
+    m: MLAConfig = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(p, cfg, x, positions)
+    k_nope = (ckv @ p["w_uk"]).reshape(B, S, H, m.qk_nope_head_dim)
+    v = (ckv @ p["w_uv"]).reshape(B, S, H, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, m.qk_rope_head_dim))], axis=-1
+    )
+    out = chunked_attention(q, k, v, positions, window=None, chunk=chunk)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def init_mla_cache(cfg: ModelConfig, B: int, max_len: int, dtype):
+    m: MLAConfig = cfg.mla
+    return {
+        "ckv": jnp.zeros((B, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((B, max_len, m.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode(p, cfg: ModelConfig, cache, x_t, pos):
+    """Weight-absorbed MLA decode against the compressed latent cache."""
+    m: MLAConfig = cfg.mla
+    B = x_t.shape[0]
+    H = cfg.num_heads
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope, ckv_t, kr_t = _mla_qkv(p, cfg, x_t, positions)
+
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], ckv_t.astype(cache["ckv"].dtype), pos, 1
+    )
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_t[:, :, 0, :].astype(cache["k_rope"].dtype), pos, 1
+    )
+
+    # Absorb W_uk into the query: q_eff (B,1,H,r)
+    w_uk = p["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_eff = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)
+    scale = 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    logits = (
+        jnp.einsum("bqhr,bkr->bhqk", q_eff, ckv)
+        + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope)
+    ).astype(jnp.float32) * scale
+    valid = jnp.arange(ckv.shape[1]) <= pos
+    logits = jnp.where(valid[None, None, None, :], logits, _NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    # attend in latent space, then up-project once per head
+    lat = jnp.einsum("bhqk,bkr->bqhr", w.astype(ckv.dtype), ckv)  # (B,1,H,r)
+    w_uv = p["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bqhr,rhd->bqhd", lat, w_uv)
+    y = out.reshape(B, 1, -1) @ p["wo"]
+    return y, {"ckv": ckv, "k_rope": k_rope}

@@ -1,0 +1,277 @@
+"""The language model: init / train forward / prefill / decode_step.
+
+Segments scan over stacked layer params (config.py). Supports:
+* token inputs, plus an optional continuous ``prefix_embed`` (the stub output
+  of the vision/audio frontend for the vlm/audio architectures — the carve-out
+  in the assignment);
+* tied or untied unembedding;
+* a deepseek-style multi-token-prediction (MTP) auxiliary head;
+* MoE auxiliary load-balance losses accumulated across layers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import init_layer, init_layer_cache, layer_decode, layer_train
+from .config import LayerSpec, ModelConfig, Segment
+from .layers import (
+    embed,
+    init_embedding,
+    init_rmsnorm,
+    rmsnorm,
+    sinusoidal_pos,
+    unembed,
+)
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> PyTree:
+    keys = jax.random.split(key, len(cfg.segments) + 3)
+    params: dict[str, Any] = {
+        "embed": init_embedding(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_embedding(keys[1], cfg.vocab_size, cfg.d_model, dtype)
+
+    segs = []
+    for si, seg in enumerate(cfg.segments):
+        seg_key = keys[2 + si]
+        pos_params = []
+        for pi, spec in enumerate(seg.period):
+            pk = jax.random.fold_in(seg_key, pi)
+            stack = [
+                init_layer(jax.random.fold_in(pk, r), cfg, spec, dtype)
+                for r in range(seg.repeat)
+            ]
+            pos_params.append(jax.tree.map(lambda *xs: jnp.stack(xs), *stack))
+        segs.append(pos_params)
+    params["segments"] = segs
+
+    if cfg.mtp_depth > 0:
+        mtp_spec = cfg.segments[-1].period[-1]
+        params["mtp"] = {
+            "proj": (jax.random.normal(keys[-1], (2 * cfg.d_model, cfg.d_model)) * 0.02).astype(dtype),
+            "layer": init_layer(jax.random.fold_in(keys[-1], 1), cfg, dataclasses.replace(mtp_spec), dtype),
+            "norm": init_rmsnorm(cfg.d_model, dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, cfg: ModelConfig, tokens, prefix_embed):
+    x = embed(params["embed"], tokens)
+    if prefix_embed is not None:
+        x = jnp.concatenate([prefix_embed.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.pos_emb == "sinusoidal":
+        x = x + sinusoidal_pos(positions, cfg.d_model).astype(x.dtype)
+    return x, positions
+
+
+def forward(
+    params: PyTree,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    prefix_embed: Optional[jax.Array] = None,
+    *,
+    want_cache: bool = False,
+    cache_len: int | None = None,
+    last_logits_only: bool = False,
+):
+    """→ (logits (B,S,V) or (B,1,V), aux_loss, cache-or-None, hidden (B,S,d)).
+
+    ``last_logits_only`` computes the unembedding for the final position only —
+    the serving-prefill optimization (XLA does not push a slice through the
+    (B,S,d)×(V,d) contraction on its own; §Perf `last_logits`)."""
+    x, positions = _embed_inputs(params, cfg, tokens, prefix_embed)
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = []
+
+    # per-layer remat: only the residual stream survives between layers;
+    # attention/FF internals are recomputed in the backward pass
+    use_remat = cfg.remat and not want_cache
+
+    def apply_layer(pp, spec, x_c, positions):
+        def f(pp, x_c, positions):
+            x_o, aux, cache = layer_train(
+                pp, cfg, spec, x_c, positions,
+                want_cache=want_cache, cache_len=cache_len,
+            )
+            return x_o, aux, cache
+
+        if use_remat:
+            f = jax.checkpoint(f)
+        return f(pp, x_c, positions)
+
+    for seg, pos_params in zip(cfg.segments, params["segments"]):
+        if seg.repeat == 1:
+            seg_caches = []
+            for spec, pp in zip(seg.period, pos_params):
+                p0 = jax.tree.map(lambda t: t[0], pp)
+                x, aux, cache = apply_layer(p0, spec, x, positions)
+                aux_total = aux_total + aux
+                seg_caches.append(
+                    jax.tree.map(lambda t: t[None], cache) if cache is not None else None
+                )
+            caches.append(seg_caches)
+        else:
+            def body(carry, slice_params, seg=seg):
+                x_c, aux_c = carry
+                step_caches = []
+                for spec, pp in zip(seg.period, slice_params):
+                    x_c, aux, cache = apply_layer(pp, spec, x_c, positions)
+                    aux_c = aux_c + aux
+                    step_caches.append(cache)
+                return (x_c, aux_c), step_caches
+
+            (x, aux_total), seg_caches = jax.lax.scan(
+                body, (x, aux_total), pos_params
+            )
+            caches.append(seg_caches)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(table, x[:, -1:, :] if last_logits_only else x)
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits, aux_total, (caches if want_cache else None), x
+
+
+def lm_loss(
+    params: PyTree,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    prefix_embed: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Next-token cross-entropy over token positions (prefix excluded),
+    + MoE aux loss + optional MTP auxiliary loss."""
+    logits, aux, _, hidden = forward(params, cfg, tokens, prefix_embed)
+    P = 0 if prefix_embed is None else prefix_embed.shape[1]
+    tok_logits = logits[:, P:, :]
+    pred = tok_logits[:, :-1]
+    tgt = tokens[:, 1:]
+    logp = jax.nn.log_softmax(pred.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll) + aux
+
+    if cfg.mtp_depth > 0 and tokens.shape[1] > 2:
+        # DeepSeek-V3-style MTP: combine hidden_t with embed(token_{t+1}) to
+        # predict token_{t+2} through one extra layer.
+        h_tok = hidden[:, P:, :]
+        h_in = h_tok[:, :-2, :]
+        e_next = embed(params["embed"], tokens[:, 1:-1])
+        z = jnp.concatenate([h_in, e_next], axis=-1) @ params["mtp"]["proj"]
+        B, S2, _ = z.shape
+        positions = jnp.broadcast_to(jnp.arange(S2, dtype=jnp.int32), (B, S2))
+        spec = cfg.segments[-1].period[-1]
+        z, mtp_aux, _ = layer_train(params["mtp"]["layer"], cfg, spec, z, positions)
+        z = rmsnorm(z, params["mtp"]["norm"], cfg.norm_eps)
+        table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        mtp_logits = unembed(table, z)
+        mtp_tgt = tokens[:, 2:]
+        mtp_logp = jax.nn.log_softmax(mtp_logits.astype(jnp.float32), axis=-1)
+        mtp_nll = -jnp.take_along_axis(mtp_logp, mtp_tgt[..., None], axis=-1)[..., 0]
+        loss = loss + 0.3 * jnp.mean(mtp_nll) + mtp_aux
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, B: int, max_len: int, dtype=jnp.float32) -> PyTree:
+    caches = []
+    for seg in cfg.segments:
+        seg_caches = []
+        for spec in seg.period:
+            one = init_layer_cache(cfg, spec, B, max_len, dtype)
+            seg_caches.append(
+                jax.tree.map(lambda t: jnp.broadcast_to(t[None], (seg.repeat, *t.shape)), one)
+            )
+        caches.append(seg_caches)
+    return caches
+
+
+def prefill(
+    params: PyTree,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    prefix_embed: Optional[jax.Array] = None,
+    *,
+    max_len: int | None = None,
+    last_logits_only: bool = False,
+):
+    """Serve prefill: one forward pass that also lays out the decode cache,
+    sized for ``max_len`` total positions. Returns (last logits (B,V), cache)."""
+    logits, _, cache, _ = forward(
+        params, cfg, tokens, prefix_embed, want_cache=True, cache_len=max_len,
+        last_logits_only=last_logits_only,
+    )
+    return logits[:, -1, :], cache
+
+
+def decode_step(
+    params: PyTree,
+    cfg: ModelConfig,
+    cache: PyTree,
+    token_t: jax.Array,  # (B,)
+    pos,                 # scalar int32: absolute position of token_t
+):
+    """One serve step: token_t at position pos, attending to the cache.
+    Returns (logits (B,V), new cache)."""
+    x = embed(params["embed"], token_t[:, None])
+    if cfg.pos_emb == "sinusoidal":
+        B = x.shape[0]
+        p = jnp.full((B, 1), pos, jnp.int32)
+        x = x + sinusoidal_pos(p, cfg.d_model).astype(x.dtype)
+
+    new_caches = []
+    for seg, pos_params, seg_cache in zip(cfg.segments, params["segments"], cache):
+        if seg.repeat == 1:
+            new_seg = []
+            for spec, pp, c in zip(seg.period, pos_params, seg_cache):
+                p0 = jax.tree.map(lambda t: t[0], pp)
+                c0 = jax.tree.map(lambda t: t[0], c)
+                x, c_new = layer_decode(p0, cfg, spec, c0, x, pos)
+                new_seg.append(jax.tree.map(lambda t: t[None], c_new))
+            new_caches.append(new_seg)
+        else:
+            def body(x_c, slice_in, seg=seg):
+                slice_params, slice_cache = slice_in
+                new_slice = []
+                for spec, pp, c in zip(seg.period, slice_params, slice_cache):
+                    x_c, c_new = layer_decode(pp, cfg, spec, c, x_c, pos)
+                    new_slice.append(c_new)
+                return x_c, new_slice
+
+            x, new_seg = jax.lax.scan(body, x, (pos_params, seg_cache))
+            new_caches.append(new_seg)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(table, x)[:, 0, :]
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits, new_caches
+
+
+def param_count(params: PyTree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))

@@ -1,0 +1,122 @@
+"""Mixture-of-Experts FF layer: top-k routing, shared experts, capacity dispatch.
+
+Dispatch strategy (TPU adaptation): tokens are sorted by expert id and packed
+into an (E, C, d) capacity buffer via index scatter (only int32 indices are
+scattered, never activations), then each expert runs a dense batched SwiGLU —
+an MXU-friendly (E, C, d) × (E, d, f) contraction whose expert dimension shards
+cleanly over the model axis (expert parallelism). Tokens beyond an expert's
+capacity C = tokens·top_k/E · capacity_factor are dropped (standard
+Switch-style behaviour; the router aux loss keeps drops rare).
+
+Router flavours: softmax-over-top-k (llama4/mixtral style) and
+sigmoid-with-normalization (deepseek-v3 style), plus the standard
+load-balance auxiliary loss (Switch eq. 4).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, MoEConfig
+from .layers import init_dense, init_mlp, mlp
+
+PyTree = Any
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    m: MoEConfig = cfg.moe
+    d, f, E = cfg.d_model, m.d_expert, m.num_experts
+    ks = jax.random.split(key, 5)
+
+    def stack(k, d_in, d_out):
+        kk = jax.random.split(k, E)
+        return jnp.stack([init_dense(ki, d_in, d_out, dtype) for ki in kk])
+
+    p = {
+        "router": init_dense(ks[0], d, E, dtype, scale=0.02),
+        # moe_-prefixed names drive expert-parallel sharding rules
+        "moe_gate": stack(ks[1], d, f),
+        "moe_up": stack(ks[2], d, f),
+        "moe_down": stack(ks[3], f, d),
+    }
+    if m.num_shared:
+        p["shared"] = init_mlp(ks[4], d, f * m.num_shared, dtype)
+    return p
+
+
+def _route(p, m: MoEConfig, x_flat: jax.Array):
+    """x_flat (T, d) → (expert_ids (T,k), combine_w (T,k), aux_loss)."""
+    logits = (x_flat @ p["router"]).astype(jnp.float32)  # (T, E)
+    if m.router_score == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        w, ids = jax.lax.top_k(scores, m.top_k)
+        w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, ids = jax.lax.top_k(probs, m.top_k)
+        w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+
+    # Switch load-balance loss: E · Σ_e fraction_e · router_prob_e
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac = jnp.mean(
+        jax.nn.one_hot(ids[:, 0], m.num_experts, dtype=jnp.float32), axis=0
+    )
+    aux = m.num_experts * jnp.sum(frac * jnp.mean(probs, axis=0))
+    return ids.astype(jnp.int32), w, aux * m.aux_loss_coef
+
+
+def capacity(m: MoEConfig, T: int) -> int:
+    c = int(T * m.top_k / m.num_experts * m.capacity_factor)
+    return max(8, -(-c // 8) * 8)  # multiple of 8 for TPU sublane alignment
+
+
+def moe_ff(p, cfg: ModelConfig, x: jax.Array):
+    """x (B, S, d) → (y (B, S, d), aux_loss scalar)."""
+    m: MoEConfig = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k = m.num_experts, m.top_k
+    x_flat = x.reshape(T, d)
+
+    ids, w, aux = _route(p, m, x_flat)          # (T,k)
+    C = capacity(m, T)
+
+    # --- pack: rank of each (token, slot) within its expert -----------------
+    flat_e = ids.reshape(-1)                    # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)    # sorted by expert
+    sorted_e = flat_e[order]
+    # position within expert group = running index - group start
+    group_start = jnp.searchsorted(sorted_e, jnp.arange(E))
+    rank = jnp.arange(T * k) - group_start[sorted_e]
+    keep = rank < C
+    slot = sorted_e * C + jnp.where(keep, rank, 0)
+
+    token_of_pair = order // k                  # original token index
+    # slot tables (E*C,): token index feeding each slot, and its combine weight
+    token_for_slot = jnp.full((E * C,), T, jnp.int32)  # T = dummy row
+    token_for_slot = token_for_slot.at[slot].set(
+        jnp.where(keep, token_of_pair, T).astype(jnp.int32)
+    )
+    w_flat = w.reshape(-1)[order]
+    w_for_slot = jnp.zeros((E * C,), w.dtype)
+    w_for_slot = w_for_slot.at[slot].set(jnp.where(keep, w_flat, 0.0))
+
+    # --- expert compute: dense batched SwiGLU over (E, C, d) ---------------
+    x_pad = jnp.concatenate([x_flat, jnp.zeros((1, d), x.dtype)], axis=0)
+    xg = x_pad[token_for_slot].reshape(E, C, d)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xg, p["moe_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", xg, p["moe_up"]
+    )
+    yg = jnp.einsum("ecf,efd->ecd", h, p["moe_down"]).reshape(E * C, d)
+
+    # --- combine: weighted scatter-add back to tokens -----------------------
+    y = jnp.zeros((T + 1, d), x.dtype)
+    y = y.at[token_for_slot].add(yg * w_for_slot[:, None].astype(x.dtype))
+    y = y[:T].reshape(B, S, d)
+
+    if m.num_shared:
+        y = y + mlp(p["shared"], x)
+    return y, aux

@@ -1,0 +1,381 @@
+"""Recurrent mixers: RG-LRU (RecurrentGemma/Griffin), mLSTM and sLSTM (xLSTM).
+
+Training formulations are chosen for TPU shapes:
+
+* RG-LRU — diagonal linear recurrence ⇒ ``jax.lax.associative_scan`` (log-depth,
+  no sequential bottleneck).
+* mLSTM — matrix-memory linear recurrence ⇒ chunkwise-parallel form: quadratic
+  attention-like compute inside chunks (MXU), recurrent hand-off of the
+  (dk × dv) state only at chunk boundaries. Exponential gates are stabilized by
+  a running log-scale max, as in the xLSTM paper (App. A).
+* sLSTM — non-linear recurrence (gates read h_{t−1}); inherently sequential ⇒
+  ``lax.scan``; the state is O(d) so the scan carry is small.
+
+Decode for all three is a single recurrent update — O(1) per token, which is
+why the ssm/hybrid architectures run the long_500k shape.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import init_dense, init_rmsnorm, rmsnorm
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Temporal conv (shared by RG-LRU block)
+# ---------------------------------------------------------------------------
+
+
+def init_conv1d(key, width: int, channels: int, dtype):
+    return {
+        "w": (jax.random.normal(key, (width, channels)) / width).astype(dtype),
+        "b": jnp.zeros((channels,), dtype),
+    }
+
+
+def causal_conv1d(p, x: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x (B,S,C); kernel (W,C)."""
+    W = p["w"].shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1], :] * p["w"][i][None, None, :] for i in range(W)
+    )
+    return out + p["b"]
+
+
+def conv1d_decode(p, state: jax.Array, x_t: jax.Array):
+    """state (B, W-1, C) holds the last W-1 inputs; x_t (B,1,C)."""
+    W = p["w"].shape[0]
+    window = jnp.concatenate([state, x_t], axis=1)  # (B, W, C)
+    out = jnp.einsum("bwc,wc->bc", window, p["w"]) + p["b"]
+    return out[:, None, :], window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+_RG_C = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig, dtype):
+    d, w = cfg.d_model, cfg.resolved_lru_width
+    ks = jax.random.split(key, 7)
+    return {
+        "w_x": init_dense(ks[0], d, w, dtype),
+        "w_y": init_dense(ks[1], d, w, dtype),
+        "conv": init_conv1d(ks[2], cfg.conv_width, w, dtype),
+        "w_a": init_dense(ks[3], w, w, dtype, scale=0.02),
+        "w_i": init_dense(ks[4], w, w, dtype, scale=0.02),
+        # Λ init so that a ∈ (0.9, 0.999) at r = 1 (Griffin §2.4)
+        "lam": (jax.random.uniform(ks[5], (w,), minval=0.7, maxval=5.0)).astype(dtype),
+        "w_out": init_dense(ks[6], w, d, dtype),
+    }
+
+
+def _rglru_gates(p, u: jax.Array):
+    """u (B,S,w) (post-conv). Returns per-step decay a and input b."""
+    r = jax.nn.sigmoid((u @ p["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ p["w_i"]).astype(jnp.float32))
+    log_a = -_RG_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * (
+        i * u.astype(jnp.float32)
+    )
+    return a, gated
+
+
+def rglru_train(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Griffin recurrent block: conv + RG-LRU gated by a GeLU branch."""
+    y = jax.nn.gelu(x @ p["w_y"])
+    u = causal_conv1d(p["conv"], x @ p["w_x"])
+    a, b = _rglru_gates(p, u)
+
+    def combine(l, r):
+        a1, b1 = l
+        a2, b2 = r
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = h.astype(x.dtype)
+    return (h * y) @ p["w_out"]
+
+
+def init_rglru_state(cfg: ModelConfig, B: int, dtype):
+    w = cfg.resolved_lru_width
+    return {
+        "h": jnp.zeros((B, w), jnp.float32),
+        "conv": jnp.zeros((B, cfg.conv_width - 1, w), dtype),
+    }
+
+
+def rglru_decode(p, cfg: ModelConfig, state, x_t: jax.Array):
+    y = jax.nn.gelu(x_t @ p["w_y"])
+    u, conv_state = conv1d_decode(p["conv"], state["conv"], x_t @ p["w_x"])
+    a, b = _rglru_gates(p, u)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    out = (h[:, None, :].astype(x_t.dtype) * y) @ p["w_out"]
+    return out, {"h": h, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix memory, exponential gating) — chunkwise-parallel
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    inner = int(cfg.mlstm_proj_factor * d)
+    H = cfg.num_heads
+    assert inner % H == 0
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": init_dense(ks[0], d, 2 * inner, dtype),
+        "conv": init_conv1d(ks[1], cfg.conv_width, inner, dtype),
+        "w_q": init_dense(ks[2], inner, inner, dtype),
+        "w_k": init_dense(ks[3], inner, inner, dtype),
+        "w_v": init_dense(ks[4], inner, inner, dtype),
+        "w_if": init_dense(ks[5], inner, 2 * H, dtype, scale=0.02),
+        "out_norm": init_rmsnorm(inner, dtype),
+        "w_down": init_dense(ks[6], inner, d, dtype),
+    }
+
+
+def _mlstm_proj(p, cfg: ModelConfig, x: jax.Array):
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    inner = p["w_q"].shape[0]
+    hd = inner // H
+    up = x @ p["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)
+    c = jax.nn.silu(causal_conv1d(p["conv"], xm))
+    q = (c @ p["w_q"]).reshape(B, S, H, hd)
+    k = (c @ p["w_k"]).reshape(B, S, H, hd) / jnp.sqrt(hd)
+    v = (xm @ p["w_v"]).reshape(B, S, H, hd)
+    gates = (c @ p["w_if"]).astype(jnp.float32).reshape(B, S, H, 2)
+    log_i = gates[..., 0]                      # pre-activation of exp input gate
+    log_f = -jax.nn.softplus(-gates[..., 1])   # log sigmoid forget gate
+    return q, k, v, log_i, log_f, z
+
+
+def mlstm_train(p, cfg: ModelConfig, x: jax.Array, *, chunk: int = 256) -> jax.Array:
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q, k, v, log_i, log_f, z = _mlstm_proj(p, cfg, x)
+    inner = q.shape[2] * q.shape[3]
+    hd = q.shape[3]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nch = S // chunk
+
+    def resh(t, extra=()):
+        return t.reshape(B, nch, chunk, H, *extra).swapaxes(2, 3)
+
+    qc = resh(q, (hd,))   # (B,nch,H,chunk,hd)
+    kc = resh(k, (hd,))
+    vc = resh(v, (hd,))
+    lic = log_i.reshape(B, nch, chunk, H).swapaxes(2, 3)  # (B,nch,H,chunk)
+    lfc = log_f.reshape(B, nch, chunk, H).swapaxes(2, 3)
+
+    F = jnp.cumsum(lfc, axis=-1)              # within-chunk Σ log f
+    Ftot = F[..., -1]                          # (B,nch,H)
+
+    def step(carry, idx):
+        C, n, m = carry  # (B,H,hd,hd), (B,H,hd), (B,H)
+        qi = qc[:, idx]
+        ki = kc[:, idx]
+        vi = vc[:, idx]
+        Fi = F[:, idx]                          # (B,H,chunk)
+        li = lic[:, idx]
+        ftot = Ftot[:, idx]
+
+        # log weights: inter-chunk  q_t C:  F_t + m_prev
+        #              intra-chunk  (s<=t): F_t − F_s + log i_s
+        log_inter = Fi + m[..., None]                             # (B,H,chunk)
+        log_intra = Fi[..., :, None] - Fi[..., None, :] + li[..., None, :]
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        log_intra = jnp.where(causal, log_intra, -jnp.inf)
+        m_new = jnp.maximum(
+            jnp.max(log_intra, axis=-1), log_inter
+        )                                                          # (B,H,chunk)
+        w_inter = jnp.exp(log_inter - m_new)
+        w_intra = jnp.exp(log_intra - m_new[..., None])            # (B,H,chunk,chunk)
+
+        h_inter = jnp.einsum("bhtd,bhde->bhte", qi, C) * w_inter[..., None]
+        n_inter = jnp.einsum("bhtd,bhd->bht", qi, n) * w_inter
+
+        scores = jnp.einsum("bhtd,bhsd->bhts", qi, ki) * w_intra.astype(qi.dtype)
+        h_intra = jnp.einsum("bhts,bhse->bhte", scores, vi)
+        n_intra = jnp.sum(scores, axis=-1)
+
+        denom = jnp.maximum(jnp.abs(n_inter + n_intra), jnp.exp(-m_new))
+        h = (h_inter + h_intra) / denom[..., None].astype(qi.dtype)
+
+        # boundary state update (stabilized at scale m_run)
+        m_run = jnp.maximum(ftot + m, jnp.max(Fi * 0 + li + (ftot[..., None] - Fi), axis=-1))
+        decay = jnp.exp(ftot + m - m_run)
+        w_in = jnp.exp(ftot[..., None] - Fi + li - m_run[..., None])  # (B,H,chunk)
+        C_new = decay[..., None, None] * C + jnp.einsum(
+            "bhs,bhsd,bhse->bhde", w_in, ki, vi
+        )
+        n_new = decay[..., None] * n + jnp.einsum("bhs,bhsd->bhd", w_in, ki)
+        return (C_new, n_new, m_run), h
+
+    init = (
+        jnp.zeros((B, H, hd, hd), jnp.float32),
+        jnp.zeros((B, H, hd), jnp.float32),
+        jnp.full((B, H), -1e30, jnp.float32),
+    )
+    qc32 = qc.astype(jnp.float32)
+    kc32 = kc.astype(jnp.float32)
+    vc32 = vc.astype(jnp.float32)
+    qc, kc, vc = qc32, kc32, vc32
+    _, hs = jax.lax.scan(step, init, jnp.arange(nch))  # (nch,B,H,chunk,hd)
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(B, S, inner).astype(x.dtype)
+    h = rmsnorm(h, p["out_norm"], cfg.norm_eps)
+    return (h * jax.nn.silu(z)) @ p["w_down"]
+
+
+def init_mlstm_state(cfg: ModelConfig, B: int, dtype):
+    inner = int(cfg.mlstm_proj_factor * cfg.d_model)
+    H = cfg.num_heads
+    hd = inner // H
+    return {
+        "C": jnp.zeros((B, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((B, H, hd), jnp.float32),
+        "m": jnp.full((B, H), -1e30, jnp.float32),
+        "conv": jnp.zeros((B, cfg.conv_width - 1, inner), dtype),
+    }
+
+
+def mlstm_decode(p, cfg: ModelConfig, state, x_t: jax.Array):
+    B = x_t.shape[0]
+    H = cfg.num_heads
+    inner = p["w_q"].shape[0]
+    hd = inner // H
+    up = x_t @ p["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)
+    c_t, conv_state = conv1d_decode(p["conv"], state["conv"], xm)
+    c_t = jax.nn.silu(c_t)
+    q = (c_t @ p["w_q"]).reshape(B, H, hd).astype(jnp.float32)
+    k = ((c_t @ p["w_k"]).reshape(B, H, hd) / jnp.sqrt(hd)).astype(jnp.float32)
+    v = (xm @ p["w_v"]).reshape(B, H, hd).astype(jnp.float32)
+    gates = (c_t @ p["w_if"]).astype(jnp.float32).reshape(B, H, 2)
+    log_i = gates[..., 0]
+    log_f = -jax.nn.softplus(-gates[..., 1])
+
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + state["m"] - m_new)
+    C = f_s[..., None, None] * state["C"] + i_s[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    n = f_s[..., None] * state["n"] + i_s[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, 1, inner).astype(x_t.dtype)
+    h = rmsnorm(h, p["out_norm"], cfg.norm_eps)
+    out = (h * jax.nn.silu(z)) @ p["w_down"]
+    return out, {"C": C, "n": n, "m": m_new, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, recurrent gates) — sequential scan
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    ks = jax.random.split(key, 7)
+
+    def rec(k):  # block-diagonal (head-wise) recurrent matrix
+        return (jax.random.normal(k, (H, hd, hd)) * 0.02).astype(dtype)
+
+    # lane-aligned FF width (…and divisible by the 16-way model axis)
+    f = max(128, -(-int(cfg.slstm_proj_factor * d) // 128) * 128)
+    return {
+        "w_in": init_dense(ks[0], d, 4 * d, dtype),     # z, i, f, o pre-acts
+        "r_z": rec(ks[1]),
+        "r_i": rec(ks[2]),
+        "r_f": rec(ks[3]),
+        "r_o": rec(ks[4]),
+        "out_norm": init_rmsnorm(d, dtype),
+        # GeGLU feed-forward (proj factor 4/3) folded into the block
+        "ff_up": init_dense(ks[5], d, 2 * f, dtype),
+        "ff_down": init_dense(ks[6], f, d, dtype),
+    }
+
+
+def _slstm_cell(p, H, hd, carry, wx_t):
+    """carry: (c, n, h, m) each (B,H,hd) fp32; wx_t (B,4d) pre-activations."""
+    c, n, h, m = carry
+    B = c.shape[0]
+
+    def recur(r, hh):
+        return jnp.einsum("bhd,hde->bhe", hh, r.astype(jnp.float32))
+
+    z_x, i_x, f_x, o_x = jnp.split(wx_t.astype(jnp.float32), 4, axis=-1)
+    resh = lambda t: t.reshape(B, H, hd)
+    z = jnp.tanh(resh(z_x) + recur(p["r_z"], h))
+    log_i = resh(i_x) + recur(p["r_i"], h)
+    log_f = -jax.nn.softplus(-(resh(f_x) + recur(p["r_f"], h)))  # log σ(f̃)
+    o = jax.nn.sigmoid(resh(o_x) + recur(p["r_o"], h))
+
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = jnp.maximum(f_s * n + i_s, 1e-6)
+    h_new = o * c_new / n_new
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_train(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    B, S, d = x.shape
+    H = cfg.num_heads
+    hd = d // H
+    wx = x @ p["w_in"]  # (B,S,4d)
+
+    def step(carry, wx_t):
+        return _slstm_cell(p, H, hd, carry, wx_t)
+
+    init = tuple(jnp.zeros((B, H, hd), jnp.float32) for _ in range(3)) + (
+        jnp.full((B, H, hd), -1e30, jnp.float32),
+    )
+    _, hs = jax.lax.scan(step, init, wx.swapaxes(0, 1))   # (S,B,H,hd)
+    h = hs.swapaxes(0, 1).reshape(B, S, d).astype(x.dtype)
+    h = rmsnorm(h, p["out_norm"], cfg.norm_eps)
+    up = h @ p["ff_up"]
+    a, b = jnp.split(up, 2, axis=-1)
+    return (jax.nn.gelu(a) * b) @ p["ff_down"]
+
+
+def init_slstm_state(cfg: ModelConfig, B: int, dtype):
+    H = cfg.num_heads
+    hd = cfg.d_model // H
+    z = lambda: jnp.zeros((B, H, hd), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": jnp.full((B, H, hd), -1e30, jnp.float32)}
+
+
+def slstm_decode(p, cfg: ModelConfig, state, x_t: jax.Array):
+    B = x_t.shape[0]
+    H = cfg.num_heads
+    hd = cfg.d_model // H
+    wx = (x_t @ p["w_in"])[:, 0, :]
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    (c, n, h, m), h_out = _slstm_cell(p, H, hd, carry, wx)
+    y = h_out.reshape(B, 1, cfg.d_model).astype(x_t.dtype)
+    y = rmsnorm(y, p["out_norm"], cfg.norm_eps)
+    up = y @ p["ff_up"]
+    a, b = jnp.split(up, 2, axis=-1)
+    out = (jax.nn.gelu(a) * b) @ p["ff_down"]
+    return out, {"c": c, "n": n, "h": h, "m": m}

@@ -1,0 +1,15 @@
+from .analysis import (
+    HW,
+    CollectiveStats,
+    RooflineReport,
+    analyze_compiled,
+    collective_bytes_from_hlo,
+)
+
+__all__ = [
+    "HW",
+    "CollectiveStats",
+    "RooflineReport",
+    "analyze_compiled",
+    "collective_bytes_from_hlo",
+]

@@ -1,0 +1,3 @@
+from .trainer import TrainConfig, Trainer, TrainMetrics
+
+__all__ = ["TrainConfig", "Trainer", "TrainMetrics"]

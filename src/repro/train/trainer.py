@@ -1,0 +1,202 @@
+"""Training loop wiring the MARINA family into LM training.
+
+The trainer runs the *simulation backend* (worker-stacked trees on one device;
+the same algorithm code as the mesh path — see launch/distributed.py for the
+sharded production step). It owns:
+
+* method construction (MARINA / VR-MARINA / PP-MARINA / DIANA / DCGD / EC-SGD /
+  GD) with compressor + stepsize policy,
+* the per-step data plumbing (full-round batches vs b′ minibatches — the
+  Alg. 3 online case),
+* a communication ledger in *bits actually uplinked* (the paper's x-axis in
+  Figs. 1–2),
+* periodic eval loss, checkpointing, metrics history.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, latest_step, save_checkpoint
+from repro.core import (
+    DCGD,
+    Diana,
+    ECSGD,
+    Marina,
+    PPMarina,
+    VRMarina,
+    diana_alpha,
+    make_compressor,
+    tree_dim,
+)
+from repro.data import HeterogeneousLMData, make_prefix_embeddings, worker_batches
+from repro.models import lm_loss
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    method: str = "vr_marina"          # marina|vr_marina|pp_marina|diana|dcgd|ec_sgd|gd
+    compressor: str = "randk"
+    comp_kwargs: dict = dataclasses.field(default_factory=lambda: {"k": 0.01})
+    gamma: float = 0.05
+    p: Optional[float] = None          # None → ζ_Q/d (Cor. 2.1)
+    n_workers: int = 4
+    batch_per_worker: int = 8          # b  (sync rounds / full batches)
+    mb_per_worker: int = 2             # b' (compressed rounds)
+    r_participating: int = 2           # PP-MARINA
+    steps: int = 100
+    seed: int = 0
+    log_every: int = 10
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 0
+    diana_alpha: Optional[float] = None
+
+
+@dataclasses.dataclass
+class TrainMetrics:
+    step: list = dataclasses.field(default_factory=list)
+    loss: list = dataclasses.field(default_factory=list)
+    grad_est_norm: list = dataclasses.field(default_factory=list)
+    bits_cum: list = dataclasses.field(default_factory=list)
+    oracle_cum: list = dataclasses.field(default_factory=list)
+    wall: list = dataclasses.field(default_factory=list)
+
+
+class Trainer:
+    def __init__(
+        self,
+        model_cfg: ModelConfig,
+        train_cfg: TrainConfig,
+        init_params: PyTree,
+        prefix_len: int = 0,
+    ):
+        self.mcfg = model_cfg
+        self.tcfg = train_cfg
+        self.prefix_len = prefix_len
+        self.data = HeterogeneousLMData(
+            n_workers=train_cfg.n_workers,
+            vocab_size=model_cfg.vocab_size,
+            seq_len=128 if model_cfg.num_layers <= 4 else 256,
+            seed=train_cfg.seed,
+        )
+        self._prefix_key = jax.random.PRNGKey(train_cfg.seed + 7)
+
+        def loss_fn(params, batch):
+            tokens = batch["tokens"]
+            prefix = batch.get("prefix")
+            return lm_loss(params, model_cfg, tokens, prefix)
+
+        self.loss_fn = loss_fn
+        grad_fn = jax.grad(loss_fn)
+
+        d = tree_dim(init_params)
+        comp = make_compressor(train_cfg.compressor, **train_cfg.comp_kwargs)
+        p = train_cfg.p if train_cfg.p is not None else comp.default_p(d)
+        self.p = p
+        self.comp = comp
+
+        m = train_cfg.method
+        if m == "marina":
+            self.method = Marina(grad_fn, comp, train_cfg.gamma, p)
+        elif m == "gd":
+            from repro.core import make_gd
+
+            self.method = make_gd(grad_fn, train_cfg.gamma)
+        elif m == "vr_marina":
+            self.method = VRMarina(grad_fn, grad_fn, comp, train_cfg.gamma, p)
+        elif m == "pp_marina":
+            self.method = PPMarina(
+                grad_fn, comp, train_cfg.gamma, p, train_cfg.r_participating
+            )
+        elif m == "diana":
+            alpha = train_cfg.diana_alpha
+            if alpha is None:
+                from repro.core import tree_omega
+
+                alpha = diana_alpha(max(comp.omega(d), 1e-9)) if comp.unbiased else 0.5
+            self.method = Diana(
+                grad_fn, comp, train_cfg.gamma, alpha, train_cfg.n_workers
+            )
+        elif m == "dcgd":
+            self.method = DCGD(grad_fn, comp, train_cfg.gamma, train_cfg.n_workers)
+        elif m == "ec_sgd":
+            self.method = ECSGD(grad_fn, comp, train_cfg.gamma, train_cfg.n_workers)
+        else:
+            raise ValueError(f"unknown method {m!r}")
+
+        self.params0 = init_params
+        self._jitted_step = jax.jit(self._step)
+
+    # ------------------------------------------------------------------
+    def _batches(self, step: int, per_worker: int):
+        toks = worker_batches(self.data, step, per_worker)
+        batch = {"tokens": toks}
+        if self.prefix_len:
+            batch["prefix"] = make_prefix_embeddings(
+                jax.random.fold_in(self._prefix_key, step),
+                self.tcfg.n_workers,
+                per_worker,
+                self.prefix_len,
+                self.mcfg.d_model,
+            )
+        return batch
+
+    def _step(self, state, key, full_b, mb_b):
+        m = self.tcfg.method
+        if m in ("marina", "gd", "pp_marina", "diana", "dcgd", "ec_sgd"):
+            return self.method.step(state, key, full_b)
+        return self.method.step(state, key, full_b, mb_b)
+
+    def eval_loss(self, params, step: int = 10**6) -> float:
+        b = self._batches(step, self.tcfg.batch_per_worker)
+        losses = jax.vmap(self.loss_fn, in_axes=(None, 0))(params, b)
+        return float(jnp.mean(losses))
+
+    # ------------------------------------------------------------------
+    def run(self) -> tuple[PyTree, TrainMetrics]:
+        tc = self.tcfg
+        b0 = self._batches(0, tc.batch_per_worker)
+        if tc.method in ("diana", "dcgd", "ec_sgd"):
+            state = self.method.init(self.params0)
+        else:
+            state = self.method.init(self.params0, b0)
+
+        start = 0
+        if tc.ckpt_dir:
+            s = latest_step(tc.ckpt_dir)
+            if s is not None:
+                state = load_checkpoint(tc.ckpt_dir, s, state)
+                start = s + 1
+
+        hist = TrainMetrics()
+        bits = 0.0
+        oracle = 0.0
+        t0 = time.time()
+        for step in range(start, tc.steps):
+            key = jax.random.fold_in(jax.random.PRNGKey(tc.seed), step)
+            full_b = self._batches(step, tc.batch_per_worker)
+            mb_b = self._batches(10**7 + step, tc.mb_per_worker)
+            state, met = self._jitted_step(state, key, full_b, mb_b)
+            bits += float(met.bits_per_worker)
+            oracle += float(met.oracle_calls)
+
+            if step % tc.log_every == 0 or step == tc.steps - 1:
+                loss = self.eval_loss(state.params, step)
+                hist.step.append(step)
+                hist.loss.append(loss)
+                hist.grad_est_norm.append(float(met.grad_est_norm))
+                hist.bits_cum.append(bits)
+                hist.oracle_cum.append(oracle)
+                hist.wall.append(time.time() - t0)
+            if tc.ckpt_dir and tc.ckpt_every and (step + 1) % tc.ckpt_every == 0:
+                save_checkpoint(tc.ckpt_dir, step, state)
+        return state, hist

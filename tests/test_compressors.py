@@ -1,0 +1,174 @@
+"""Property tests for the quantization operators of Def. 1.1.
+
+Checks the two defining properties (unbiasedness and the ω variance bound),
+the expected-density bound, and mechanical invariants (fixed payload shapes,
+round-trip support).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Identity,
+    NaturalCompression,
+    QSGD,
+    RandK,
+    SharedRandK,
+    TopK,
+    make_compressor,
+    tree_omega,
+    tree_roundtrip,
+)
+from repro.core.compressors import tree_compress, tree_decompress
+
+UNBIASED = [
+    Identity(),
+    RandK(k=1),
+    RandK(k=5),
+    RandK(k=0.25),
+    SharedRandK(k=3),
+    QSGD(s=1),
+    QSGD(s=4),
+    NaturalCompression(),
+]
+
+
+def _mc_moments(comp, x, trials=4000, seed=0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), trials)
+    qs = jax.vmap(lambda k: comp(k, x))(keys)
+    mean = jnp.mean(qs, axis=0)
+    var = jnp.mean(jnp.sum((qs - x[None]) ** 2, axis=-1))
+    return mean, var
+
+
+@pytest.mark.parametrize("comp", UNBIASED, ids=lambda c: f"{c.name}-{getattr(c,'k',getattr(c,'s',''))}")
+def test_unbiased_and_variance_bound(comp):
+    d = 24
+    x = jax.random.normal(jax.random.PRNGKey(7), (d,))
+    mean, var = _mc_moments(comp, x)
+    omega = comp.omega(d)
+    nx2 = float(jnp.sum(x**2))
+    # E[Q(x)] = x  (5 sigma Monte-Carlo tolerance)
+    se = np.sqrt(max(omega, 1e-12) * nx2 / 4000) + 1e-6
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(x), atol=6 * se + 1e-5)
+    # E||Q(x) - x||^2 <= omega ||x||^2 (with MC slack)
+    assert float(var) <= omega * nx2 * 1.15 + 1e-6
+
+
+@pytest.mark.parametrize("comp", UNBIASED, ids=lambda c: c.name)
+def test_expected_density(comp):
+    d = 64
+    x = jax.random.normal(jax.random.PRNGKey(3), (d,))
+    keys = jax.random.split(jax.random.PRNGKey(0), 500)
+    nnz = jax.vmap(lambda k: jnp.sum(comp(k, x) != 0.0))(keys)
+    assert float(jnp.mean(nnz)) <= comp.expected_density(d) + 1e-6
+
+
+def test_randk_exact_support():
+    comp = RandK(k=6)
+    x = jnp.arange(1.0, 33.0)
+    q = comp(jax.random.PRNGKey(0), x)
+    assert int(jnp.sum(q != 0)) == 6
+    # retained values scaled by d/K
+    nz = q[q != 0]
+    orig = x[q != 0]
+    np.testing.assert_allclose(np.asarray(nz), np.asarray(orig) * 32 / 6, rtol=1e-6)
+
+
+def test_topk_is_greedy_and_biased():
+    comp = TopK(k=3)
+    x = jnp.array([0.1, -5.0, 0.2, 3.0, -0.05, 4.0])
+    q = comp(jax.random.PRNGKey(0), x)
+    np.testing.assert_allclose(
+        np.asarray(q), np.asarray([0.0, -5.0, 0.0, 3.0, 0.0, 4.0]), rtol=1e-6
+    )
+    with pytest.raises(ValueError):
+        comp.omega(6)
+    assert comp.delta(6) == pytest.approx(0.5)
+
+
+def test_qsgd_payload_is_int8():
+    comp = QSGD(s=4)
+    pay = comp.compress(jax.random.PRNGKey(0), jax.random.normal(jax.random.PRNGKey(1), (50,)))
+    assert pay["q"].dtype == jnp.int8
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(min_value=2, max_value=257),
+    k=st.integers(min_value=1, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_randk_roundtrip_properties(d, k, seed):
+    """For any shape: support size = min(k,d), unbiased scaling, finite."""
+    comp = RandK(k=k)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (d,))
+    q = comp(jax.random.PRNGKey(seed + 1), x)
+    keff = comp.k_for(d)
+    assert int(jnp.sum(q != 0)) <= keff  # ties if x has zeros
+    assert bool(jnp.all(jnp.isfinite(q)))
+    assert q.shape == x.shape
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_natural_compression_powers_of_two(seed):
+    comp = NaturalCompression()
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * 10
+    q = comp(jax.random.PRNGKey(seed + 1), x)
+    nz = np.asarray(q[q != 0.0])
+    exps = np.log2(np.abs(nz))
+    np.testing.assert_allclose(exps, np.round(exps), atol=1e-5)
+
+
+def test_tree_compress_roundtrip_shapes():
+    tree = {
+        "w": jnp.ones((8, 16)),
+        "b": jnp.arange(10.0),
+        "nested": {"v": jnp.ones((4, 4, 4))},
+    }
+    comp = RandK(k=0.125)
+    out = tree_roundtrip(comp, jax.random.PRNGKey(0), tree)
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        assert a.shape == b.shape
+    # worst leaf: b has d=10, k=round(0.125*10)=1 -> omega = 9
+    assert tree_omega(comp, tree) == pytest.approx(9.0)
+
+
+def test_tree_compress_under_jit_and_vmap():
+    tree = {"w": jnp.ones((6, 6)), "b": jnp.zeros((5,))}
+    comp = RandK(k=2)
+
+    @jax.jit
+    def roundtrip(key, t):
+        return tree_decompress(comp, tree_compress(comp, key, t), t)
+
+    out = roundtrip(jax.random.PRNGKey(0), tree)
+    assert out["w"].shape == (6, 6)
+
+    keys = jax.random.split(jax.random.PRNGKey(1), 4)
+    stacked = jax.tree.map(lambda x: jnp.stack([x] * 4), tree)
+    outs = jax.vmap(roundtrip)(keys, stacked)
+    assert outs["w"].shape == (4, 6, 6)
+
+
+def test_registry():
+    assert make_compressor("randk", k=3).k == 3
+    assert make_compressor("identity").omega(10) == 0.0
+    assert make_compressor("qsgd", s=2).s == 2
+    with pytest.raises(ValueError):
+        make_compressor("nope")
+
+
+def test_shared_randk_same_mask_across_workers():
+    comp = SharedRandK(k=4)
+    key = jax.random.PRNGKey(0)
+    x1 = jax.random.normal(jax.random.PRNGKey(1), (32,))
+    x2 = jax.random.normal(jax.random.PRNGKey(2), (32,))
+    q1 = comp(key, x1)
+    q2 = comp(key, x2)
+    np.testing.assert_array_equal(np.asarray(q1 != 0), np.asarray(q2 != 0))

@@ -1,0 +1,78 @@
+"""Roofline analyzer unit tests: HLO collective parsing with ring-algorithm
+byte accounting, shape parsing, and term arithmetic."""
+
+import numpy as np
+import pytest
+
+from repro.roofline import HW, RooflineReport, CollectiveStats, collective_bytes_from_hlo
+
+
+HLO = """
+HloModule jit_step
+%fused (x: bf16[128,256]) -> bf16[128,256] {
+  %ag = bf16[16,128,256] all-gather(%x), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, dimensions={0}
+  %ar = f32[1024] all-reduce(%y), replica_groups=[32,16]<=[512], to_apply=%add
+  %rs = f32[64] reduce-scatter(%z), replica_groups={{0,1,2,3}}, dimensions={0}
+  %a2a = bf16[8,32] all-to-all(%w), replica_groups={{0,1,2,3,4,5,6,7}}
+  %cp = f32[100] collective-permute(%v), source_target_pairs={{0,1}}
+  %ag2 = (bf16[2,4], bf16[2,4]) all-gather-start(%q), replica_groups={{0,1}}
+  %agd = bf16[2,4] all-gather-done(%ag2)
+}
+"""
+
+
+def test_collective_parsing_counts_and_bytes():
+    st = collective_bytes_from_hlo(HLO, 512)
+    assert st.counts["all-gather"] == 2   # ag + ag2 (start form), done skipped
+    assert st.counts["all-reduce"] == 1
+    assert st.counts["reduce-scatter"] == 1
+    assert st.counts["all-to-all"] == 1
+    assert st.counts["collective-permute"] == 1
+
+    ag = 16 * 128 * 256 * 2          # bf16 output
+    want_ag = ag * 15 / 16
+    ar = 1024 * 4
+    want_ar = 2 * ar * 15 / 16       # group size 16 from [32,16] iota form
+    rs = 64 * 4
+    want_rs = rs * 3
+    a2a = 8 * 32 * 2 * 7 / 8
+    cp = 100 * 4
+    ag2 = 2 * (2 * 4 * 2) * 1 / 2    # tuple of two bf16[2,4], group 2
+    total = want_ag + want_ar + want_rs + a2a + cp + ag2
+    np.testing.assert_allclose(st.per_device_bytes, total, rtol=1e-6)
+
+
+def test_group_size_defaults_to_world():
+    st = collective_bytes_from_hlo(
+        "%ar = f32[10] all-reduce(%x), to_apply=%add\n", 8
+    )
+    np.testing.assert_allclose(st.per_device_bytes, 2 * 40 * 7 / 8)
+
+
+def test_report_terms_and_dominant():
+    rep = RooflineReport(
+        flops_per_device=197e12,       # exactly 1s of compute
+        bytes_per_device=819e9 * 2,    # 2s of memory
+        collective=CollectiveStats(per_device_bytes=50e9 * 3),  # 3s
+        n_devices=256,
+        model_flops_total=197e12 * 256 * 0.5,
+    )
+    assert rep.compute_s == pytest.approx(1.0)
+    assert rep.memory_s == pytest.approx(2.0)
+    assert rep.collective_s == pytest.approx(3.0)
+    assert rep.dominant == "collective"
+    assert rep.useful_ratio == pytest.approx(0.5)
+    assert rep.analytic_compute_s == pytest.approx(0.5)
+
+
+def test_analytic_compute_can_dominate():
+    """Scan-heavy programs under-report HLO flops; the analytic term guards
+    the dominant-term call (DESIGN/EXPERIMENTS note)."""
+    rep = RooflineReport(
+        flops_per_device=1e9,         # undercounted
+        bytes_per_device=819e9 * 0.1,
+        collective=CollectiveStats(per_device_bytes=50e9 * 0.05),
+        n_devices=2,
+        model_flops_total=197e12 * 2 * 5.0,
+    )
+    assert rep.dominant == "compute"
