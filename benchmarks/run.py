@@ -8,6 +8,9 @@
     Fig. 2   → bench_lm                (LM training proxy for ResNet18/CIFAR100:
                loss reached per transmitted bit)
     §Kernels → bench_kernels           (compression kernel wall time vs jnp ref)
+    §Perf    → bench_compression       (per-leaf tree path vs fused flat engine,
+               µs/round at d ∈ {1e5, 1e6}, n ∈ {4, 16}; writes
+               BENCH_compression.json for the perf trajectory)
 
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call = step wall time;
 derived = the figure-of-merit for that table).
@@ -18,6 +21,8 @@ Run: PYTHONPATH=src python -m benchmarks.run [--quick]
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -234,6 +239,98 @@ def bench_kernels(quick=False):
     emit("kernels/randk_ref_jnp", us, f"d={d}")
 
 
+def _synthetic_grad_tree(key, d):
+    """Multi-leaf gradient-like tree with Σ sizes = d (ragged on purpose)."""
+    sizes = [d // 2, d // 4, d // 8, d - d // 2 - d // 4 - d // 8]
+    ks = jax.random.split(key, len(sizes))
+    tree = {}
+    for i, (s, k) in enumerate(zip(sizes, ks)):
+        rows = max(1, s // 512)
+        cols = s // rows
+        lead = s - rows * cols
+        tree[f"w{i}"] = jax.random.normal(k, (rows, cols))
+        if lead:
+            tree[f"b{i}"] = jax.random.normal(jax.random.fold_in(k, 1), (lead,))
+    return tree
+
+
+def bench_compression(quick=False):
+    """Fused flat engine vs per-leaf tree path: one full compressed-round
+    aggregate (compress all n workers + server mean) at d ∈ {1e5, 1e6},
+    n ∈ {4, 16}. Writes BENCH_compression.json (consumed by
+    scripts/update_perf.py) so the perf trajectory is tracked across PRs."""
+    from repro.core import RandK, make_engine
+    from repro.core.marina import _compress_workers, _decompress_mean
+    from repro.core.compressors import tree_dim
+
+    reps = 3 if quick else 10
+    kb, block = 8, 1024
+    entries = []
+    for d in (100_000, 1_000_000):
+        tree = _synthetic_grad_tree(jax.random.PRNGKey(0), d)
+        assert tree_dim(tree) == d
+        eng = make_engine(tree, kb=kb, block=block)
+        # matched budget: RandK keeps ~1/128 of each leaf = nblk·kb of d
+        comp = RandK(k=kb / block)
+        for n in (4, 16):
+            diffs = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (n, *x.shape)) * 1.0, tree
+            )
+            key = jax.random.PRNGKey(1)
+
+            @jax.jit
+            def per_leaf_round(key, diffs):
+                payloads = _compress_workers(comp, key, diffs, n)
+                return _decompress_mean(comp, payloads, tree, n)
+
+            @jax.jit
+            def flat_round(key, diffs):
+                return eng.fused_delta(key, diffs, n)
+
+            def timeit(fn):
+                jax.block_until_ready(fn(key, diffs))  # compile
+                t0 = time.time()
+                for _ in range(reps):
+                    jax.block_until_ready(fn(key, diffs))
+                return (time.time() - t0) / reps * 1e6
+
+            us_tree = timeit(per_leaf_round)
+            us_flat = timeit(flat_round)
+            K = eng.layout.nblk * kb
+            entry = {
+                "d": d,
+                "n": n,
+                "per_leaf_us": us_tree,
+                "flat_fused_us": us_flat,
+                "speedup": us_tree / us_flat,
+                # aggregation-path peak floats (analytic): the tree path
+                # materializes all n dense worker trees; the flat path holds
+                # the n ζ-sized payloads + one dense accumulator.
+                "per_leaf_agg_floats": n * d,
+                "flat_agg_floats": n * K * 2 + eng.layout.padded,
+            }
+            entries.append(entry)
+            emit(
+                f"compression/d{d}_n{n}", us_flat,
+                f"per_leaf_us={us_tree:.0f};speedup={entry['speedup']:.1f}x",
+            )
+
+    out = {
+        "block": block,
+        "kb": kb,
+        "backend": "ref(cpu)" if jax.default_backend() != "tpu" else "pallas",
+        "reps": reps,
+        "quick": bool(quick),   # quick numbers are noisy — flagged so the
+                                # rendered perf log never passes them off as
+                                # the official trajectory
+        "entries": entries,
+    }
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_compression.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {os.path.normpath(path)}", file=sys.stderr)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -247,6 +344,7 @@ def main():
         "pp": bench_pp,
         "lm": bench_lm,
         "kernels": bench_kernels,
+        "compression": bench_compression,
     }
     print("name,us_per_call,derived")
     for name, fn in benches.items():

@@ -53,6 +53,10 @@ def main():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--steps", type=int, default=None)
     ap.add_argument("--method", default="vr_marina")
+    ap.add_argument(
+        "--compressor", default="randk",
+        help="randk (per-leaf tree path) or block_randk (fused flat engine)",
+    )
     ap.add_argument("--k-frac", type=float, default=0.02)
     ap.add_argument("--gamma", type=float, default=0.25)
     ap.add_argument("--ckpt-dir", default=None)
@@ -60,10 +64,16 @@ def main():
 
     cfg = model_smoke() if args.smoke else model_100m()
     steps = args.steps or (30 if args.smoke else 300)
+    # block_randk's budget is kb coords per 1024-block (kb/1024 ≈ k_frac)
+    comp_kwargs = (
+        {"kb": max(1, round(args.k_frac * 1024))}
+        if args.compressor in ("block_randk", "flat_randk")
+        else {"k": args.k_frac}
+    )
     tcfg = TrainConfig(
         method=args.method,
-        compressor="randk",
-        comp_kwargs={"k": args.k_frac},
+        compressor=args.compressor,
+        comp_kwargs=comp_kwargs,
         gamma=args.gamma,
         n_workers=4,
         batch_per_worker=8 if args.smoke else 16,

@@ -1,5 +1,7 @@
 """Render the §Perf hillclimbing log in EXPERIMENTS.md from
-experiments/perf/*.json (+ baselines in experiments/dryrun/).
+experiments/perf/*.json (+ baselines in experiments/dryrun/), and the
+compression-engine trajectory from BENCH_compression.json
+(written by `python -m benchmarks.run --only compression`).
 
 Usage: python scripts/update_perf.py
 """
@@ -13,6 +15,18 @@ ROOT = os.path.join(os.path.dirname(__file__), "..")
 PERF = os.path.join(ROOT, "experiments", "perf")
 DRY = os.path.join(ROOT, "experiments", "dryrun")
 EXP = os.path.join(ROOT, "EXPERIMENTS.md")
+BENCH_COMPRESSION = os.path.join(ROOT, "BENCH_compression.json")
+
+EXP_SKELETON = """# EXPERIMENTS
+
+## Compression engine
+
+<!-- COMPRESSION_BENCH -->
+
+## Perf log
+
+<!-- PERF_LOG -->
+"""
 
 # hypothesis text per variant (mirrors repro/launch/perf.py VARIANTS)
 HYPOTHESES = {
@@ -61,6 +75,41 @@ def fmt_step(s):
     return (
         f"comp {s['compute_s']*1e3:.1f} / mem {s['memory_s']*1e3:.1f} / "
         f"coll {s['collective_s']*1e3:.1f} ms (dom {s['dominant']})"
+    )
+
+
+def render_compression_bench():
+    """BENCH_compression.json → markdown table (per-leaf vs flat-fused)."""
+    if not os.path.exists(BENCH_COMPRESSION):
+        return "(no compression benchmark recorded — run `python -m benchmarks.run --only compression`)"
+    r = load(BENCH_COMPRESSION)
+    quick = " — ⚠ QUICK MODE (noisy, re-run without --quick)" if r.get("quick") else ""
+    lines = [
+        f"Fused flat-buffer engine vs per-leaf tree path "
+        f"(B={r['block']}, kb={r['kb']}, backend={r['backend']}, "
+        f"reps={r.get('reps', '?')}){quick}:",
+        "",
+        "| d | n | per-leaf µs | flat-fused µs | speedup | agg floats (tree → flat) |",
+        "|---|---|---|---|---|---|",
+    ]
+    for e in r["entries"]:
+        lines.append(
+            f"| {e['d']:.0e} | {e['n']} | {e['per_leaf_us']:.0f} "
+            f"| {e['flat_fused_us']:.0f} | **{e['speedup']:.1f}×** "
+            f"| {e['per_leaf_agg_floats']:.1e} → {e['flat_agg_floats']:.1e} |"
+        )
+    lines.append("")
+    lines.append(
+        "Aggregation-path peak memory no longer scales with n·d: the flat "
+        "path holds n ζ-sized payloads plus one dense accumulator."
+    )
+    return "\n".join(lines)
+
+
+def _splice(text, marker, body):
+    pattern = re.compile(re.escape(marker) + r".*?(?=\n## |\Z)", re.DOTALL)
+    return pattern.sub(
+        (marker + "\n\n" + body + "\n").replace("\\", "\\\\"), text, count=1
     )
 
 
@@ -115,16 +164,18 @@ def main():
         entries.append("\n".join(lines))
 
     body = "\n".join(entries) if entries else "(no perf runs recorded yet)"
-    with open(EXP) as f:
-        text = f.read()
-    marker = "<!-- PERF_LOG -->"
-    pattern = re.compile(re.escape(marker) + r".*?(?=\n## |\Z)", re.DOTALL)
-    text = pattern.sub(
-        (marker + "\n\n" + body + "\n").replace("\\", "\\\\"), text, count=1
-    )
+    if os.path.exists(EXP):
+        with open(EXP) as f:
+            text = f.read()
+    else:
+        text = EXP_SKELETON
+    if "<!-- COMPRESSION_BENCH -->" not in text:
+        text += "\n## Compression engine\n\n<!-- COMPRESSION_BENCH -->\n"
+    text = _splice(text, "<!-- PERF_LOG -->", body)
+    text = _splice(text, "<!-- COMPRESSION_BENCH -->", render_compression_bench())
     with open(EXP, "w") as f:
         f.write(text)
-    print(f"rendered {len(entries)} perf entries")
+    print(f"rendered {len(entries)} perf entries + compression bench")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,7 @@
 """repro.core — the paper's contribution: MARINA-family optimizers + compression."""
 
 from .compressors import (
+    BlockRandK,
     Compressor,
     Identity,
     NaturalCompression,
@@ -16,6 +17,7 @@ from .compressors import (
     tree_payload_bits,
     tree_roundtrip,
 )
+from .flat import FlatEngine, FlatLayout, make_engine, make_layout, pack, pack_stacked, unpack
 from .marina import Marina, MarinaState, PPMarina, StepMetrics, VRMarina, make_gd
 from .baselines import DCGD, Diana, ECSGD, VRDiana
 from .stepsize import (
@@ -30,7 +32,9 @@ from .stepsize import (
 )
 
 __all__ = [
-    "Compressor", "Identity", "NaturalCompression", "QSGD", "RandK",
+    "BlockRandK", "Compressor", "FlatEngine", "FlatLayout", "Identity",
+    "make_engine", "make_layout", "pack", "pack_stacked", "unpack",
+    "NaturalCompression", "QSGD", "RandK",
     "SharedRandK", "TopK", "make_compressor", "tree_compress",
     "tree_decompress", "tree_dim", "tree_omega", "tree_payload_bits",
     "tree_roundtrip", "Marina", "MarinaState", "PPMarina", "StepMetrics",

@@ -150,6 +150,68 @@ class RandK(Compressor):
 
 
 @dataclasses.dataclass(frozen=True)
+class BlockRandK(Compressor):
+    """Seeded blockwise RandK — the wire format of the flat engine (DESIGN.md §4).
+
+    The vector is viewed as ``(nblk, block)`` zero-padded blocks; ``kb``
+    coordinates per block are drawn *with replacement* by the murmur3 counter
+    RNG shared with the Pallas kernels, and scaled by ``block/kb``. The payload
+    is ``{values, seed}`` — indices are regenerated from the 4-byte seed at the
+    server, so the wire cost is 32 + 32·K bits instead of RandK's 64·K.
+
+    ω/ζ_Q (DESIGN.md §4.3): E[Q(x)] = x and
+    E‖Q(x)−x‖² = (B/kb)(1−1/B)‖x‖² ⇒ ω = block/kb;
+    ζ_Q = nblk·B·(1−(1−1/B)^kb) expected distinct coordinates.
+
+    Used standalone it is a drop-in Def-1.1 quantization; used through
+    :class:`repro.core.flat.FlatEngine` the same sampler runs fused over the
+    packed gradient buffer without per-leaf Python loops.
+    """
+
+    kb: int = 8
+    block: int = 1024
+    name: str = dataclasses.field(default="block_randk", init=False)
+
+    def __post_init__(self):
+        assert self.block & (self.block - 1) == 0, "block must be a power of two"
+        assert 1 <= self.kb <= self.block
+
+    def _nblk(self, d: int) -> int:
+        return max(1, -(-d // self.block))
+
+    def omega(self, d: int) -> float:
+        return self.block / self.kb
+
+    def expected_density(self, d: int) -> float:
+        per_block = self.block * (1.0 - (1.0 - 1.0 / self.block) ** self.kb)
+        return float(min(d, self._nblk(d) * per_block))
+
+    def payload_bits(self, d: int) -> float:
+        from . import flat
+
+        return flat.seeded_payload_bits(self._nblk(d), self.kb)
+
+    def compress(self, key, x):
+        from . import flat
+        from repro.kernels import ops, ref
+
+        x2d = ops.pad_to_blocks(x, self.block)
+        seed = flat.key_to_seed(key)
+        vals, _ = ref.randk_seeded_ref(x2d, seed, self.kb, self.block / self.kb)
+        return {"values": vals, "seed": seed}
+
+    def decompress(self, payload, d):
+        from . import flat
+        from repro.kernels import ref
+
+        vals = payload["values"]
+        nblk = vals.shape[0]
+        offs = flat.seeded_offsets(payload["seed"], nblk, self.block, self.kb)
+        dense = ref.scatter_accum_ref(vals[None], offs[None], self.block)
+        return dense.reshape(-1)[:d].astype(vals.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
 class SharedRandK(RandK):
     """RandK where all workers share the index key for a given round.
 
@@ -297,9 +359,12 @@ class NaturalCompression(Compressor):
 
 
 def tree_compress(comp: Compressor, key: jax.Array, tree: PyTree) -> PyTree:
-    """Compress each leaf independently with a per-leaf key (budget ∝ leaf size)."""
+    """Compress each leaf independently with a per-leaf key (budget ∝ leaf size).
+
+    Single-leaf trees consume the key directly (no split) so the flat engine
+    can mirror this path's random stream exactly (DESIGN.md §4.2)."""
     leaves, treedef = jax.tree.flatten(tree)
-    keys = jax.random.split(key, len(leaves))
+    keys = [key] if len(leaves) == 1 else list(jax.random.split(key, len(leaves)))
     payloads = [comp.compress(k, leaf.reshape(-1)) for k, leaf in zip(keys, leaves)]
     return jax.tree.unflatten(treedef, payloads)
 
@@ -344,6 +409,8 @@ def make_compressor(name: str, **kw) -> Compressor:
         return Identity()
     if name == "randk":
         return RandK(**kw)
+    if name in ("block_randk", "flat_randk"):
+        return BlockRandK(**kw)
     if name == "shared_randk":
         return SharedRandK(**kw)
     if name == "topk":

@@ -1,0 +1,334 @@
+"""Flat-buffer compression engine (DESIGN.md §4).
+
+The per-leaf path in :mod:`repro.core.compressors` compresses a gradient
+pytree leaf by leaf in a Python loop and the server densifies every worker
+payload to an ``(n, d)`` tree before averaging — O(n·d) memory and FLOPs for
+a round whose whole point is touching only ζ_Q ≪ d coordinates. This module
+replaces that with a single packed representation:
+
+* :class:`FlatLayout` — a *static* description of how a pytree maps onto one
+  zero-padded ``(nblk, B)`` block buffer (B lane-aligned, default 1024).
+  Computed once per parameter structure; pack/unpack are pure reshapes +
+  one concatenate/slice, jit/vmap/donate friendly.
+* :class:`FlatEngine` — the fused compress → uplink → decompress-mean
+  pipeline over that buffer. Per-worker payloads are ``(nblk, kb)`` seeded
+  RandK values whose indices are *regenerated from the seed* on the server
+  (wire format: one uint32 seed + K values, DESIGN.md §4.2); aggregation is a
+  scatter-accumulate into a single ``(nblk, B)`` accumulator — the ``(n, d)``
+  dense worker trees are never materialized, so the round's cost scales with
+  ζ_Q, not n·d.
+
+Backends (DESIGN.md §5): ``pallas`` dispatches to the TPU kernels in
+:mod:`repro.kernels.randk` (``randk_seeded`` / ``scatter_accum``);
+``ref`` is the bit-exact pure-jnp oracle from :mod:`repro.kernels.ref`
+(the two share the murmur3 counter RNG, so payloads are identical bit for
+bit); ``pallas_interpret`` runs the kernels in interpret mode for CPU
+validation. ``auto`` picks ``pallas`` on TPU and ``ref`` elsewhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+DEFAULT_BLOCK = 1024  # 8 × 128 VMEM tile width; must be a power of two
+
+BACKENDS = ("auto", "pallas", "pallas_interpret", "ref")
+
+
+def resolve_backend(backend: str = "auto") -> str:
+    """'auto' → 'pallas' on TPU, bit-exact 'ref' (pure jnp) elsewhere."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}, expected one of {BACKENDS}")
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return backend
+
+
+# ---------------------------------------------------------------------------
+# Static layout: pytree ↔ (nblk, B) padded block buffer
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """Where one leaf lives inside the flat buffer (static metadata)."""
+
+    offset: int
+    size: int
+    shape: tuple
+    dtype: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatLayout:
+    """Precomputed static layout of a pytree over a padded block buffer.
+
+    Leaves are concatenated in ``jax.tree.flatten`` order at offsets
+    ``slots[i].offset``; the tail ``padded - d`` entries are structural zeros
+    (DESIGN.md §4.1). Hashable/static: safe to close over in jitted functions.
+    """
+
+    treedef: Any
+    slots: tuple
+    d: int          # true dimension Σ leaf sizes
+    block: int      # B, lane-aligned power of two
+    nblk: int       # number of blocks = ceil(d / B)
+    dtype: Any      # buffer compute dtype (leaves are cast in/out)
+
+    @property
+    def padded(self) -> int:
+        return self.nblk * self.block
+
+
+def make_layout(
+    tree: PyTree, block: int = DEFAULT_BLOCK, dtype=jnp.float32
+) -> FlatLayout:
+    """Build the static layout for ``tree`` (shapes/dtypes only are read)."""
+    assert block > 0 and block & (block - 1) == 0, "block must be a power of two"
+    leaves, treedef = jax.tree.flatten(tree)
+    slots = []
+    off = 0
+    for leaf in leaves:
+        size = int(np.prod(leaf.shape)) if leaf.shape else 1
+        slots.append(LeafSlot(off, size, tuple(leaf.shape), leaf.dtype))
+        off += size
+    d = off
+    nblk = max(1, -(-d // block))
+    return FlatLayout(
+        treedef=treedef, slots=tuple(slots), d=d, block=block, nblk=nblk,
+        dtype=dtype,
+    )
+
+
+def pack(layout: FlatLayout, tree: PyTree) -> jax.Array:
+    """Pytree → ``(nblk, B)`` padded buffer (one concatenate, zero pad)."""
+    leaves = layout.treedef.flatten_up_to(tree)
+    flat = jnp.concatenate(
+        [jnp.ravel(l).astype(layout.dtype) for l in leaves]
+    )
+    pad = layout.padded - layout.d
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(layout.nblk, layout.block)
+
+
+def unpack(layout: FlatLayout, buf: jax.Array) -> PyTree:
+    """Inverse of :func:`pack`; restores leaf shapes and dtypes."""
+    flat = buf.reshape(-1)
+    outs = [
+        flat[s.offset : s.offset + s.size].reshape(s.shape).astype(s.dtype)
+        for s in layout.slots
+    ]
+    return jax.tree.unflatten(layout.treedef, outs)
+
+
+def pack_stacked(layout: FlatLayout, tree: PyTree) -> jax.Array:
+    """Worker-stacked pytree (leading axis n) → ``(n, nblk, B)``."""
+    return jax.vmap(lambda t: pack(layout, t))(tree)
+
+
+# ---------------------------------------------------------------------------
+# Backend-switched block primitives (shared with launch/distributed.py)
+# ---------------------------------------------------------------------------
+
+
+def seeded_offsets(seed: jax.Array, nblk: int, block: int, kb: int) -> jax.Array:
+    """(nblk, kb) int32 offsets in [0, block) from the murmur3 counter RNG.
+
+    Bit-identical to what the ``randk_seeded`` kernel samples on-chip for the
+    same ``seed`` (the server regenerates indices from the 4-byte seed instead
+    of receiving them — DESIGN.md §4.2).
+    """
+    from repro.kernels import ref
+
+    ctr = (
+        jnp.arange(kb, dtype=jnp.uint32)[None, :]
+        + (jnp.arange(nblk, dtype=jnp.uint32) * kb)[:, None]
+    )
+    bits = ref.murmur_bits_ref(seed.astype(jnp.uint32), ctr)
+    return (bits & jnp.uint32(block - 1)).astype(jnp.int32)
+
+
+def block_compress(
+    x2d: jax.Array, seed: jax.Array, kb: int, scale: float, backend: str = "auto"
+):
+    """Seeded RandK over a block buffer: (nblk, B) → values/offsets (nblk, kb)."""
+    backend = resolve_backend(backend)
+    if backend == "ref":
+        from repro.kernels import ref
+
+        return ref.randk_seeded_ref(x2d, seed.astype(jnp.uint32), kb, scale)
+    from repro.kernels.randk import randk_seeded
+
+    return randk_seeded(
+        x2d, seed, kb, scale, interpret=(backend == "pallas_interpret")
+    )
+
+
+def block_compress_workers(
+    x3d: jax.Array, seeds: jax.Array, kb: int, scale: float, backend: str = "auto"
+):
+    """Per-worker seeded RandK: (n, nblk, B) + (n,) seeds → (n, nblk, kb) ×2."""
+    backend = resolve_backend(backend)
+    if backend == "ref":
+        from repro.kernels import ref
+
+        return ref.randk_seeded_workers_ref(
+            x3d, seeds.astype(jnp.uint32), kb, scale
+        )
+    from repro.kernels.randk import randk_seeded_workers
+
+    return randk_seeded_workers(
+        x3d, seeds, kb, scale, interpret=(backend == "pallas_interpret")
+    )
+
+
+def block_gather(
+    x2d: jax.Array, offsets: jax.Array, scale: float, backend: str = "auto"
+) -> jax.Array:
+    """Gather+scale with host-supplied offsets: (nblk, B), (nblk, kb) → (nblk, kb)."""
+    backend = resolve_backend(backend)
+    if backend == "ref":
+        from repro.kernels import ref
+
+        return ref.randk_block_compress_ref(x2d, offsets, scale)
+    from repro.kernels.randk import randk_gather
+
+    return randk_gather(
+        x2d, offsets, scale, interpret=(backend == "pallas_interpret")
+    )
+
+
+def block_scatter_mean(
+    values: jax.Array, offsets: jax.Array, block: int, backend: str = "auto"
+) -> jax.Array:
+    """Scatter-accumulate mean over workers: (n, nblk, kb) ×2 → (nblk, block).
+
+    The only dense buffer is the single (nblk, block) accumulator — the n
+    worker payloads stay ζ-sized (never densified per worker).
+    """
+    backend = resolve_backend(backend)
+    if backend == "ref":
+        from repro.kernels import ref
+
+        return ref.scatter_accum_ref(values, offsets, block)
+    from repro.kernels.randk import scatter_accum
+
+    return scatter_accum(
+        values, offsets, block, interpret=(backend == "pallas_interpret")
+    )
+
+
+def key_to_seed(key: jax.Array) -> jax.Array:
+    """PRNG key → uint32 seed for the counter-based kernel RNG."""
+    return jax.random.bits(key, dtype=jnp.uint32)
+
+
+def seeded_payload_bits(nblk: int, kb: int) -> float:
+    """Wire bits of one seeded-RandK payload: uint32 seed + K f32 values
+    (indices are regenerated from the seed server-side — DESIGN.md §4.2).
+    Single source of truth for FlatEngine and BlockRandK."""
+    return 32.0 + 32.0 * nblk * kb
+
+
+# ---------------------------------------------------------------------------
+# The fused engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatEngine:
+    """Fused compressed-round pipeline over a packed flat buffer.
+
+    One engine instance is built per parameter structure (the layout is
+    static) and handed to the MARINA-family optimizers; their compressed
+    branch then runs
+
+        pack (n workers) → seeded RandK (kb coords / B-block / worker)
+        → scatter-accumulate mean → unpack
+
+    with every stage dispatched through the kernel backend switch. Worker w's
+    seed is derived from the round key exactly like the per-leaf tree path
+    derives its worker keys (``jax.random.split``), and its counter stream
+    restarts at 0 — masks are independent across workers (the 1/n variance
+    averaging of Thm 2.1) and, on block-aligned single-leaf layouts, the flat
+    path reproduces the tree path's randomness bit for bit (the trajectory
+    equivalence test in tests/test_flat.py).
+
+    ω/ζ_Q bookkeeping (DESIGN.md §4.3): sampling is with replacement, so
+    E[Q(x)] = x with E‖Q(x)−x‖² = (B/kb)(1−1/B)‖x‖² ≤ ω‖x‖², ω = B/kb.
+    """
+
+    layout: FlatLayout
+    kb: int = 8
+    backend: str = "auto"
+
+    def worker_seeds(self, key: jax.Array, n: int) -> jax.Array:
+        """(n,) uint32 seeds, mirroring the tree path's per-worker key split."""
+        return jax.vmap(key_to_seed)(jax.random.split(key, n))
+
+    @property
+    def scale(self) -> float:
+        return self.layout.block / self.kb
+
+    @property
+    def omega(self) -> float:
+        return self.layout.block / self.kb
+
+    def payload_bits(self) -> float:
+        """Wire bits per worker per compressed round."""
+        return seeded_payload_bits(self.layout.nblk, self.kb)
+
+    # -- stages -------------------------------------------------------------
+    def compress_stacked(self, seeds: jax.Array, bufs: jax.Array):
+        """(n, nblk, B) + (n,) seeds → per-worker payloads (values, offsets).
+
+        Workers are folded into the kernel grid (one pallas_call over n·nblk
+        blocks) rather than vmapped; per-worker seeds live in SMEM.
+        """
+        return block_compress_workers(
+            bufs, seeds, self.kb, self.scale, self.backend
+        )
+
+    def decompress_mean(self, vals: jax.Array, offs: jax.Array) -> jax.Array:
+        """(n, nblk, kb) payloads → (nblk, B) dense mean over workers."""
+        return block_scatter_mean(vals, offs, self.layout.block, self.backend)
+
+    # -- the hot path -------------------------------------------------------
+    def fused_delta(self, key: jax.Array, diffs: PyTree, n: int) -> PyTree:
+        """Compressed-round aggregate: worker-stacked diff tree → mean Q tree.
+
+        Equivalent to decompressing every worker payload and averaging, but
+        the per-worker dense (d,) trees are never built.
+        """
+        bufs = pack_stacked(self.layout, diffs)
+        vals, offs = self.compress_stacked(self.worker_seeds(key, n), bufs)
+        dense = self.decompress_mean(vals, offs)
+        return unpack(self.layout, dense)
+
+    # -- test/validation helpers -------------------------------------------
+    def roundtrip_worker(self, key: jax.Array, tree: PyTree) -> PyTree:
+        """Single-worker Q(x) through the full fused pipeline (for tests)."""
+        stacked = jax.tree.map(lambda x: x[None], tree)
+        return self.fused_delta(key, stacked, 1)
+
+
+def make_engine(
+    params: PyTree,
+    kb: int = 8,
+    block: int = DEFAULT_BLOCK,
+    backend: str = "auto",
+    dtype=jnp.float32,
+) -> FlatEngine:
+    """Engine for a parameter tree: layout once, fused pipeline forever."""
+    return FlatEngine(
+        layout=make_layout(params, block=block, dtype=dtype), kb=kb,
+        backend=backend,
+    )

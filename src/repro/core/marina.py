@@ -39,6 +39,7 @@ from .compressors import (
     tree_dim,
     tree_payload_bits,
 )
+from .flat import FlatEngine
 from .tree_util import (
     tree_axpy,
     tree_mean_axis0,
@@ -84,9 +85,40 @@ def _compress_workers(
 
 
 def _decompress_mean(comp: Compressor, payloads: PyTree, like: PyTree, n: int) -> PyTree:
-    """Server aggregation: decompress all n payloads, average (Alg. 1 line 10)."""
+    """Server aggregation: decompress all n payloads, average (Alg. 1 line 10).
+
+    Per-leaf reference path: densifies all n payloads to an (n, d) tree before
+    averaging. The production compressed round goes through the flat engine
+    (:func:`_compressed_delta`), which aggregates by scatter-accumulate and
+    never materializes the (n, d) trees (DESIGN.md §4)."""
     dense = jax.vmap(lambda p: tree_decompress(comp, p, like))(payloads)
     return tree_mean_axis0(dense)
+
+
+def _compressed_delta(
+    comp: Compressor,
+    engine: "FlatEngine | None",
+    key: jax.Array,
+    diffs: PyTree,
+    like: PyTree,
+    n: int,
+) -> PyTree:
+    """One compressed uplink round: (1/n) Σ_i Q(Δ_i).
+
+    With an engine: the fused flat-buffer pipeline (pack → seeded RandK →
+    scatter-accumulate mean → unpack), cost ∝ ζ_Q. Without: the per-leaf
+    tree path (reference semantics, cost ∝ n·d)."""
+    if engine is not None:
+        return engine.fused_delta(key, diffs, n)
+    payloads = _compress_workers(comp, key, diffs, n)
+    return _decompress_mean(comp, payloads, like, n)
+
+
+def _round_bits(comp: Compressor, engine: "FlatEngine | None", like: PyTree):
+    """Per-worker uplink bits of one compressed round (the paper's ζ_Q axis)."""
+    if engine is not None:
+        return jnp.asarray(engine.payload_bits())
+    return jnp.asarray(tree_payload_bits(comp, like))
 
 
 # ---------------------------------------------------------------------------
@@ -104,6 +136,7 @@ class Marina:
     compressor: Compressor
     gamma: float
     p: float
+    engine: FlatEngine | None = None  # fused flat path when set (DESIGN.md §4)
 
     def init(self, params: PyTree, batches: PyTree) -> MarinaState:
         g0 = tree_mean_axis0(_per_worker_grads(self.grad_fn, params, batches))
@@ -125,15 +158,16 @@ class Marina:
             g_new = _per_worker_grads(self.grad_fn, x_new, batches)
             g_prev = _per_worker_grads(self.grad_fn, x_old, batches)
             diffs = tree_sub(g_new, g_prev)
-            payloads = _compress_workers(self.compressor, k_q, diffs, n)
-            delta = _decompress_mean(self.compressor, payloads, state.params, n)
+            delta = _compressed_delta(
+                self.compressor, self.engine, k_q, diffs, state.params, n
+            )
             return jax.tree.map(jnp.add, state.g, delta)
 
         g_next = jax.lax.cond(c_k, sync_branch, compressed_branch, None)
 
         d = tree_dim(state.params)
         bits_dense = jnp.asarray(32.0 * d)
-        bits_q = jnp.asarray(tree_payload_bits(self.compressor, state.params))
+        bits_q = _round_bits(self.compressor, self.engine, state.params)
         metrics = StepMetrics(
             grad_est_norm=tree_norm(g_next),
             bits_per_worker=jnp.where(c_k, bits_dense, bits_q),
@@ -167,6 +201,7 @@ class VRMarina:
     compressor: Compressor
     gamma: float
     p: float
+    engine: FlatEngine | None = None
 
     def init(self, params: PyTree, full_batches: PyTree) -> MarinaState:
         g0 = tree_mean_axis0(_per_worker_grads(self.full_grad_fn, params, full_batches))
@@ -195,8 +230,9 @@ class VRMarina:
             g_new = _per_worker_grads(self.mb_grad_fn, x_new, mb_batches)
             g_prev = _per_worker_grads(self.mb_grad_fn, x_old, mb_batches)
             diffs = tree_sub(g_new, g_prev)
-            payloads = _compress_workers(self.compressor, k_q, diffs, n)
-            delta = _decompress_mean(self.compressor, payloads, state.params, n)
+            delta = _compressed_delta(
+                self.compressor, self.engine, k_q, diffs, state.params, n
+            )
             return jax.tree.map(jnp.add, state.g, delta)
 
         g_next = jax.lax.cond(c_k, sync_branch, compressed_branch, None)
@@ -209,7 +245,7 @@ class VRMarina:
             bits_per_worker=jnp.where(
                 c_k,
                 jnp.asarray(32.0 * d),
-                jnp.asarray(tree_payload_bits(self.compressor, state.params)),
+                _round_bits(self.compressor, self.engine, state.params),
             ),
             sync_round=c_k.astype(jnp.int32),
             oracle_calls=jnp.where(c_k, float(m_full), 2.0 * b_prime),
@@ -232,6 +268,7 @@ class PPMarina:
     gamma: float
     p: float
     r: int
+    engine: FlatEngine | None = None
 
     def init(self, params: PyTree, batches: PyTree) -> MarinaState:
         g0 = tree_mean_axis0(_per_worker_grads(self.grad_fn, params, batches))
@@ -258,8 +295,9 @@ class PPMarina:
             g_new = _per_worker_grads(self.grad_fn, x_new, sel_batches)
             g_prev = _per_worker_grads(self.grad_fn, x_old, sel_batches)
             diffs = tree_sub(g_new, g_prev)
-            payloads = _compress_workers(self.compressor, k_q, diffs, self.r)
-            delta = _decompress_mean(self.compressor, payloads, state.params, self.r)
+            delta = _compressed_delta(
+                self.compressor, self.engine, k_q, diffs, state.params, self.r
+            )
             return jax.tree.map(jnp.add, state.g, delta)
 
         g_next = jax.lax.cond(c_k, sync_branch, compressed_branch, None)
@@ -269,7 +307,7 @@ class PPMarina:
         bits_total = jnp.where(
             c_k,
             jnp.asarray(32.0 * d * n),
-            jnp.asarray(tree_payload_bits(self.compressor, state.params) * self.r),
+            _round_bits(self.compressor, self.engine, state.params) * self.r,
         )
         metrics = StepMetrics(
             grad_est_norm=tree_norm(g_next),

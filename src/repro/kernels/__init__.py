@@ -1,3 +1,9 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the compression hot path + pure-jnp oracles.
+
+* ``randk.py``    — seeded RandK gather (`randk_seeded`, `randk_seeded_workers`)
+                    and the server-side `scatter_accum` mean (DESIGN.md §5).
+* ``quantize.py`` — fused two-pass QSGD.
+* ``ref.py``      — bit-exact pure-jnp oracles; the CPU/`ref` backend of the
+                    flat engine (repro.core.flat) *is* these oracles.
+* ``ops.py``      — jit'd flat-vector wrappers (padding, host-side samplers).
+"""

@@ -3,8 +3,10 @@
 Handles the flat → (nblk, B) blocked layout, zero padding, host-side index
 sampling, and jittered-stratified offsets (one index per stride — unbiased with
 the same ω = d/K − 1 as classic RandK, see DESIGN.md §5). These wrappers are
-what core/ and the benchmarks call; `interpret=True` everywhere on this CPU
-container (the kernels are written for the TPU target).
+what the benchmarks and kernel tests call; the production compressed round
+goes through repro.core.flat's fused engine instead. ``interpret=None``
+resolves via the engine's backend switch: compiled on TPU, interpret mode on
+this CPU container.
 """
 
 from __future__ import annotations
@@ -18,6 +20,14 @@ from . import randk as _randk
 from . import quantize as _quant
 
 DEFAULT_BLOCK = 1024  # lanes-aligned (8 × 128) VMEM tile width
+
+
+def _interp(interpret) -> bool:
+    if interpret is None:
+        from repro.core.flat import resolve_backend
+
+        return resolve_backend("auto") != "pallas"
+    return bool(interpret)
 
 
 def pad_to_blocks(x: jax.Array, block: int) -> jax.Array:
@@ -46,7 +56,7 @@ def randk_compress(
     key: jax.Array,
     kb: int,
     block: int = DEFAULT_BLOCK,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Blockwise jittered RandK of a flat vector. Returns (values, offsets, d).
 
@@ -56,7 +66,7 @@ def randk_compress(
     nblk = x2d.shape[0]
     offsets = jittered_offsets(key, nblk, block, kb)
     scale = block / kb
-    values = _randk.randk_gather(x2d, offsets, scale, interpret=interpret)
+    values = _randk.randk_gather(x2d, offsets, scale, interpret=_interp(interpret))
     return values, offsets
 
 
@@ -66,10 +76,10 @@ def randk_decompress_mean(
     offsets: jax.Array,
     d: int,
     block: int = DEFAULT_BLOCK,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Server aggregation of n worker payloads (n, nblk, kb) → dense (d,)."""
-    dense = _randk.scatter_accum(values, offsets, block, interpret=interpret)
+    dense = _randk.scatter_accum(values, offsets, block, interpret=_interp(interpret))
     return dense.reshape(-1)[:d]
 
 
@@ -79,14 +89,14 @@ def qsgd_compress(
     key: jax.Array,
     s: int,
     block: int = DEFAULT_BLOCK,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Fused two-pass QSGD: (q int8 (d_padded,), norm scalar)."""
     x2d = pad_to_blocks(x, block)
-    sumsq = _quant.block_sumsq(x2d, interpret=interpret)
+    sumsq = _quant.block_sumsq(x2d, interpret=_interp(interpret))
     norm = jnp.sqrt(jnp.sum(sumsq))
     u2d = jax.random.uniform(key, x2d.shape)
-    q = _quant.qsgd_quantize(x2d, u2d, norm, s, interpret=interpret)
+    q = _quant.qsgd_quantize(x2d, u2d, norm, s, interpret=_interp(interpret))
     return q, norm
 
 
@@ -97,7 +107,7 @@ def qsgd_decompress(
     s: int,
     d: int,
     block: int = DEFAULT_BLOCK,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    dense = _quant.qsgd_dequantize(q, norm, s, interpret=interpret)
+    dense = _quant.qsgd_dequantize(q, norm, s, interpret=_interp(interpret))
     return dense.reshape(-1)[:d]

@@ -174,3 +174,66 @@ def randk_seeded(
         ],
         interpret=interpret,
     )(seed.reshape(1).astype(jnp.int32), x2d)
+
+
+# ---------------------------------------------------------------------------
+# Worker-batched seeded sampler: the flat engine's uplink kernel
+# ---------------------------------------------------------------------------
+
+
+def _randk_seeded_workers_kernel(
+    seed_ref, x_ref, vals_ref, off_ref, *, scale: float, nblk: int
+):
+    i = pl.program_id(0)          # global block id over n·nblk
+    w = i // nblk                 # worker
+    b = i % nblk                  # worker-local block
+    x = x_ref[...]                # (1, B)
+    B = x.shape[-1]
+    kb = vals_ref.shape[-1]
+    # worker-local counter stream: block b covers counters [b·kb, (b+1)·kb) —
+    # the same stream tree_compress produces per worker, so the flat path is
+    # bit-identical to the per-leaf path on block-aligned layouts.
+    ctr = jax.lax.broadcasted_iota(jnp.uint32, (1, kb), 1) + jnp.uint32(b * kb)
+    bits = murmur_bits(seed_ref[w].astype(jnp.uint32), ctr)
+    off = (bits & jnp.uint32(B - 1)).astype(jnp.int32)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (kb, B), 1)
+    onehot = (iota == off.reshape(kb, 1)).astype(x.dtype)
+    vals = jax.lax.dot_general(
+        onehot, x.reshape(B, 1), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    vals_ref[...] = (vals.reshape(1, kb) * scale).astype(vals_ref.dtype)
+    off_ref[...] = off
+
+
+def randk_seeded_workers(
+    x3d: jax.Array, seeds: jax.Array, kb: int, scale: float, *,
+    interpret: bool = True,
+):
+    """Per-worker seeded RandK: (n, nblk, B) + seeds (n,) → values/offsets
+    (n, nblk, kb). Workers are folded into the grid (n·nblk steps) with
+    per-worker seeds read from SMEM; each worker restarts its counter stream
+    at 0, matching the tree path's per-worker key split (DESIGN.md §4.2)."""
+    n, nblk, B = x3d.shape
+    assert B & (B - 1) == 0, "block width must be a power of two"
+    x2d = x3d.reshape(n * nblk, B)
+    vals, offs = pl.pallas_call(
+        functools.partial(
+            _randk_seeded_workers_kernel, scale=float(scale), nblk=nblk
+        ),
+        grid=(n * nblk,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, kb), lambda i: (i, 0)),
+            pl.BlockSpec((1, kb), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n * nblk, kb), x3d.dtype),
+            jax.ShapeDtypeStruct((n * nblk, kb), jnp.int32),
+        ],
+        interpret=interpret,
+    )(seeds.astype(jnp.int32), x2d)
+    return vals.reshape(n, nblk, kb), offs.reshape(n, nblk, kb)

@@ -88,3 +88,16 @@ def randk_seeded_ref(x2d: jax.Array, seed: jax.Array, kb: int, scale: float):
     off = (bits & jnp.uint32(B - 1)).astype(jnp.int32)
     vals = jnp.take_along_axis(x2d, off, axis=1) * jnp.asarray(scale, x2d.dtype)
     return vals, off
+
+
+def randk_seeded_workers_ref(
+    x3d: jax.Array, seeds: jax.Array, kb: int, scale: float
+):
+    """Oracle for randk_seeded_workers: per-worker seed, worker-local counters.
+
+    x3d: (n, nblk, B);  seeds: (n,) uint32
+    returns: values/offsets, both (n, nblk, kb)
+    """
+    return jax.vmap(
+        lambda x2d, s: randk_seeded_ref(x2d, s.astype(jnp.uint32), kb, scale)
+    )(x3d, seeds)

@@ -15,9 +15,10 @@ explicit GSPMD shardings and payload collectives — DESIGN.md §3):
   The dry-run lowers sync/compressed separately so §Roofline can attribute
   costs per round type.
 
-Compression here is the pure-jnp Block-RandK (bit-identical to
-kernels/ref.py's jittered sampler); on real TPU hardware the inner
-gather/scatter dispatch to the Pallas kernels in repro.kernels.
+The inner gather/scatter run through the backend-switched block primitives in
+repro.core.flat (``block_gather`` / ``block_scatter_mean``): the pure-jnp ref
+path (bit-identical to kernels/ref.py) on CPU simulation, the Pallas kernels
+in repro.kernels on real TPU hardware (DESIGN.md §4/§5).
 """
 
 from __future__ import annotations
@@ -32,6 +33,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ArchConfig
+from repro.core import flat as flat_engine
 from repro.models import init_cache, init_params, lm_loss, decode_step as model_decode, prefill as model_prefill
 from repro.launch import sharding as shd
 from repro.launch.mesh import num_workers, worker_axis_names
@@ -58,6 +60,23 @@ class StepBundle:
 # ---------------------------------------------------------------------------
 
 
+def _gather_along_last(x3d, idx3d, scale, backend):
+    """(n, R, L) gather via the backend-switched flat primitive."""
+    n_, R, L = x3d.shape
+    kb = idx3d.shape[-1]
+    out = flat_engine.block_gather(
+        x3d.reshape(n_ * R, L), idx3d.reshape(n_ * R, kb), scale, backend
+    )
+    return out.reshape(n_, R, kb)
+
+
+def _scatter_mean_last(vals3d, idx3d, L, backend):
+    """(n_eff, R, kb) scatter-accumulate mean over workers → (R, L) f32."""
+    return flat_engine.block_scatter_mean(
+        vals3d.astype(jnp.float32), idx3d, L, backend
+    )
+
+
 def _compress_decompress_mean(
     key: jax.Array,
     diffs: PyTree,
@@ -68,6 +87,7 @@ def _compress_decompress_mean(
     packed_payload: bool = False,
     staged_payload: bool = True,
     out_shardings: "PyTree | None" = None,
+    backend: str = "auto",
 ) -> PyTree:
     """Per-leaf Block-RandK across workers → dense mean update.
 
@@ -110,21 +130,21 @@ def _compress_decompress_mean(
 
         if shared_mask:
             idx = jax.random.randint(lk, (R, kb), 0, L, jnp.int32)
-            vals = jnp.take_along_axis(
-                x, jnp.broadcast_to(idx, (n, R, kb)), axis=-1
-            ) * scale
+            vals = _gather_along_last(
+                x, jnp.broadcast_to(idx, (n, R, kb)), scale, backend
+            )
             if staged_payload:
                 # pin the gather to the worker-sharded layout so the
                 # partitioner cannot replicate the dense diffs instead
                 vals = jax.lax.with_sharding_constraint(vals, worker_sharded)
             # ζ-sized psum over the worker axis; stays sharded on R
             vals_mean = jnp.mean(vals, axis=0)                     # (R, kb)
-            dense = jnp.zeros((R, L), leaf.dtype)
-            rows = jnp.broadcast_to(jnp.arange(R, dtype=jnp.int32)[:, None], (R, kb))
-            dense = dense.at[rows, idx].add(vals_mean.astype(leaf.dtype))
+            dense = _scatter_mean_last(
+                vals_mean[None], idx[None], L, backend
+            ).astype(leaf.dtype)
         else:
             idx = jax.random.randint(lk, (n, R, kb), 0, L, jnp.int32)
-            vals = jnp.take_along_axis(x, idx, axis=-1) * scale
+            vals = _gather_along_last(x, idx, scale, backend)
             if staged_payload:
                 # stage 1: gather under the worker-sharded layout (local);
                 # stage 2 (below): all-gather only the K-sized payload
@@ -142,13 +162,7 @@ def _compress_decompress_mean(
             else:
                 vals = jax.lax.with_sharding_constraint(vals, repl)
                 idx = jax.lax.with_sharding_constraint(idx, repl)
-            dense = jnp.zeros((R, L), leaf.dtype)
-            rows = jnp.broadcast_to(
-                jnp.arange(R, dtype=jnp.int32)[None, :, None], idx.shape
-            )
-            dense = dense.at[rows.reshape(-1), idx.reshape(-1)].add(
-                vals.reshape(-1) / n
-            )
+            dense = _scatter_mean_last(vals, idx, L, backend).astype(leaf.dtype)
 
         out = dense.reshape(shape)
         if osh is not None and staged_payload:
@@ -180,6 +194,7 @@ def build_train_steps(
     packed_payload: bool = False,
     replicate_params: bool = False,
     staged_payload: bool = True,
+    compression_backend: str = "auto",
 ):
     """Returns (fns, abstract_args) for sync_step / compressed_step / train_step.
 
@@ -247,6 +262,7 @@ def build_train_steps(
         delta = _compress_decompress_mean(
             key, diffs, n, mesh, waxes, shared_mask, packed_payload,
             staged_payload, out_shardings=p_shard,
+            backend=compression_backend,
         )
         g_new = jax.tree.map(jnp.add, g, delta)
         return x_new, g_new

@@ -188,6 +188,8 @@ def analyze_compiled(
     compiled, n_devices: int, model_flops_total: Optional[float] = None
 ) -> RooflineReport:
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per device
+        cost = cost[0] if cost else {}
     # XLA reports whole-program numbers for the SPMD module (per-device view).
     flops = float(cost.get("flops", 0.0))
     byts = float(cost.get("bytes accessed", 0.0))

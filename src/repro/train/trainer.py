@@ -5,12 +5,19 @@ the same algorithm code as the mesh path — see launch/distributed.py for the
 sharded production step). It owns:
 
 * method construction (MARINA / VR-MARINA / PP-MARINA / DIANA / DCGD / EC-SGD /
-  GD) with compressor + stepsize policy,
+  GD) with compressor + stepsize policy — ``block_randk``/``flat_randk``
+  compressors additionally get the fused flat-buffer engine (DESIGN.md §4),
 * the per-step data plumbing (full-round batches vs b′ minibatches — the
-  Alg. 3 online case),
+  Alg. 3 online case), generated *inside the jitted scan* from the step index
+  (the synthetic pipeline is a pure function of (seed, step)),
 * a communication ledger in *bits actually uplinked* (the paper's x-axis in
-  Figs. 1–2),
+  Figs. 1–2), accumulated on device,
 * periodic eval loss, checkpointing, metrics history.
+
+Hot-path discipline: the loop is a ``jax.lax.scan`` over chunks of
+``log_every`` steps with the carry donated (``donate_argnums``), so the host
+dispatches one fused computation — and syncs exactly once — per log interval
+instead of every step.
 """
 
 from __future__ import annotations
@@ -28,11 +35,13 @@ from repro.core import (
     DCGD,
     Diana,
     ECSGD,
+    BlockRandK,
     Marina,
     PPMarina,
     VRMarina,
     diana_alpha,
     make_compressor,
+    make_engine,
     tree_dim,
 )
 from repro.data import HeterogeneousLMData, make_prefix_embeddings, worker_batches
@@ -59,6 +68,7 @@ class TrainConfig:
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 0
     diana_alpha: Optional[float] = None
+    flat_backend: str = "auto"         # kernel backend for the flat engine
 
 
 @dataclasses.dataclass
@@ -103,19 +113,32 @@ class Trainer:
         p = train_cfg.p if train_cfg.p is not None else comp.default_p(d)
         self.p = p
         self.comp = comp
+        # block_randk rounds run fused over the packed flat buffer; every
+        # other compressor keeps the per-leaf tree path.
+        self.engine = (
+            make_engine(
+                init_params, kb=comp.kb, block=comp.block,
+                backend=train_cfg.flat_backend,
+            )
+            if isinstance(comp, BlockRandK)
+            else None
+        )
 
         m = train_cfg.method
         if m == "marina":
-            self.method = Marina(grad_fn, comp, train_cfg.gamma, p)
+            self.method = Marina(grad_fn, comp, train_cfg.gamma, p, self.engine)
         elif m == "gd":
             from repro.core import make_gd
 
             self.method = make_gd(grad_fn, train_cfg.gamma)
         elif m == "vr_marina":
-            self.method = VRMarina(grad_fn, grad_fn, comp, train_cfg.gamma, p)
+            self.method = VRMarina(
+                grad_fn, grad_fn, comp, train_cfg.gamma, p, self.engine
+            )
         elif m == "pp_marina":
             self.method = PPMarina(
-                grad_fn, comp, train_cfg.gamma, p, train_cfg.r_participating
+                grad_fn, comp, train_cfg.gamma, p, train_cfg.r_participating,
+                self.engine,
             )
         elif m == "diana":
             alpha = train_cfg.diana_alpha
@@ -135,6 +158,9 @@ class Trainer:
 
         self.params0 = init_params
         self._jitted_step = jax.jit(self._step)
+        # chunked hot loop: one dispatch + one host sync per log interval.
+        # carry = (state, bits, oracle); donated so params/g update in place.
+        self._jitted_chunk = jax.jit(self._chunk, donate_argnums=(0,))
 
     # ------------------------------------------------------------------
     def _batches(self, step: int, per_worker: int):
@@ -156,12 +182,60 @@ class Trainer:
             return self.method.step(state, key, full_b)
         return self.method.step(state, key, full_b, mb_b)
 
+    def _chunk(self, carry, steps):
+        """Scan `len(steps)` optimizer steps on device.
+
+        Batches are regenerated inside the trace from the step index (the
+        data pipeline is a pure function of (seed, step)), and the bits /
+        oracle ledgers accumulate in the carry — no per-step host sync.
+        Returns the final carry and the last step's metrics.
+        """
+        base_key = jax.random.PRNGKey(self.tcfg.seed)
+
+        def body(c, step):
+            state, bits, oracle = c
+            key = jax.random.fold_in(base_key, step)
+            full_b = self._batches(step, self.tcfg.batch_per_worker)
+            mb_b = self._batches(10**7 + step, self.tcfg.mb_per_worker)
+            state, met = self._step(state, key, full_b, mb_b)
+            return (
+                state,
+                bits + met.bits_per_worker,
+                oracle + met.oracle_calls,
+            ), met
+
+        carry, mets = jax.lax.scan(body, carry, steps)
+        last_met = jax.tree.map(lambda a: a[-1], mets)
+        return carry, last_met
+
     def eval_loss(self, params, step: int = 10**6) -> float:
         b = self._batches(step, self.tcfg.batch_per_worker)
         losses = jax.vmap(self.loss_fn, in_axes=(None, 0))(params, b)
         return float(jnp.mean(losses))
 
     # ------------------------------------------------------------------
+    def _boundaries(self, start: int) -> list:
+        """Host-sync points: steps after which we must look at the state
+        (log/eval) or serialize it (checkpoint). The device runs free
+        between consecutive boundaries."""
+        tc = self.tcfg
+        # log after every log_every-th step and always after the final step.
+        # Chunks between consecutive log points are uniform (log_every steps)
+        # so the scan compiles once for them; a ragged final chunk — and any
+        # ckpt point not aligned to the log grid — adds one extra compile per
+        # distinct length.
+        log_pts = {
+            s for s in range(start, tc.steps) if (s + 1) % tc.log_every == 0
+        }
+        log_pts.add(tc.steps - 1)
+        ckpt_pts = set()
+        if tc.ckpt_dir and tc.ckpt_every:
+            ckpt_pts = {
+                s for s in range(start, tc.steps) if (s + 1) % tc.ckpt_every == 0
+            }
+        pts = sorted(p for p in log_pts | ckpt_pts if start <= p < tc.steps)
+        return [(p, p in log_pts, p in ckpt_pts) for p in pts]
+
     def run(self) -> tuple[PyTree, TrainMetrics]:
         tc = self.tcfg
         b0 = self._batches(0, tc.batch_per_worker)
@@ -177,26 +251,51 @@ class Trainer:
                 state = load_checkpoint(tc.ckpt_dir, s, state)
                 start = s + 1
 
+        # the chunk carry is donated; copy so self.params0 (aliased into the
+        # initial state) survives for eval or a second run().
+        state = jax.tree.map(jnp.array, state)
+
         hist = TrainMetrics()
         bits = 0.0
         oracle = 0.0
         t0 = time.time()
-        for step in range(start, tc.steps):
-            key = jax.random.fold_in(jax.random.PRNGKey(tc.seed), step)
-            full_b = self._batches(step, tc.batch_per_worker)
-            mb_b = self._batches(10**7 + step, tc.mb_per_worker)
-            state, met = self._jitted_step(state, key, full_b, mb_b)
-            bits += float(met.bits_per_worker)
-            oracle += float(met.oracle_calls)
 
-            if step % tc.log_every == 0 or step == tc.steps - 1:
-                loss = self.eval_loss(state.params, step)
-                hist.step.append(step)
+        # anchor the loss-vs-bits curve at the pre-training state (step
+        # start−1, 0 bits uplinked): the uniform chunking below only logs
+        # after full log intervals, and the Fig. 1/2-style curves need the
+        # initial point.
+        from repro.core.tree_util import tree_norm
+
+        hist.step.append(start - 1)
+        hist.loss.append(self.eval_loss(state.params, start))
+        hist.grad_est_norm.append(
+            float(tree_norm(state.g)) if hasattr(state, "g") else 0.0
+        )
+        hist.bits_cum.append(bits)
+        hist.oracle_cum.append(oracle)
+        hist.wall.append(time.time() - t0)
+
+        prev = start
+        for bound, is_log, is_ckpt in self._boundaries(start):
+            # one fused device dispatch for steps [prev, bound]; the bits /
+            # oracle ledgers accumulate on device, read back once per chunk.
+            steps_arr = jnp.arange(prev, bound + 1, dtype=jnp.int32)
+            (state, chunk_bits, chunk_oracle), met = self._jitted_chunk(
+                (state, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+                steps_arr,
+            )
+            bits += float(chunk_bits)
+            oracle += float(chunk_oracle)
+            prev = bound + 1
+
+            if is_log:
+                loss = self.eval_loss(state.params, bound)
+                hist.step.append(bound)
                 hist.loss.append(loss)
                 hist.grad_est_norm.append(float(met.grad_est_norm))
                 hist.bits_cum.append(bits)
                 hist.oracle_cum.append(oracle)
                 hist.wall.append(time.time() - t0)
-            if tc.ckpt_dir and tc.ckpt_every and (step + 1) % tc.ckpt_every == 0:
-                save_checkpoint(tc.ckpt_dir, step, state)
+            if is_ckpt:
+                save_checkpoint(tc.ckpt_dir, bound, state)
         return state, hist

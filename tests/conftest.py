@@ -1,0 +1,6 @@
+"""Ensure the tests directory is importable (for the _hyp hypothesis shim)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

@@ -27,7 +27,7 @@ def test_decode_matches_forward(name):
     cfg = reduced(arch.model, layers=2, d_model=128)
     key = jax.random.PRNGKey(0)
     params = init_params(key, cfg)
-    B, S = 2, 24
+    B, S = 2, 16
     toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
 
     logits, *_ = jax.jit(lambda p, t: forward(p, cfg, t))(params, toks)
@@ -50,7 +50,7 @@ def test_prefill_then_decode_matches_forward(name):
     cfg = reduced(arch.model, layers=2, d_model=128)
     key = jax.random.PRNGKey(1)
     params = init_params(key, cfg)
-    B, S, P = 2, 24, 17  # prefill length deliberately != window multiples
+    B, S, P = 2, 16, 11  # prefill length deliberately != window multiples
     toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
 
     logits, *_ = jax.jit(lambda p, t: forward(p, cfg, t))(params, toks)

@@ -36,9 +36,11 @@ def test_fit_divisibility_fallback():
     )
 
 
+@pytest.mark.slow
 def test_param_rules_cover_all_archs():
     """Every leaf of every full config gets a spec without error, and large
-    2D+ leaves are sharded on at least one axis."""
+    2D+ leaves are sharded on at least one axis. Slow: eval_shape traces all
+    ten full-depth configs (~60 layers each)."""
     from repro.configs import all_archs
     from repro.launch.sharding import param_spec
     from repro.models import init_params

@@ -20,10 +20,10 @@ def tiny_model():
     return ModelConfig(
         name="tiny",
         arch_type="dense",
-        d_model=64,
-        num_heads=4,
-        num_kv_heads=2,
-        d_ff=128,
+        d_model=32,
+        num_heads=2,
+        num_kv_heads=1,
+        d_ff=64,
         vocab_size=256,
         segments=dense_stack(2),
     )
@@ -108,7 +108,15 @@ def test_checkpoint_state_dataclass(tmp_path):
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("method", ["vr_marina", "marina", "diana", "dcgd"])
+@pytest.mark.parametrize(
+    "method",
+    [
+        "vr_marina",
+        pytest.param("marina", marks=pytest.mark.slow),
+        pytest.param("diana", marks=pytest.mark.slow),
+        "dcgd",
+    ],
+)
 def test_trainer_loss_decreases(method):
     cfg = tiny_model()
     params = init_params(jax.random.PRNGKey(0), cfg)
