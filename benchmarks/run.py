@@ -257,7 +257,9 @@ def _synthetic_grad_tree(key, d):
 def bench_compression(quick=False):
     """Fused flat engine vs per-leaf tree path: one full compressed-round
     aggregate (compress all n workers + server mean) at d ∈ {1e5, 1e6},
-    n ∈ {4, 16}. Writes BENCH_compression.json (consumed by
+    n ∈ {4, 16}; plus the Perm-K disjoint-aggregation round vs the matched-
+    budget independent-mask n·K all-gather round (payload-bytes and
+    wall-clock deltas). Writes BENCH_compression.json (consumed by
     scripts/update_perf.py) so the perf trajectory is tracked across PRs."""
     from repro.core import RandK, make_engine
     from repro.core.marina import _compress_workers, _decompress_mean
@@ -287,6 +289,20 @@ def bench_compression(quick=False):
             def flat_round(key, diffs):
                 return eng.fused_delta(key, diffs, n)
 
+            # Perm-K (disjoint d/n shards per worker) vs the independent-mask
+            # all-gather at the SAME per-worker coordinate budget K_w =
+            # padded/n: RandK with kb = B/n coords per block per worker.
+            eng_pk = make_engine(tree, block=block, sampler="permk")
+            eng_match = make_engine(tree, kb=block // n, block=block)
+
+            @jax.jit
+            def permk_round(key, diffs):
+                return eng_pk.fused_delta(key, diffs, n)
+
+            @jax.jit
+            def allgather_round(key, diffs):
+                return eng_match.fused_delta(key, diffs, n)
+
             def timeit(fn):
                 jax.block_until_ready(fn(key, diffs))  # compile
                 t0 = time.time()
@@ -296,7 +312,10 @@ def bench_compression(quick=False):
 
             us_tree = timeit(per_leaf_round)
             us_flat = timeit(flat_round)
+            us_pk = timeit(permk_round)
+            us_ag = timeit(allgather_round)
             K = eng.layout.nblk * kb
+            K_w = eng.layout.padded // n  # matched per-worker coordinates
             entry = {
                 "d": d,
                 "n": n,
@@ -308,11 +327,29 @@ def bench_compression(quick=False):
                 # the n ζ-sized payloads + one dense accumulator.
                 "per_leaf_agg_floats": n * d,
                 "flat_agg_floats": n * K * 2 + eng.layout.padded,
+                # --- disjoint-support aggregation (Perm-K) -----------------
+                # payload bytes per compressed round at the production wire
+                # dtypes, matched per-worker budget K_w: the independent-mask
+                # all-gather moves (bf16 value + int16 index) per coordinate
+                # for all n workers; the Perm-K exchange moves bf16 VALUES
+                # ONLY (indices regenerate from the one shared 4-byte seed —
+                # disjoint shards, nothing else on the wire).
+                "permk_us": us_pk,
+                "allgather_us": us_ag,
+                "matched_coords_per_worker": K_w,
+                "allgather_payload_bytes": n * K_w * (2 + 2) + n * 4,
+                "disjoint_payload_bytes": n * K_w * 2 + 4,
             }
             entries.append(entry)
             emit(
                 f"compression/d{d}_n{n}", us_flat,
                 f"per_leaf_us={us_tree:.0f};speedup={entry['speedup']:.1f}x",
+            )
+            emit(
+                f"compression/permk_d{d}_n{n}", us_pk,
+                f"allgather_us={us_ag:.0f};"
+                f"payload_B={entry['disjoint_payload_bytes']}"
+                f"_vs_{entry['allgather_payload_bytes']}",
             )
 
     out = {

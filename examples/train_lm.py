@@ -55,7 +55,8 @@ def main():
     ap.add_argument("--method", default="vr_marina")
     ap.add_argument(
         "--compressor", default="randk",
-        help="randk (per-leaf tree path) or block_randk (fused flat engine)",
+        help="randk (per-leaf tree path), block_randk (fused flat engine), "
+        "or permk (correlated Perm-K: disjoint d/n shards, γ = 1/L theory)",
     )
     ap.add_argument("--k-frac", type=float, default=0.02)
     ap.add_argument("--gamma", type=float, default=0.25)
@@ -64,12 +65,15 @@ def main():
 
     cfg = model_smoke() if args.smoke else model_100m()
     steps = args.steps or (30 if args.smoke else 300)
-    # block_randk's budget is kb coords per 1024-block (kb/1024 ≈ k_frac)
-    comp_kwargs = (
-        {"kb": max(1, round(args.k_frac * 1024))}
-        if args.compressor in ("block_randk", "flat_randk")
-        else {"k": args.k_frac}
-    )
+    # block_randk's budget is kb coords per 1024-block (kb/1024 ≈ k_frac);
+    # permk's budget is fixed by the partition (d/n per worker) and its
+    # collection size is inferred from n_workers by the trainer.
+    if args.compressor in ("block_randk", "flat_randk"):
+        comp_kwargs = {"kb": max(1, round(args.k_frac * 1024))}
+    elif args.compressor in ("permk", "perm_k"):
+        comp_kwargs = {}
+    else:
+        comp_kwargs = {"k": args.k_frac}
     tcfg = TrainConfig(
         method=args.method,
         compressor=args.compressor,

@@ -3,14 +3,19 @@
 from .compressors import (
     BlockRandK,
     Compressor,
+    CorrelatedCompressor,
+    CorrelatedQ,
     Identity,
     NaturalCompression,
+    PermK,
     QSGD,
     RandK,
     SharedRandK,
     TopK,
     make_compressor,
+    tree_ab_constants,
     tree_compress,
+    tree_compress_worker,
     tree_decompress,
     tree_dim,
     tree_omega,
@@ -21,25 +26,32 @@ from .flat import FlatEngine, FlatLayout, make_engine, make_layout, pack, pack_s
 from .marina import Marina, MarinaState, PPMarina, StepMetrics, VRMarina, make_gd
 from .baselines import DCGD, Diana, ECSGD, VRDiana
 from .stepsize import (
+    ab_from_omega,
     diana_alpha,
     diana_gamma,
     marina_comm_per_worker,
     marina_gamma,
+    marina_gamma_ab,
+    marina_gamma_permk,
     marina_gamma_pl,
     marina_iteration_bound,
+    permk_default_p,
     pp_marina_gamma,
     vr_marina_gamma,
 )
 
 __all__ = [
-    "BlockRandK", "Compressor", "FlatEngine", "FlatLayout", "Identity",
+    "BlockRandK", "Compressor", "CorrelatedCompressor", "CorrelatedQ",
+    "FlatEngine", "FlatLayout", "Identity", "PermK",
     "make_engine", "make_layout", "pack", "pack_stacked", "unpack",
     "NaturalCompression", "QSGD", "RandK",
-    "SharedRandK", "TopK", "make_compressor", "tree_compress",
+    "SharedRandK", "TopK", "make_compressor", "tree_ab_constants",
+    "tree_compress", "tree_compress_worker",
     "tree_decompress", "tree_dim", "tree_omega", "tree_payload_bits",
     "tree_roundtrip", "Marina", "MarinaState", "PPMarina", "StepMetrics",
     "VRMarina", "make_gd", "DCGD", "Diana", "ECSGD", "VRDiana",
-    "diana_alpha", "diana_gamma", "marina_comm_per_worker", "marina_gamma",
-    "marina_gamma_pl", "marina_iteration_bound", "pp_marina_gamma",
-    "vr_marina_gamma",
+    "ab_from_omega", "diana_alpha", "diana_gamma", "marina_comm_per_worker",
+    "marina_gamma", "marina_gamma_ab", "marina_gamma_permk",
+    "marina_gamma_pl", "marina_iteration_bound", "permk_default_p",
+    "pp_marina_gamma", "vr_marina_gamma",
 ]

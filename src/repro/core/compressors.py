@@ -1,6 +1,6 @@
 """Unbiased quantization operators (Def. 1.1) and biased contractive compressors.
 
-Every compressor exposes the three quantities the MARINA theory consumes:
+Every compressor exposes the four quantities the MARINA theory consumes:
 
 * ``omega(d)``            — the variance parameter ω of Def. 1.1:
                             ``E[Q(x)] = x`` and ``E‖Q(x) − x‖² ≤ ω‖x‖²``.
@@ -8,6 +8,16 @@ Every compressor exposes the three quantities the MARINA theory consumes:
 * ``payload_bits(d)``     — actual bits on the wire per compressed vector, used by the
                             trainer's communication ledger and the benchmarks that
                             reproduce the "total transmitted bits" axes of Fig. 1/2.
+* ``ab_constants(d, n)``  — the (A, B) constants of the AB-inequality of Szlendak
+                            et al. (2021) for the n-worker *collection* {Q_i}:
+
+                              E‖(1/n) Σ_i Q_i(x_i) − x̄‖² ≤ A·(1/n)Σ_i‖x_i‖² − B·‖x̄‖²
+
+                            with x̄ = (1/n)Σ_i x_i. This refines ω: MARINA's rate
+                            depends on the collection only through (A, B)
+                            (``stepsize.marina_gamma_ab``), and *correlated*
+                            collections (PermK, CorrelatedQ below) achieve strictly
+                            better constants than any independent ω-compressor.
 
 Compression is defined on *flat* vectors; :func:`tree_compress` lifts a compressor to
 pytrees by splitting the budget proportionally to leaf sizes (Block-RandK — see
@@ -61,6 +71,24 @@ class Compressor:
     def default_p(self, d: int) -> float:
         """The paper's synchronization probability choice p = ζ_Q/d (Cor. 2.1)."""
         return min(1.0, max(self.expected_density(d) / max(d, 1), 1e-6))
+
+    def ab_constants(self, d: int, n: int) -> tuple:
+        """(A, B) of the AB-inequality for n independent copies of this Q.
+
+        Tight constants for an uncorrelated collection: the aggregation error is
+        (1/n²)Σ_i Var[Q_i(x_i)] ≤ (ω/n)·(1/n)Σ‖x_i‖², and since ‖x̄‖² ≤
+        (1/n)Σ‖x_i‖² (Jensen) this equals ((1+ω)/n)·(1/n)Σ‖x_i‖² − (1/n)‖x̄‖²
+        at worst, with equality when all x_i coincide. Hence
+
+            (A, B) = ((1 + ω)/n, 1/n),
+
+        whose homogeneous-smoothness rate term A − B = ω/n recovers Thm 2.1
+        exactly. Note the constants are NOT (1+ω, ω): with x_i ≡ x that pair's
+        right side is (1+ω)‖x‖² − ω‖x‖² = ‖x‖², so the inequality would force
+        (ω/n)‖x‖² ≤ ‖x‖², i.e. ω ≤ n — false for e.g. RandK(k) on d > (n+1)k.
+        Correlated subclasses override this."""
+        w = self.omega(d)
+        return ((1.0 + w) / n, 1.0 / n)
 
     # -- mechanics ----------------------------------------------------------
     def compress(self, key: jax.Array, x: jax.Array) -> Payload:
@@ -225,6 +253,182 @@ class SharedRandK(RandK):
 
     name: str = dataclasses.field(default="shared_randk", init=False)
 
+    def ab_constants(self, d: int, n: int) -> tuple:
+        """Shared mask ⇒ (1/n)Σ Q_M(x_i) = Q_M(x̄) (the masked-scale map is
+        linear for a fixed mask), so the aggregation error is E‖Q_M(x̄) − x̄‖²
+        ≤ ω‖x̄‖² ≤ ω·(1/n)Σ‖x_i‖²: (A, B) = (ω, 0) with no 1/n — the formal
+        statement of the "forfeits the 1/n variance averaging" trade."""
+        return (self.omega(d), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Correlated collections (Szlendak et al. 2021; Panferov et al. 2024)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CorrelatedCompressor(Compressor):
+    """Base for collections {Q_1..Q_n} with *shared* round randomness.
+
+    Workers draw from ONE round key (no per-worker key split) and are told
+    their index: ``compress_worker(key, x, wid)``. The correlation across
+    workers is the point — it buys AB-inequality constants that no
+    independent collection can reach (A − B = 0 for PermK vs ω/n). The
+    single-operator ``compress(key, x)`` view samples a uniform worker index,
+    which preserves Def.-1.1 unbiasedness for standalone use and tests.
+
+    ``n`` is the worker-collection size; ``n = 0`` means "infer at wiring
+    time" (the trainer replaces it with its worker count)."""
+
+    n: int = 0
+
+    def _n(self) -> int:
+        assert self.n >= 1, f"{self.name}: worker count not set (n={self.n})"
+        return self.n
+
+    def compress_worker(self, key: jax.Array, x: jax.Array, wid) -> Payload:
+        raise NotImplementedError
+
+    def compress(self, key, x):
+        k_w, k_q = jax.random.split(key)
+        wid = jax.random.randint(k_w, (), 0, self._n())
+        return self.compress_worker(k_q, x, wid)
+
+
+@dataclasses.dataclass(frozen=True)
+class PermK(CorrelatedCompressor):
+    """Perm-K (Szlendak et al. 2021): a shared random permutation partitions
+    the coordinates across the n workers; worker i keeps its d/n-slice scaled
+    by n. Jointly unbiased with per-worker ω = n − 1, and — the headline —
+    AB constants (A, B) = (1, 1): for homogeneous smoothness the MARINA rate
+    term A − B vanishes and γ = 1/L (the GD stepsize) is admissible while
+    each worker uplinks only d/n coordinates.
+
+    Mechanics mirror :class:`BlockRandK` so the wire format stays
+    ``seed + values``: the vector is zero-padded to ``(nblk, B)`` blocks and
+    each block is permuted by a seeded *affine* bijection
+    ``π(t) = (a·t + c) mod B`` with a odd (a unit of Z_B since B is a power
+    of two), a and c drawn from the murmur3 counter RNG shared with the
+    kernels. Worker w owns slots ``[w·B/n, (w+1)·B/n)`` of every block — the
+    n supports partition the coordinate space exactly, so server aggregation
+    is collision-free (concatenation + inverse-perm gather; no scatter).
+    Marginal uniformity of π (c is uniform) gives per-worker unbiasedness,
+    and partition + joint unbiasedness give (A, B) = (1, 1) *exactly*:
+    E‖(1/n)ΣQ_i(x_i) − x̄‖² = (1/n)Σ‖x_i‖² − ‖x̄‖².
+
+    Payload per worker: uint32 seed + (nblk·B)/n float32 values =
+    ``32 + 32·(nblk·B)/n`` bits. Requires n | B (both powers of two)."""
+
+    block: int = 1024
+    name: str = dataclasses.field(default="permk", init=False)
+
+    def __post_init__(self):
+        assert self.block & (self.block - 1) == 0, "block must be a power of two"
+        if self.n:
+            assert self.block % self.n == 0, "worker count must divide block"
+
+    def _nblk(self, d: int) -> int:
+        return max(1, -(-d // self.block))
+
+    def chunk(self) -> int:
+        return self.block // self._n()
+
+    def omega(self, d: int) -> float:
+        # E‖n·x|_S − x‖² = Σ_j [(1/n)(n−1)² + (1−1/n)] x_j² = (n−1)‖x‖².
+        return float(self._n() - 1)
+
+    def expected_density(self, d: int) -> float:
+        return d / self._n()
+
+    def payload_bits(self, d: int) -> float:
+        return 32.0 + 32.0 * self._nblk(d) * self.block / self._n()
+
+    def ab_constants(self, d: int, n: int) -> tuple:
+        assert n == self._n(), f"PermK built for n={self.n}, asked for n={n}"
+        return (1.0, 1.0)
+
+    def compress_worker(self, key, x, wid):
+        from . import flat
+        from repro.kernels import ops, ref
+
+        x2d = ops.pad_to_blocks(x, self.block)
+        seed = flat.key_to_seed(key)  # SHARED across workers: same key, same π
+        wid = jnp.asarray(wid, jnp.int32)
+        offs = ref.permk_offsets_ref(
+            seed, x2d.shape[0], self.block, self._n(), wid
+        )
+        vals = jnp.take_along_axis(x2d, offs, axis=1) * jnp.asarray(
+            float(self._n()), x2d.dtype
+        )
+        return {"values": vals, "seed": seed, "wid": wid}
+
+    def decompress(self, payload, d):
+        from repro.kernels import ref
+
+        vals = payload["values"]
+        nblk = vals.shape[0]
+        offs = ref.permk_offsets_ref(
+            payload["seed"], nblk, self.block, self._n(), payload["wid"]
+        )
+        dense = ref.scatter_accum_ref(vals[None], offs[None], self.block)
+        return dense.reshape(-1)[:d].astype(vals.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class CorrelatedQ(CorrelatedCompressor):
+    """Correlated s-level quantization (Panferov et al. 2024 flavour).
+
+    Each worker stochastically rounds ``s·x/‖x‖`` with a dither that is
+    *stratified across the collection*: u_ij = frac(v_j + (wid + r_j)/n) with
+    v, r shared (one round key for all workers). Marginally u_ij ~ U[0,1), so
+    each worker is an unbiased ω = d/(4s²) quantization; jointly the n dithers
+    per coordinate form an exact stratified grid, so for identical inputs the
+    aggregate rounding error collapses to (1/n)·one stochastic rounding of
+    n·s·x/‖x‖ (Hermite's identity Σ_w ⌊y + w/n⌋ = ⌊ny⌋) — variance ω/n² per
+    round instead of the independent collection's ω/n.
+
+    ``ab_constants`` stays conservative: for *heterogeneous* inputs the
+    cross-worker error covariance can be positive (all n dithers are a
+    deterministic function of one shared uniform), so the independent
+    collection's ((1+ω)/n, 1/n) is not provable here and we expose the
+    correlation-free Jensen bound (A, B) = (ω, 0). The homogeneous-regime
+    n² win shows up empirically (tests/test_permk.py) rather than in an
+    over-promised stepsize."""
+
+    s: int = 4
+    name: str = dataclasses.field(default="correlated_qsgd", init=False)
+
+    def __post_init__(self):
+        assert 1 <= self.s <= 63, "levels must fit int8 with the sign folded in"
+
+    def omega(self, d: int) -> float:
+        # E[(⌊t+u⌋ − t)²] = frac(t)(1 − frac(t)) ≤ 1/4 per coordinate.
+        return d / (4.0 * self.s**2)
+
+    def expected_density(self, d: int) -> float:
+        return float(d)
+
+    def payload_bits(self, d: int) -> float:
+        # f32 norm + signed int8 level per coordinate
+        return 32.0 + 8.0 * d
+
+    def ab_constants(self, d: int, n: int) -> tuple:
+        return (self.omega(d), 0.0)
+
+    def compress_worker(self, key, x, wid):
+        n = self._n()
+        norm = jnp.linalg.norm(x.astype(jnp.float32))
+        safe = jnp.where(norm > 0, norm, 1.0)
+        k_v, k_r = jax.random.split(key)
+        v = jax.random.uniform(k_v, x.shape)          # shared base dither
+        r = jax.random.randint(k_r, x.shape, 0, n)    # shared stratum rotation
+        u = jnp.mod(v + (jnp.asarray(wid, jnp.float32) + r) / n, 1.0)
+        level = jnp.floor(self.s * x.astype(jnp.float32) / safe + u)
+        return {"q": level.astype(jnp.int8), "norm": norm}
+
+    def decompress(self, payload, d):
+        return payload["norm"] * payload["q"].astype(jnp.float32) / self.s
+
 
 # ---------------------------------------------------------------------------
 # TopK — biased, for the EC-SGD baseline
@@ -369,13 +573,34 @@ def tree_compress(comp: Compressor, key: jax.Array, tree: PyTree) -> PyTree:
     return jax.tree.unflatten(treedef, payloads)
 
 
+def tree_compress_worker(
+    comp: CorrelatedCompressor, key: jax.Array, tree: PyTree, wid
+) -> PyTree:
+    """:func:`tree_compress` for correlated collections: the round key is
+    SHARED across workers (the correlation lives in the shared randomness) and
+    the worker index is passed through. Same per-leaf key schedule as
+    tree_compress so flat/tree path equivalence carries over."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = [key] if len(leaves) == 1 else list(jax.random.split(key, len(leaves)))
+    payloads = [
+        comp.compress_worker(k, leaf.reshape(-1), wid)
+        for k, leaf in zip(keys, leaves)
+    ]
+    return jax.tree.unflatten(treedef, payloads)
+
+
 def tree_decompress(comp: Compressor, payload_tree: PyTree, like: PyTree) -> PyTree:
-    """Inverse of tree_compress; `like` supplies leaf shapes."""
+    """Inverse of tree_compress; `like` supplies leaf shapes *and dtypes*.
+
+    Decompressed leaves are cast back to the ``like`` leaf dtype (exactly as
+    ``flat.unpack`` does): compressors may decompress to f32 (e.g. QSGD), and
+    under bf16 params an uncast result makes ``Marina.step``'s ``lax.cond``
+    branches disagree on dtype (sync branch bf16, compressed branch f32)."""
     like_leaves, treedef = jax.tree.flatten(like)
     # payload_tree has payload-dicts at the positions of `like` leaves
     pay_leaves = treedef.flatten_up_to(payload_tree)
     outs = [
-        comp.decompress(p, l.size).reshape(l.shape)
+        comp.decompress(p, l.size).reshape(l.shape).astype(l.dtype)
         for p, l in zip(pay_leaves, like_leaves)
     ]
     return jax.tree.unflatten(treedef, outs)
@@ -393,6 +618,16 @@ def tree_omega(comp: Compressor, tree: PyTree) -> float:
 
 def tree_payload_bits(comp: Compressor, tree: PyTree) -> float:
     return sum(comp.payload_bits(int(np.prod(l.shape))) for l in jax.tree.leaves(tree))
+
+
+def tree_ab_constants(comp: Compressor, tree: PyTree, n: int) -> tuple:
+    """Collection (A, B) of the leafwise-lifted compressor: the AB-inequality
+    is additive over orthogonal coordinate blocks, so the worst leaf's A and
+    the best-case-safe min over leaves' B bound the whole tree."""
+    pairs = [
+        comp.ab_constants(int(np.prod(l.shape)), n) for l in jax.tree.leaves(tree)
+    ]
+    return (max(a for a, _ in pairs), min(b for _, b in pairs))
 
 
 def tree_dim(tree: PyTree) -> int:
@@ -413,6 +648,10 @@ def make_compressor(name: str, **kw) -> Compressor:
         return BlockRandK(**kw)
     if name == "shared_randk":
         return SharedRandK(**kw)
+    if name in ("permk", "perm_k"):
+        return PermK(**kw)
+    if name in ("correlated_qsgd", "correlated_q", "cqsgd"):
+        return CorrelatedQ(**kw)
     if name == "topk":
         return TopK(**kw)
     if name == "qsgd":

@@ -226,6 +226,37 @@ def block_scatter_mean(
     )
 
 
+def block_permk_workers(x3d: jax.Array, seed: jax.Array, backend: str = "auto"):
+    """PermK uplink: (n, nblk, B) + ONE shared seed → values/offsets
+    (n, nblk, B/n). The n workers' offsets partition every block (correlated
+    compressor — DESIGN.md §4.5)."""
+    backend = resolve_backend(backend)
+    n = x3d.shape[0]
+    if backend == "ref":
+        from repro.kernels import ref
+
+        return ref.permk_seeded_workers_ref(x3d, seed.astype(jnp.uint32), n)
+    from repro.kernels.permk import permk_seeded_workers
+
+    return permk_seeded_workers(
+        x3d, seed, interpret=(backend == "pallas_interpret")
+    )
+
+
+def permk_concat_mean(
+    values: jax.Array, seed: jax.Array, block: int, backend: str = "auto"
+) -> jax.Array:
+    """Scatter-free PermK aggregation: (n, nblk, B/n) payloads → (nblk, B)
+    mean via concatenation + inverse-perm gather. Equal to
+    :func:`block_scatter_mean` on the same payloads (disjoint supports ⇒ the
+    scatter has no collisions), but never builds scatter index machinery —
+    this is the server-side shape of the exact d/n-shard exchange."""
+    del backend  # pure gather; the jnp form is already the fused shape
+    from repro.kernels import ref
+
+    return ref.permk_concat_mean_ref(values, seed, block)
+
+
 def key_to_seed(key: jax.Array) -> jax.Array:
     """PRNG key → uint32 seed for the counter-based kernel RNG."""
     return jax.random.bits(key, dtype=jnp.uint32)
@@ -264,11 +295,21 @@ class FlatEngine:
 
     ω/ζ_Q bookkeeping (DESIGN.md §4.3): sampling is with replacement, so
     E[Q(x)] = x with E‖Q(x)−x‖² = (B/kb)(1−1/B)‖x‖² ≤ ω‖x‖², ω = B/kb.
+
+    ``sampler="permk"`` switches the uplink to the *correlated* PermK sampler
+    (DESIGN.md §4.5): one shared seed per round, each worker's payload a
+    disjoint (nblk·B)/n slice of the permuted buffer (wire: 32 + 32·(nblk·B)/n
+    bits per worker), aggregation collision-free. ``kb`` is ignored there —
+    the chunk width is forced to B/n by the partition.
     """
 
     layout: FlatLayout
     kb: int = 8
     backend: str = "auto"
+    sampler: str = "randk"  # "randk" | "permk"
+
+    def __post_init__(self):
+        assert self.sampler in ("randk", "permk"), self.sampler
 
     def worker_seeds(self, key: jax.Array, n: int) -> jax.Array:
         """(n,) uint32 seeds, mirroring the tree path's per-worker key split."""
@@ -280,10 +321,18 @@ class FlatEngine:
 
     @property
     def omega(self) -> float:
+        assert self.sampler == "randk", "PermK ω is n−1; ask the compressor"
         return self.layout.block / self.kb
 
-    def payload_bits(self) -> float:
-        """Wire bits per worker per compressed round."""
+    def payload_bits(self, n: "int | None" = None) -> float:
+        """Wire bits per worker per compressed round. A permk engine REQUIRES
+        the worker count — its chunk width is the partition share B/n, and a
+        defaulted n would silently book the full dense buffer as one worker's
+        compressed payload, corrupting the loss-vs-bits ledger."""
+        if self.sampler == "permk":
+            assert n is not None, "permk payload_bits needs the worker count"
+            assert self.layout.block % n == 0, "n must divide the block width"
+            return 32.0 + 32.0 * self.layout.padded / n
         return seeded_payload_bits(self.layout.nblk, self.kb)
 
     # -- stages -------------------------------------------------------------
@@ -306,11 +355,21 @@ class FlatEngine:
         """Compressed-round aggregate: worker-stacked diff tree → mean Q tree.
 
         Equivalent to decompressing every worker payload and averaging, but
-        the per-worker dense (d,) trees are never built.
+        the per-worker dense (d,) trees are never built. The PermK sampler
+        shares ONE seed across workers (the correlation IS the algorithm) and
+        aggregates scatter-free: the disjoint chunks concatenate through the
+        inverse permutation.
         """
         bufs = pack_stacked(self.layout, diffs)
-        vals, offs = self.compress_stacked(self.worker_seeds(key, n), bufs)
-        dense = self.decompress_mean(vals, offs)
+        if self.sampler == "permk":
+            seed = key_to_seed(key)  # shared: all workers, same permutation
+            vals, _ = block_permk_workers(bufs, seed, self.backend)
+            dense = permk_concat_mean(
+                vals, seed, self.layout.block, self.backend
+            )
+        else:
+            vals, offs = self.compress_stacked(self.worker_seeds(key, n), bufs)
+            dense = self.decompress_mean(vals, offs)
         return unpack(self.layout, dense)
 
     # -- test/validation helpers -------------------------------------------
@@ -326,9 +385,10 @@ def make_engine(
     block: int = DEFAULT_BLOCK,
     backend: str = "auto",
     dtype=jnp.float32,
+    sampler: str = "randk",
 ) -> FlatEngine:
     """Engine for a parameter tree: layout once, fused pipeline forever."""
     return FlatEngine(
         layout=make_layout(params, block=block, dtype=dtype), kb=kb,
-        backend=backend,
+        backend=backend, sampler=sampler,
     )

@@ -32,9 +32,11 @@ import jax.numpy as jnp
 
 from .compressors import (
     Compressor,
+    CorrelatedCompressor,
     Identity,
     SharedRandK,
     tree_compress,
+    tree_compress_worker,
     tree_decompress,
     tree_dim,
     tree_payload_bits,
@@ -76,7 +78,22 @@ def _compress_workers(
     comp: Compressor, key: jax.Array, diffs: PyTree, n: int
 ) -> PyTree:
     """Compress each worker's difference tree. Independent keys per worker,
-    except SharedRandK which reuses one key (correlated masks by design)."""
+    except SharedRandK which reuses one key (correlated masks by design) and
+    CorrelatedCompressor collections (PermK, CorrelatedQ), where ALL workers
+    share the round key and receive their index — the shared randomness is
+    what buys the (A, B) constants (Szlendak et al. 2021)."""
+    if isinstance(comp, CorrelatedCompressor):
+        # a mismatched fleet is not an error the math survives: extra wids
+        # alias back onto the first shards (mask wraparound) and the mean
+        # silently double-counts them — refuse loudly instead.
+        assert n == comp.n, (
+            f"{comp.name} collection sized for n={comp.n} but the round has "
+            f"{n} workers"
+        )
+        wids = jnp.arange(n, dtype=jnp.int32)
+        return jax.vmap(
+            lambda w, t: tree_compress_worker(comp, key, t, w)
+        )(wids, diffs)
     if isinstance(comp, SharedRandK):
         keys = jnp.broadcast_to(key, (n, *key.shape))
     else:
@@ -114,10 +131,15 @@ def _compressed_delta(
     return _decompress_mean(comp, payloads, like, n)
 
 
-def _round_bits(comp: Compressor, engine: "FlatEngine | None", like: PyTree):
-    """Per-worker uplink bits of one compressed round (the paper's ζ_Q axis)."""
+def _round_bits(
+    comp: Compressor, engine: "FlatEngine | None", like: PyTree, n: int = 1
+):
+    """Per-worker uplink bits of one compressed round (the paper's ζ_Q axis).
+
+    ``n`` matters only for partition compressors (PermK): the per-worker
+    payload is the d/n share, so the ledger needs the collection size."""
     if engine is not None:
-        return jnp.asarray(engine.payload_bits())
+        return jnp.asarray(engine.payload_bits(n))
     return jnp.asarray(tree_payload_bits(comp, like))
 
 
@@ -167,7 +189,7 @@ class Marina:
 
         d = tree_dim(state.params)
         bits_dense = jnp.asarray(32.0 * d)
-        bits_q = _round_bits(self.compressor, self.engine, state.params)
+        bits_q = _round_bits(self.compressor, self.engine, state.params, n)
         metrics = StepMetrics(
             grad_est_norm=tree_norm(g_next),
             bits_per_worker=jnp.where(c_k, bits_dense, bits_q),
@@ -245,7 +267,7 @@ class VRMarina:
             bits_per_worker=jnp.where(
                 c_k,
                 jnp.asarray(32.0 * d),
-                _round_bits(self.compressor, self.engine, state.params),
+                _round_bits(self.compressor, self.engine, state.params, n),
             ),
             sync_round=c_k.astype(jnp.int32),
             oracle_calls=jnp.where(c_k, float(m_full), 2.0 * b_prime),
@@ -307,7 +329,8 @@ class PPMarina:
         bits_total = jnp.where(
             c_k,
             jnp.asarray(32.0 * d * n),
-            _round_bits(self.compressor, self.engine, state.params) * self.r,
+            _round_bits(self.compressor, self.engine, state.params, self.r)
+            * self.r,
         )
         metrics = StepMetrics(
             grad_est_norm=tree_norm(g_next),

@@ -34,6 +34,70 @@ def pp_marina_gamma(L: float, omega: float, p: float, r: int) -> float:
     return 1.0 / (L * (1.0 + math.sqrt((1.0 - p) * (1.0 + omega) / (p * r))))
 
 
+# ---------------------------------------------------------------------------
+# (A, B)-refined stepsizes (Szlendak et al. 2021, "Permutation Compressors")
+#
+# The collection {Q_i} enters MARINA's rate only through the AB-inequality
+#
+#     E‖(1/n)Σ Q_i(x_i) − x̄‖² ≤ A·(1/n)Σ‖x_i‖² − B·‖x̄‖²
+#
+# (see Compressor.ab_constants). The estimator-drift term of the Thm 2.1
+# proof then carries A·L₊² − B·L₋² instead of (ω/n)·L², where L₊² = (1/n)ΣL_i²
+# and L₋ is the "Hessian variance" smoothness of f_i − f (L₋ ≤ L₊; equal in
+# the worst case). Independent ω-compressors have (A, B) = ((1+ω)/n, 1/n)
+# (tight — see ab_constants), which recovers marina_gamma exactly; PermK's
+# (1, 1) makes the drift term vanish for homogeneous smoothness and admits
+# the plain GD stepsize γ = 1/L at d/n uplink per worker.
+# ---------------------------------------------------------------------------
+
+
+def ab_from_omega(omega: float, n: int) -> tuple:
+    """Tight (A, B) for n *independent* ω-compressors: ((1+ω)/n, 1/n).
+
+    NOT (1+ω, ω): with identical inputs that pair demands ω ≤ n (its right
+    side degenerates to ‖x‖² against a true aggregate variance of (ω/n)‖x‖²),
+    so it is violated by any high-compression operator — see the counter-
+    example in Compressor.ab_constants."""
+    return ((1.0 + omega) / n, 1.0 / n)
+
+
+def marina_gamma_ab(
+    L: float,
+    A: float,
+    B: float,
+    p: float,
+    l_plus: float | None = None,
+    l_minus: float | None = None,
+) -> float:
+    """AB-refined Thm 2.1:  γ ≤ 1 / ( L + sqrt((1-p)/p · (A·L₊² − B·L₋²)) ).
+
+    With (A, B) = ab_from_omega(ω, n) and L₊ = L₋ = L this is exactly
+    :func:`marina_gamma`; with PermK's (1, 1) and homogeneous smoothness the
+    sqrt term vanishes and γ = 1/L."""
+    lp = L if l_plus is None else l_plus
+    lm = lp if l_minus is None else l_minus
+    inner = max((1.0 - p) / p * (A * lp**2 - B * lm**2), 0.0)
+    return 1.0 / (L + math.sqrt(inner))
+
+
+def marina_gamma_permk(
+    L: float,
+    p: float,
+    l_plus: float | None = None,
+    l_minus: float | None = None,
+) -> float:
+    """Perm-K corollary of the AB theorem: (A, B) = (1, 1), so
+    γ = 1 / (L + sqrt((1-p)/p · (L₊² − L₋²))) — and exactly 1/L whenever the
+    workers share the smoothness constant (L₋ = L₊), i.e. MARINA+PermK runs
+    at the uncompressed GD stepsize while uplinking d/n coords per worker."""
+    return marina_gamma_ab(L, 1.0, 1.0, p, l_plus, l_minus)
+
+
+def permk_default_p(n: int) -> float:
+    """ζ_Q/d for PermK is (d/n)/d = 1/n (Cor. 2.1 choice)."""
+    return 1.0 / n
+
+
 def diana_alpha(omega: float) -> float:
     """DIANA shift learning rate α ≤ 1/(1+ω) (Mishchenko et al. 2019)."""
     return 1.0 / (1.0 + omega)

@@ -2,6 +2,9 @@
 
 * ``randk.py``    — seeded RandK gather (`randk_seeded`, `randk_seeded_workers`)
                     and the server-side `scatter_accum` mean (DESIGN.md §5).
+* ``permk.py``    — PermK correlated uplink (`permk_seeded_workers`): one
+                    shared seeded affine permutation per block, worker-disjoint
+                    chunk supports (DESIGN.md §4.5/§5).
 * ``quantize.py`` — fused two-pass QSGD.
 * ``ref.py``      — bit-exact pure-jnp oracles; the CPU/`ref` backend of the
                     flat engine (repro.core.flat) *is* these oracles.

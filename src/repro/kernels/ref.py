@@ -101,3 +101,89 @@ def randk_seeded_workers_ref(
     return jax.vmap(
         lambda x2d, s: randk_seeded_ref(x2d, s.astype(jnp.uint32), kb, scale)
     )(x3d, seeds)
+
+
+# ---------------------------------------------------------------------------
+# PermK: seeded affine block permutations (disjoint worker supports)
+# ---------------------------------------------------------------------------
+
+
+def affine_perm_params_ref(seed: jax.Array, nblk: int, block: int):
+    """Per-block affine bijection π_b(t) = (a_b·t + c_b) mod block.
+
+    a_b is forced odd (a unit of Z_{2^k}, so π_b is a permutation of the
+    block) and both coefficients come from the murmur3 counter RNG at
+    counters (2b, 2b+1) — disjoint from the randk sampler's stream only by
+    convention (different compressor, different seed).
+    Returns a, c: (nblk,) uint32."""
+    b = jnp.arange(nblk, dtype=jnp.uint32)
+    mask = jnp.uint32(block - 1)
+    a = (murmur_bits_ref(seed, 2 * b) | jnp.uint32(1)) & mask
+    c = murmur_bits_ref(seed, 2 * b + 1) & mask
+    return a, c
+
+
+def odd_inverse_ref(a: jax.Array) -> jax.Array:
+    """Multiplicative inverse of odd a modulo 2^32 (Newton iteration; exact
+    after 5 steps). Masking to block−1 gives the inverse mod any 2^k."""
+    a = a.astype(jnp.uint32)
+    inv = a  # correct mod 2^3 already for odd a
+    for _ in range(5):
+        inv = inv * (jnp.uint32(2) - a * inv)
+    return inv
+
+
+def permk_offsets_ref(
+    seed: jax.Array, nblk: int, block: int, n: int, wid: jax.Array
+) -> jax.Array:
+    """Worker wid's PermK support: offsets (nblk, block/n) int32 in [0, block).
+
+    Worker w owns permuted slots [w·C, (w+1)·C), C = block/n; across the n
+    workers the offsets partition every block exactly (π is a bijection)."""
+    assert block % n == 0, "worker count must divide the block width"
+    chunk = block // n
+    a, c = affine_perm_params_ref(seed.astype(jnp.uint32), nblk, block)
+    t = (
+        jnp.arange(chunk, dtype=jnp.uint32)[None, :]
+        + jnp.asarray(wid, jnp.uint32) * jnp.uint32(chunk)
+    )
+    off = (a[:, None] * t + c[:, None]) & jnp.uint32(block - 1)
+    return off.astype(jnp.int32)
+
+
+def permk_seeded_workers_ref(x3d: jax.Array, seed: jax.Array, n: int):
+    """Oracle for the PermK uplink: one SHARED seed, per-worker disjoint chunk.
+
+    x3d: (n, nblk, B); returns values/offsets, both (n, nblk, B/n); values are
+    scaled by n (Perm-K's unbiasedness factor)."""
+    nblk, B = x3d.shape[1], x3d.shape[2]
+    wids = jnp.arange(n, dtype=jnp.int32)
+
+    def one(x2d, w):
+        off = permk_offsets_ref(seed.astype(jnp.uint32), nblk, B, n, w)
+        vals = jnp.take_along_axis(x2d, off, axis=1) * jnp.asarray(n, x2d.dtype)
+        return vals, off
+
+    return jax.vmap(one)(x3d, wids)
+
+
+def permk_concat_mean_ref(
+    values: jax.Array, seed: jax.Array, block: int
+) -> jax.Array:
+    """Disjoint-support aggregation: mean over n PermK payloads WITHOUT scatter.
+
+    values: (n, nblk, block/n) worker payloads (already scaled by n).
+    The supports partition each block, so the mean is assembly, not
+    accumulation: concatenate the chunks in slot order t = w·C+j and gather
+    through the inverse permutation π⁻¹(s) = a⁻¹·(s − c) mod block.
+    Returns (nblk, block) f32 — bit-compatible with scatter_accum_ref on the
+    same payloads (collision-free ⇒ identical sums)."""
+    n, nblk, chunk = values.shape
+    a, c = affine_perm_params_ref(seed.astype(jnp.uint32), nblk, block)
+    a_inv = odd_inverse_ref(a)
+    s = jnp.arange(block, dtype=jnp.uint32)[None, :]
+    slot = (a_inv[:, None] * (s - c[:, None])) & jnp.uint32(block - 1)
+    # (nblk, block) values ordered by slot: slot t holds worker t//C's j-th value
+    by_slot = jnp.moveaxis(values, 0, 1).reshape(nblk, n * chunk)
+    dense = jnp.take_along_axis(by_slot, slot.astype(jnp.int32), axis=1)
+    return dense.astype(jnp.float32) / n

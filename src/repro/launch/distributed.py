@@ -10,7 +10,14 @@ explicit GSPMD shardings and payload collectives — DESIGN.md §3):
 * ``compressed_step`` — the probability-(1−p) round: per-worker two-point
   gradient differences, Block-RandK compressed; payloads are *replicated across
   the worker axes* (the HLO all-gather whose bytes are the paper's ζ_Q), then
-  scatter-decompressed and averaged locally by every device.
+  scatter-decompressed and averaged locally by every device. With
+  ``compression="permk"`` the round uses the correlated Perm-K compressor
+  (Szlendak et al. 2021): one shared permutation partitions each leaf's lane
+  dimension across workers, every worker's payload is a disjoint L/n shard,
+  and the exchange is an exact all-to-all of those shards — values only, no
+  indices on the wire (the permutation regenerates from the replicated round
+  key), and the mean assembles by inverse-perm gather with zero scatter
+  collisions.
 * ``train_step``      — production step: Bernoulli(p) `lax.cond` over the two.
   The dry-run lowers sync/compressed separately so §Roofline can attribute
   costs per round type.
@@ -88,6 +95,7 @@ def _compress_decompress_mean(
     staged_payload: bool = True,
     out_shardings: "PyTree | None" = None,
     backend: str = "auto",
+    compression: str = "randk",
 ) -> PyTree:
     """Per-leaf Block-RandK across workers → dense mean update.
 
@@ -109,6 +117,16 @@ def _compress_decompress_mean(
     both stay sharded, and the scheme scales to 671B. Theory cost: the
     cross-worker error correlation forfeits the 1/n variance averaging
     (ω instead of ω/√n in Thm 2.1).
+
+    compression="permk" (Szlendak et al. 2021): one permutation of each
+    leaf's lane dimension, SHARED across workers, partitions the coordinates;
+    worker i's payload is its disjoint (R, L/n) shard ×n. Because supports
+    are disjoint, the exchange is an exact all-to-all of d/n shards — values
+    only, no indices (every device regenerates the permutation from the
+    replicated round key) — and the mean assembles by inverse-permutation
+    *gather*: no scatter, no collisions, and no (A − B) > 0 variance premium
+    in the stepsize (core/stepsize.py::marina_gamma_permk). Leaves whose lane
+    width L is not divisible by n fall back to the independent-mask path.
     """
     leaves, treedef = jax.tree.flatten(diffs)
     out_shard_leaves = (
@@ -128,7 +146,24 @@ def _compress_decompress_mean(
         wspec = P(waxes if len(waxes) != 1 else waxes[0]) if waxes else P()
         worker_sharded = NamedSharding(mesh, wspec)
 
-        if shared_mask:
+        if compression == "permk" and L % n == 0:
+            C = L // n
+            perm = jax.random.permutation(lk, L)  # shared across workers
+            idx = jnp.broadcast_to(perm.reshape(n, 1, C), (n, R, C))
+            vals = _gather_along_last(x, idx, float(n), backend)  # Q_i nonzeros
+            if staged_payload:
+                vals = jax.lax.with_sharding_constraint(vals, worker_sharded)
+            repl = NamedSharding(mesh, P())
+            # the exact all-to-all of d/n shards: VALUES ONLY ride the wire
+            # (bf16 when packed); the permutation regenerates from the
+            # replicated round key on every device, so there is no index
+            # payload and no scatter on arrival.
+            wire = vals.astype(jnp.bfloat16) if packed_payload else vals
+            wire = jax.lax.with_sharding_constraint(wire, repl)
+            by_slot = jnp.moveaxis(wire.astype(jnp.float32), 0, 1).reshape(R, L)
+            inv = jnp.argsort(perm)
+            dense = (jnp.take(by_slot, inv, axis=1) / n).astype(leaf.dtype)
+        elif shared_mask:
             idx = jax.random.randint(lk, (R, kb), 0, L, jnp.int32)
             vals = _gather_along_last(
                 x, jnp.broadcast_to(idx, (n, R, kb)), scale, backend
@@ -151,7 +186,9 @@ def _compress_decompress_mean(
                 vals = jax.lax.with_sharding_constraint(vals, worker_sharded)
             repl = NamedSharding(mesh, P())
             if packed_payload:
-                # §Perf: bf16 values + int16 indices on the wire (8 → 4 B/coord)
+                # §Perf: bf16 values + int16 indices on the wire — 8 → 4
+                # B/coord, degrading to int32 indices (8 → 6 B/coord) when
+                # L > 32767 (int16 can't address the lane)
                 vals = jax.lax.with_sharding_constraint(
                     vals.astype(jnp.bfloat16), repl
                 ).astype(leaf.dtype)
@@ -195,12 +232,16 @@ def build_train_steps(
     replicate_params: bool = False,
     staged_payload: bool = True,
     compression_backend: str = "auto",
+    compression: str = "randk",
 ):
     """Returns (fns, abstract_args) for sync_step / compressed_step / train_step.
 
     §Perf overrides:
     * shared_mask      — SharedRandK: K-value psum instead of n·K all-gather
-    * packed_payload   — bf16 values + int8 jitter on the wire
+    * packed_payload   — bf16 values + int16 indices on the wire (8 → 4
+      B/coord; indices fall back to int32 when L > 32767, 8 → 6 B/coord)
+    * compression      — "randk" (independent masks, n·K all-gather) or
+      "permk" (correlated Perm-K: disjoint d/n shards, values-only exchange)
     * replicate_params — small-model mode: no tensor parallelism; the model
       axis becomes within-worker data parallelism (per-worker batch sharded
       over "model", params replicated)
@@ -262,7 +303,7 @@ def build_train_steps(
         delta = _compress_decompress_mean(
             key, diffs, n, mesh, waxes, shared_mask, packed_payload,
             staged_payload, out_shardings=p_shard,
-            backend=compression_backend,
+            backend=compression_backend, compression=compression,
         )
         g_new = jax.tree.map(jnp.add, g, delta)
         return x_new, g_new

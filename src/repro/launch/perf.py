@@ -40,6 +40,9 @@ VARIANTS = {
     "shared_mask": ({"shared_mask": True}, {}, {}),
     "packed_payload": ({"packed_payload": True}, {}, {}),
     "shared_and_packed": ({"shared_mask": True, "packed_payload": True}, {}, {}),
+    # correlated Perm-K: disjoint d/n shards, values-only exchange, γ = 1/L
+    "permk_payload": ({"compression": "permk"}, {}, {}),
+    "permk_packed": ({"compression": "permk", "packed_payload": True}, {}, {}),
     # memory/compute policy
     "no_remat": ({"remat": False}, {}, {}),
     "f32_params": ({"dtype": jnp.float32}, {}, {}),

@@ -5,8 +5,9 @@ the same algorithm code as the mesh path — see launch/distributed.py for the
 sharded production step). It owns:
 
 * method construction (MARINA / VR-MARINA / PP-MARINA / DIANA / DCGD / EC-SGD /
-  GD) with compressor + stepsize policy — ``block_randk``/``flat_randk``
-  compressors additionally get the fused flat-buffer engine (DESIGN.md §4),
+  GD) with compressor + stepsize policy — ``block_randk``/``flat_randk`` and
+  ``permk`` compressors additionally get the fused flat-buffer engine
+  (DESIGN.md §4; correlated collections are sized to ``n_workers``),
 * the per-step data plumbing (full-round batches vs b′ minibatches — the
   Alg. 3 online case), generated *inside the jitted scan* from the step index
   (the synthetic pipeline is a pure function of (seed, step)),
@@ -36,13 +37,16 @@ from repro.core import (
     Diana,
     ECSGD,
     BlockRandK,
+    CorrelatedCompressor,
     Marina,
+    PermK,
     PPMarina,
     VRMarina,
     diana_alpha,
     make_compressor,
     make_engine,
     tree_dim,
+    tree_omega,
 )
 from repro.data import HeterogeneousLMData, make_prefix_embeddings, worker_batches
 from repro.models import lm_loss
@@ -110,19 +114,26 @@ class Trainer:
 
         d = tree_dim(init_params)
         comp = make_compressor(train_cfg.compressor, **train_cfg.comp_kwargs)
+        if isinstance(comp, CorrelatedCompressor) and comp.n == 0:
+            # correlated collections are sized by the worker fleet
+            comp = dataclasses.replace(comp, n=train_cfg.n_workers)
         p = train_cfg.p if train_cfg.p is not None else comp.default_p(d)
         self.p = p
         self.comp = comp
-        # block_randk rounds run fused over the packed flat buffer; every
-        # other compressor keeps the per-leaf tree path.
-        self.engine = (
-            make_engine(
+        # block_randk / permk rounds run fused over the packed flat buffer;
+        # every other compressor keeps the per-leaf tree path.
+        if isinstance(comp, BlockRandK):
+            self.engine = make_engine(
                 init_params, kb=comp.kb, block=comp.block,
                 backend=train_cfg.flat_backend,
             )
-            if isinstance(comp, BlockRandK)
-            else None
-        )
+        elif isinstance(comp, PermK):
+            self.engine = make_engine(
+                init_params, block=comp.block,
+                backend=train_cfg.flat_backend, sampler="permk",
+            )
+        else:
+            self.engine = None
 
         m = train_cfg.method
         if m == "marina":
@@ -143,9 +154,15 @@ class Trainer:
         elif m == "diana":
             alpha = train_cfg.diana_alpha
             if alpha is None:
-                from repro.core import tree_omega
-
-                alpha = diana_alpha(max(comp.omega(d), 1e-9)) if comp.unbiased else 0.5
+                # the per-leaf lifted compressor's worst-leaf ω, NOT ω of the
+                # total tree dimension: for absolute-k compressors (RandK(64))
+                # the true per-leaf ω is far below d/k − 1, and an α from the
+                # inflated ω would be needlessly tiny (slow shift learning).
+                alpha = (
+                    diana_alpha(max(tree_omega(comp, init_params), 1e-9))
+                    if comp.unbiased
+                    else 0.5
+                )
             self.method = Diana(
                 grad_fn, comp, train_cfg.gamma, alpha, train_cfg.n_workers
             )
@@ -245,10 +262,29 @@ class Trainer:
             state = self.method.init(self.params0, b0)
 
         start = 0
+        bits = 0.0
+        oracle = 0.0
         if tc.ckpt_dir:
             s = latest_step(tc.ckpt_dir)
             if s is not None:
-                state = load_checkpoint(tc.ckpt_dir, s, state)
+                # the communication/oracle ledgers resume WITH the state:
+                # a restart that zeroes them silently shifts every resumed
+                # loss-vs-bits curve (the Fig. 1/2 x-axis) left.
+                like = {
+                    "state": state,
+                    "bits": np.zeros((), np.float32),
+                    "oracle": np.zeros((), np.float32),
+                }
+                try:
+                    ck = load_checkpoint(tc.ckpt_dir, s, like)
+                    state = ck["state"]
+                    bits = float(ck["bits"])
+                    oracle = float(ck["oracle"])
+                except KeyError:
+                    # pre-ledger checkpoint (bare state tree): resume the
+                    # iterates and accept zeroed ledgers rather than refuse
+                    # the directory outright.
+                    state = load_checkpoint(tc.ckpt_dir, s, state)
                 start = s + 1
 
         # the chunk carry is donated; copy so self.params0 (aliased into the
@@ -256,8 +292,6 @@ class Trainer:
         state = jax.tree.map(jnp.array, state)
 
         hist = TrainMetrics()
-        bits = 0.0
-        oracle = 0.0
         t0 = time.time()
 
         # anchor the loss-vs-bits curve at the pre-training state (step
@@ -297,5 +331,13 @@ class Trainer:
                 hist.oracle_cum.append(oracle)
                 hist.wall.append(time.time() - t0)
             if is_ckpt:
-                save_checkpoint(tc.ckpt_dir, bound, state)
+                save_checkpoint(
+                    tc.ckpt_dir,
+                    bound,
+                    {
+                        "state": state,
+                        "bits": np.float32(bits),
+                        "oracle": np.float32(oracle),
+                    },
+                )
         return state, hist

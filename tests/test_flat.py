@@ -203,6 +203,52 @@ def test_engine_payload_bits_and_backend_resolution():
         resolve_backend("cuda")
 
 
+@pytest.mark.parametrize("path", ["tree", "flat"])
+def test_bf16_params_compressed_round_smoke(path):
+    """bf16 params survive full compressed rounds on both the per-leaf tree
+    path (QSGD decompresses to f32 — tree_decompress must cast back, or
+    Marina.step's lax.cond branches disagree on dtype) and the fused flat
+    path (pack/unpack round-trips the leaf dtype)."""
+    from repro.core import QSGD
+    from repro.core.tree_util import tree_sub
+
+    n = 3
+    params = {
+        "w": jnp.ones((4, 40), jnp.bfloat16) * 0.5,
+        "b": jnp.zeros((10,), jnp.bfloat16),
+    }
+
+    def loss(p, batch):
+        return sum(
+            jnp.sum((a.astype(jnp.float32) - b) ** 2)
+            for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(batch))
+        )
+
+    batches = jax.tree.map(
+        lambda x: jax.random.normal(jax.random.PRNGKey(0), (n, *x.shape)), params
+    )
+    if path == "tree":
+        comp = QSGD(s=4)
+        m = Marina(jax.grad(loss), comp, gamma=0.01, p=0.5)
+    else:
+        comp = BlockRandK(kb=8, block=128)
+        eng = make_engine(params, kb=8, block=128, backend="ref")
+        m = Marina(jax.grad(loss), comp, gamma=0.01, p=0.5, engine=eng)
+
+    st = m.init(params, batches)
+    step = jax.jit(m.step)
+    seen = set()
+    for k in range(12):
+        st, met = step(st, jax.random.PRNGKey(k), batches)
+        seen.add(int(met.sync_round))
+    assert seen == {0, 1}  # both lax.cond branches actually traced + ran
+    for leaf, like in zip(jax.tree.leaves(st.params), jax.tree.leaves(params)):
+        assert leaf.dtype == like.dtype == jnp.bfloat16
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+    for leaf in jax.tree.leaves(st.g):
+        assert leaf.dtype == jnp.bfloat16
+
+
 def test_scatter_mean_never_materializes_dense_workers():
     """The aggregation jaxpr must not contain an (n, padded) dense
     intermediate — peak memory of the fused path is payload + one

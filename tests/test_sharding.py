@@ -119,7 +119,26 @@ _SUBPROCESS_PROG = textwrap.dedent(
     tot = sum(int(t.size) for t in delta)
     frac = nz / tot
     assert 0.0005 < frac < 0.3, f"RandK support fraction {frac}"
-    print("SUBPROCESS_OK", err, frac)
+
+    # Perm-K disjoint-shard round: the shared permutation partitions every
+    # n-divisible lane dimension, so the decompressed delta is DENSE wherever
+    # the gradient diff is — support must be far above the n*K randk round.
+    bundle_pk = build_train_steps(
+        arch, mesh, multi_pod=False, global_batch=8, seq_len=64,
+        gamma=0.1, dtype=jnp.float32, compression="permk",
+    )
+    params3 = init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    g_init3 = jax.tree.map(lambda t: jnp.full_like(t, 0.01), params3)
+    g_keep3 = jax.tree.map(jnp.array, g_init3)
+    with bundle_pk.mesh:
+        fn, _ = bundle_pk.fns["compressed_step"]
+        x3, g3 = fn(params3, g_init3, batch, jax.random.PRNGKey(2))
+    delta3 = [a - b for a, b in zip(jax.tree.leaves(g3), jax.tree.leaves(g_keep3))]
+    assert all(bool(jnp.all(jnp.isfinite(t))) for t in delta3)
+    nz3 = sum(int(jnp.sum(jnp.abs(t) > 1e-12)) for t in delta3)
+    frac3 = nz3 / tot
+    assert frac3 > 2 * frac, f"PermK support {frac3} not denser than RandK {frac}"
+    print("SUBPROCESS_OK", err, frac, frac3)
     """
 )
 

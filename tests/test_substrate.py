@@ -138,6 +138,42 @@ def test_trainer_loss_decreases(method):
     assert hist.bits_cum[-1] > 0
 
 
+def test_trainer_permk_fused_engine():
+    """compressor="permk" wires the correlated engine: collection sized to the
+    worker fleet, compressed-round ledger at the exact 32 + 32·(nblk·B)/n
+    wire, loss finite and decreasing."""
+    from repro.core import PermK
+
+    cfg = tiny_model()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tcfg = TrainConfig(
+        method="vr_marina",
+        compressor="permk",
+        comp_kwargs={"block": 256},
+        gamma=0.2,
+        n_workers=4,
+        batch_per_worker=4,
+        mb_per_worker=2,
+        steps=20,
+        log_every=5,
+    )
+    trainer = Trainer(cfg, tcfg, params)
+    assert isinstance(trainer.comp, PermK) and trainer.comp.n == 4
+    assert trainer.engine is not None and trainer.engine.sampler == "permk"
+    assert trainer.p == 0.25  # ζ_Q/d = 1/n
+    state, hist = trainer.run()
+    assert hist.loss[-1] < hist.loss[0]
+    assert all(np.isfinite(hist.loss))
+    # ledger: every compressed round books 32 + 32·padded/n bits, every sync
+    # round 32·d — the cumulative total must decompose on that lattice.
+    per_q = 32.0 + 32.0 * trainer.engine.layout.padded / 4
+    d = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    total = hist.bits_cum[-1]
+    n_sync = round((total - 20 * per_q) / (32.0 * d - per_q))
+    assert 0 <= n_sync <= 20
+    assert total == pytest.approx(n_sync * 32.0 * d + (20 - n_sync) * per_q)
+
+
 def test_trainer_resume_exact(tmp_path):
     """Checkpoint + resume reproduces the uninterrupted run bit-for-bit."""
     cfg = tiny_model()
@@ -160,15 +196,33 @@ def test_trainer_resume_exact(tmp_path):
 
     # uninterrupted 10 steps
     t_full = Trainer(cfg, mk(10, None), params)
-    state_full, _ = t_full.run()
+    state_full, hist_full = t_full.run()
 
     # 5 steps + checkpoint, then resume to 10
     d = str(tmp_path)
     t_a = Trainer(cfg, mk(5, d), params)
-    t_a.run()
+    _, hist_a = t_a.run()
     assert latest_step(d) == 4
     t_b = Trainer(cfg, mk(10, d), params)
-    state_res, _ = t_b.run()
+    state_res, hist_res = t_b.run()
 
     for x, y in zip(jax.tree.leaves(state_res.params), jax.tree.leaves(state_full.params)):
         np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+
+    # the communication/oracle ledgers must resume with the state: the
+    # loss-vs-bits curves (Fig. 1/2 x-axis) continue, not restart at 0.
+    assert hist_a.bits_cum[-1] > 0
+    assert hist_res.bits_cum[0] == pytest.approx(hist_a.bits_cum[-1])
+    assert hist_res.bits_cum[-1] == pytest.approx(hist_full.bits_cum[-1], rel=1e-6)
+    assert hist_res.oracle_cum[0] == pytest.approx(hist_a.oracle_cum[-1])
+    assert hist_res.oracle_cum[-1] == pytest.approx(
+        hist_full.oracle_cum[-1], rel=1e-6
+    )
+
+    # legacy checkpoints (bare state tree, pre-ledger format) still resume —
+    # iterates restored, ledgers zeroed — instead of raising KeyError.
+    legacy = str(tmp_path / "legacy")
+    save_checkpoint(legacy, 4, jax.tree.map(jnp.asarray, state_res))
+    state_leg, hist_leg = Trainer(cfg, mk(10, legacy), params).run()
+    assert hist_leg.bits_cum[0] == 0.0  # ledgers zeroed, but no KeyError
+    assert all(np.isfinite(hist_leg.loss))
