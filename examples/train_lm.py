@@ -56,8 +56,13 @@ def main():
     ap.add_argument(
         "--compressor", default="randk",
         help="randk (per-leaf tree path), block_randk (fused flat engine), "
-        "or permk (correlated Perm-K: disjoint d/n shards, γ = 1/L theory)",
+        "permk (correlated Perm-K: disjoint d/n shards, γ = 1/L theory), "
+        "block_qsgd / block_natural (packed quantization wire: 4-bit/int8 "
+        "levels + per-block norms, fused dequantize-and-mean)",
     )
+    ap.add_argument("--qsgd-s", type=int, default=7,
+                    help="quantization levels for block_qsgd (s ≤ 7 ships "
+                    "the 4-bit nibble wire)")
     ap.add_argument("--k-frac", type=float, default=0.02)
     ap.add_argument("--gamma", type=float, default=0.25)
     ap.add_argument("--ckpt-dir", default=None)
@@ -71,6 +76,10 @@ def main():
     if args.compressor in ("block_randk", "flat_randk"):
         comp_kwargs = {"kb": max(1, round(args.k_frac * 1024))}
     elif args.compressor in ("permk", "perm_k"):
+        comp_kwargs = {}
+    elif args.compressor in ("block_qsgd", "flat_qsgd"):
+        comp_kwargs = {"s": args.qsgd_s}
+    elif args.compressor in ("block_natural", "flat_natural", "natural"):
         comp_kwargs = {}
     else:
         comp_kwargs = {"k": args.k_frac}

@@ -44,6 +44,19 @@ HYPOTHESES = {
     "γ = 1/L.",
     "permk_packed": "Perm-K shards + bf16 values: 2 B/coord on the wire vs "
     "the independent-mask packed path's 4 B/coord.",
+    "qsgd_payload": "packed quantization wire (DESIGN.md §4.6): dense "
+    "s-level QSGD against per-row ℓ2 norms — the payload collective carries "
+    "int8 levels + f32 norms (1 B/coord, 4× fewer bytes than the f32 diffs) "
+    "while the dense diffs stay worker-local (staged constraints).",
+    "qsgd4_packed": "4-bit wire: s = 7 levels fit signed nibbles, packed "
+    "eight-per-uint32 lane word — 0.5 B/coord on the collective (8× fewer "
+    "bytes than an f32 dense wire) at ω = min(L/49, √L/7). NOTE the "
+    "baseline compressed round is K-sparse RandK (ζ = d/128), so a dense "
+    "quantizer MUST grow this step's collective ≈ d/(128·8)-fold — the "
+    "expected verdict here is REFUTED; the packed wire's win over the f32 "
+    "representation of the same quantizer is recorded in bench_compression "
+    "(7.9×) and the dense wire is for DIANA/DCGD-style dense-method "
+    "workloads, not a RandK replacement.",
     "no_remat": "dropping rematerialization ⇒ compute term ↓ (no recompute) "
     "at the cost of activation memory ↑.",
     "replicate_params": "small model: abandon tensor parallelism; model axis "
@@ -143,6 +156,65 @@ def render_compression_bench():
             "Perm-K additionally runs MARINA at the GD stepsize γ = 1/L "
             "((A, B) = (1, 1) — see core/stepsize.py::marina_gamma_permk), "
             "which no independent ω-compressor admits.",
+        ]
+    if any("qsgd_us" in e for e in r["entries"]):
+        s = r.get("qsgd_s", "?")
+        lines += [
+            "",
+            "### Packed quantization wire (block-QSGD / RandK∘QSGD)",
+            "",
+            f"Same ω-quantizer, two wire representations (s = {s}, 4-bit "
+            "nibble levels + per-block f32 norms — DESIGN.md §4.6): the "
+            "packed wire vs the f32 wire a quantized round crossed before "
+            "this engine existed — launch/distributed.py had no quantized "
+            "payload collective (dense f32 diffs, 4 B/coord) and the flat "
+            "engine no quantized sampler (f32 values for the composition). "
+            "For calibration: the per-leaf *simulation* arrays were already "
+            "int8+norm (the ledger booked ~4 bits/coord), so against that "
+            "in-memory representation the nibble win is 2×, not 7.9×. "
+            "Wall-clock compares the fused packed round against the "
+            "per-leaf tree path (dense QSGD) and against the flat-fused "
+            "RandK round it rides on (the composition quantizes only the K "
+            "sampled values).",
+            "",
+            "| d | n | round | wire bytes (packed) | wire bytes (f32) | "
+            "bytes ↓ | fused µs | baseline µs |",
+            "|---|---|---|---|---|---|---|---|",
+        ]
+        for e in r["entries"]:
+            if "qsgd_us" not in e:
+                continue
+            rq = e["qsgd_f32_payload_bytes"] / e["qsgd_packed_payload_bytes"]
+            rr = (
+                e["randk_qsgd_f32_payload_bytes"]
+                / e["randk_qsgd_packed_payload_bytes"]
+            )
+            lines.append(
+                f"| {e['d']:.0e} | {e['n']} | dense qsgd "
+                f"| {e['qsgd_packed_payload_bytes']:,.0f} "
+                f"| {e['qsgd_f32_payload_bytes']:,.0f} | **{rq:.1f}×** "
+                f"| {e['qsgd_us']:.0f} | {e['per_leaf_qsgd_us']:.0f} "
+                "(per-leaf) |"
+            )
+            lines.append(
+                f"| {e['d']:.0e} | {e['n']} | randk∘qsgd "
+                f"| {e['randk_qsgd_packed_payload_bytes']:,.0f} "
+                f"| {e['randk_qsgd_f32_payload_bytes']:,.0f} | **{rr:.1f}×** "
+                f"| {e['randk_qsgd_us']:.0f} | {e['flat_fused_us']:.0f} "
+                "(flat randk) |"
+            )
+        lines += [
+            "",
+            "Aggregation of the dense quantized rounds runs through the "
+            "fused dequantize-and-mean kernel: int8 input bandwidth, one "
+            "(nblk, B) f32 accumulator, no (n, d) dequantized trees. "
+            "CPU-sim caveat: the dense quantize pass is murmur-RNG-bound in "
+            "the jnp oracle (the per-leaf baseline rides XLA's native "
+            "threefry), so its wall-clock win is on the wire and in "
+            "aggregation memory, not the CPU dither; on TPU the dither is "
+            "one on-chip VPU pass. The composition row is the round-time "
+            "criterion: it rides the identical gather/scatter as flat RandK "
+            "and lands at parity (±5% at d = 1e6).",
         ]
     return "\n".join(lines)
 

@@ -1,6 +1,8 @@
 """repro.core — the paper's contribution: MARINA-family optimizers + compression."""
 
 from .compressors import (
+    BlockNatural,
+    BlockQSGD,
     BlockRandK,
     Compressor,
     CorrelatedCompressor,
@@ -41,6 +43,7 @@ from .stepsize import (
 )
 
 __all__ = [
+    "BlockNatural", "BlockQSGD",
     "BlockRandK", "Compressor", "CorrelatedCompressor", "CorrelatedQ",
     "FlatEngine", "FlatLayout", "Identity", "PermK",
     "make_engine", "make_layout", "pack", "pack_stacked", "unpack",

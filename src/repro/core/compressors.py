@@ -240,6 +240,135 @@ class BlockRandK(Compressor):
 
 
 @dataclasses.dataclass(frozen=True)
+class BlockQSGD(Compressor):
+    """Blockwise s-level ℓ2 QSGD — the packed quantization wire (DESIGN.md §4.6).
+
+    The vector is viewed as ``(nblk, block)`` zero-padded blocks; each block
+    is quantized against its OWN ℓ2 norm with the murmur3-seeded dither the
+    Pallas kernels draw on-chip, so the flat engine (``sampler="qsgd"``)
+    reproduces this compressor bit for bit. Wire per vector: nblk f32 norms +
+    one level per coordinate — a signed 4-bit nibble (two per byte, eight per
+    uint32 lane word) for s ≤ 7, int8 for s ≤ 127. The dither never rides the
+    wire: the server only needs levels + norms.
+
+    ω: per-block QSGD (Alistarh et al. 2017, Lemma 3.1 at dimension B) gives
+    E‖Q(x_b)−x_b‖² ≤ min(B/s², √B/s)·‖x_b‖²; per-block norms make the bound
+    additive over the orthogonal blocks, so ω = min(B/s², √B/s) — *better*
+    than global-norm QSGD's min(d/s², √d/s) for d > B.
+    ζ_Q: expected nnz ≤ s(s + √B) per block (Thm 3.2), capped at B.
+    """
+
+    s: int = 7
+    block: int = 1024
+    name: str = dataclasses.field(default="block_qsgd", init=False)
+
+    def __post_init__(self):
+        from . import wire
+
+        assert self.block & (self.block - 1) == 0, "block must be a power of two"
+        assert 1 <= self.s <= wire.INT8_MAX_S, "levels must fit the int8 wire"
+
+    def _nblk(self, d: int) -> int:
+        return max(1, -(-d // self.block))
+
+    def omega(self, d: int) -> float:
+        return min(self.block / self.s**2, math.sqrt(self.block) / self.s)
+
+    def expected_density(self, d: int) -> float:
+        per_block = min(self.block, self.s * (self.s + math.sqrt(self.block)))
+        return float(min(d, self._nblk(d) * per_block))
+
+    def payload_bits(self, d: int) -> float:
+        from . import wire
+
+        return wire.block_qsgd_bits(self._nblk(d), self.block, self.s)
+
+    def default_p(self, d: int) -> float:
+        """Dense quantizers make Cor. 2.1's p = ζ_Q/d degenerate (ζ ≈ d ⇒
+        p ≈ 1 ⇒ MARINA = GD). The bits-balanced generalization — equalize
+        the *expected uplink* of sync (32d) and compressed (payload_bits)
+        rounds, the same motivation as the paper's choice — gives
+        p = bits_Q/(32d): ≈ 1/8 on the 4-bit wire, ≈ 1/4 on int8."""
+        return min(1.0, max(self.payload_bits(d) / (32.0 * d), 1e-6))
+
+    def compress(self, key, x):
+        from . import flat, wire
+        from repro.kernels import ops, ref
+
+        x2d = ops.pad_to_blocks(x, self.block)
+        seed = flat.key_to_seed(key)
+        levels, norms = ref.qsgd_block_ref(x2d, seed, self.s)
+        if self.s <= wire.NIBBLE_MAX_S:
+            # honesty: push the levels through the genuine 4-bit wire
+            levels = ref.nibble_unpack_ref(
+                ref.nibble_pack_ref(levels), self.block
+            )
+        return {"q": levels, "norms": norms}
+
+    def decompress(self, payload, d):
+        from repro.kernels import ref
+
+        dense = ref.qsgd_dequant_mean_ref(
+            payload["q"][None], payload["norms"][None], self.s
+        )
+        return dense.reshape(-1)[:d]
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockNatural(Compressor):
+    """Blockwise natural compression (Horváth et al. 2019) on the packed wire.
+
+    |x| is stochastically rounded to a power of two (unbiased, ω = 1/8); the
+    wire ships, per block, one f32 reference scale (the power of two just
+    above the block max) and an int8 ``sign·(exponent-delta+1)`` code per
+    coordinate — 8 bits/coord on a byte-aligned wire, vs the 9-bit
+    sign+exponent entropy estimate of the per-leaf ``NaturalCompression``.
+    Magnitudes ≥ 2^126 below the block max encode as 0 (a ≤ 2^-126·‖x_b‖_∞
+    perturbation — below f32 relative resolution).
+    """
+
+    block: int = 1024
+    name: str = dataclasses.field(default="block_natural", init=False)
+
+    def __post_init__(self):
+        assert self.block & (self.block - 1) == 0, "block must be a power of two"
+
+    def _nblk(self, d: int) -> int:
+        return max(1, -(-d // self.block))
+
+    def omega(self, d: int) -> float:
+        return 1.0 / 8.0
+
+    def expected_density(self, d: int) -> float:
+        return float(d)
+
+    def payload_bits(self, d: int) -> float:
+        from . import wire
+
+        return wire.block_natural_bits(self._nblk(d), self.block)
+
+    def default_p(self, d: int) -> float:
+        """Bits-balanced p (see BlockQSGD.default_p): ζ_Q = d would give
+        the degenerate p = 1; the int8 wire gives p ≈ 1/4."""
+        return min(1.0, max(self.payload_bits(d) / (32.0 * d), 1e-6))
+
+    def compress(self, key, x):
+        from . import flat
+        from repro.kernels import ops, ref
+
+        x2d = ops.pad_to_blocks(x, self.block)
+        seed = flat.key_to_seed(key)
+        codes, scales = ref.natural_block_ref(x2d, seed)
+        return {"q": codes, "scales": scales}
+
+    def decompress(self, payload, d):
+        from repro.kernels import ref
+
+        dense = ref.natural_decode_ref(payload["q"], payload["scales"])
+        return dense.reshape(-1)[:d]
+
+
+@dataclasses.dataclass(frozen=True)
 class SharedRandK(RandK):
     """RandK where all workers share the index key for a given round.
 
@@ -409,8 +538,12 @@ class CorrelatedQ(CorrelatedCompressor):
         return float(d)
 
     def payload_bits(self, d: int) -> float:
-        # f32 norm + signed int8 level per coordinate
-        return 32.0 + 8.0 * d
+        # f32 norm + one packed signed level per coordinate (nibble for
+        # s ≤ 7, int8 otherwise); the stratified dither is shared randomness,
+        # never transmitted (wire.py — DESIGN.md §4.6)
+        from . import wire
+
+        return wire.correlated_q_bits(d, self.s)
 
     def ab_constants(self, d: int, n: int) -> tuple:
         return (self.omega(d), 0.0)
@@ -505,8 +638,13 @@ class QSGD(Compressor):
         return float(min(d, self.s * (self.s + math.sqrt(d))))
 
     def payload_bits(self, d: int) -> float:
-        # norm + per-coordinate sign+level packed in ceil(log2(2s+1)) bits
-        return 32.0 + d * math.ceil(math.log2(2 * self.s + 1))
+        # f32 norm + one packed signed level per coordinate. The old
+        # ceil(log2(2s+1))-bit estimate priced an entropy code nothing
+        # shipped; the packed wire is 4-bit nibbles (s ≤ 7) or int8
+        # (wire.py — DESIGN.md §4.6).
+        from . import wire
+
+        return wire.qsgd_global_bits(d, self.s)
 
     def compress(self, key, x):
         norm = jnp.linalg.norm(x)
@@ -541,7 +679,12 @@ class NaturalCompression(Compressor):
         return float(d)
 
     def payload_bits(self, d: int) -> float:
-        return 9.0 * d
+        # f32 reference exponent + int8 sign·exponent-delta code per
+        # coordinate: a byte-aligned wire cannot ship 9-bit symbols, so the
+        # honest count is 32 + 8d (wire.py — DESIGN.md §4.6)
+        from . import wire
+
+        return wire.natural_tree_bits(d)
 
     def compress(self, key, x):
         ax = jnp.abs(x)
@@ -646,6 +789,10 @@ def make_compressor(name: str, **kw) -> Compressor:
         return RandK(**kw)
     if name in ("block_randk", "flat_randk"):
         return BlockRandK(**kw)
+    if name in ("block_qsgd", "flat_qsgd"):
+        return BlockQSGD(**kw)
+    if name in ("block_natural", "flat_natural"):
+        return BlockNatural(**kw)
     if name == "shared_randk":
         return SharedRandK(**kw)
     if name in ("permk", "perm_k"):

@@ -19,11 +19,17 @@ replaces that with a single packed representation:
   ζ_Q, not n·d.
 
 Backends (DESIGN.md §5): ``pallas`` dispatches to the TPU kernels in
-:mod:`repro.kernels.randk` (``randk_seeded`` / ``scatter_accum``);
-``ref`` is the bit-exact pure-jnp oracle from :mod:`repro.kernels.ref`
-(the two share the murmur3 counter RNG, so payloads are identical bit for
-bit); ``pallas_interpret`` runs the kernels in interpret mode for CPU
-validation. ``auto`` picks ``pallas`` on TPU and ``ref`` elsewhere.
+:mod:`repro.kernels` (``randk_seeded`` / ``scatter_accum`` /
+``qsgd_block_workers`` / ``qsgd_dequant_mean`` / …); ``ref`` is the
+bit-exact pure-jnp oracle from :mod:`repro.kernels.ref` (the two share the
+murmur3 counter RNG, so payloads are identical bit for bit);
+``pallas_interpret`` runs the kernels in interpret mode for CPU validation.
+``auto`` picks ``pallas`` on TPU and ``ref`` elsewhere.
+
+Samplers: seeded RandK (f32 values wire), PermK (correlated partition,
+DESIGN.md §4.5), and the packed quantization wire (DESIGN.md §4.6) —
+blockwise QSGD (4-bit/int8 levels + per-block norms), blockwise natural
+compression, and the bandwidth-optimal RandK∘QSGD composition.
 """
 
 from __future__ import annotations
@@ -257,16 +263,78 @@ def permk_concat_mean(
     return ref.permk_concat_mean_ref(values, seed, block)
 
 
+def block_qsgd_workers(x3d: jax.Array, seeds: jax.Array, s: int,
+                       backend: str = "auto"):
+    """Fused blockwise QSGD uplink: (n, nblk, B) + (n,) seeds →
+    (levels (n, nblk, B) int8, norms (n, nblk) f32). Per-block ℓ2 norms ride
+    the wire; the dither is regenerated from the seed and never transmitted."""
+    from repro.kernels import quantize
+
+    return quantize.qsgd_block_workers(
+        x3d, seeds, s, backend=resolve_backend(backend)
+    )
+
+
+def block_qsgd_dequant_mean(levels: jax.Array, norms: jax.Array, s: int,
+                            backend: str = "auto") -> jax.Array:
+    """Fused dequantize-and-mean: (n, nblk, B) int8 + (n, nblk) f32 →
+    (nblk, B) f32. Aggregation reads the payloads at int8 bandwidth; the only
+    dense f32 buffer is the single (nblk, B) accumulator."""
+    from repro.kernels import quantize
+
+    return quantize.qsgd_dequant_mean(
+        levels, norms, s, backend=resolve_backend(backend)
+    )
+
+
+def block_natural_workers(x3d: jax.Array, seeds: jax.Array,
+                          backend: str = "auto"):
+    """Fused blockwise natural-compression uplink: (n, nblk, B) + (n,) seeds
+    → (codes (n, nblk, B) int8, scales (n, nblk) f32)."""
+    from repro.kernels import quantize
+
+    return quantize.natural_block_workers(
+        x3d, seeds, backend=resolve_backend(backend)
+    )
+
+
+def block_natural_dequant_mean(codes: jax.Array, scales: jax.Array,
+                               backend: str = "auto") -> jax.Array:
+    """Fused decode-and-mean of natural payloads → (nblk, B) f32."""
+    from repro.kernels import quantize
+
+    return quantize.natural_dequant_mean(
+        codes, scales, backend=resolve_backend(backend)
+    )
+
+
+def nibble_roundtrip(levels: jax.Array, block: int,
+                     backend: str = "auto") -> jax.Array:
+    """Push int8 levels through the genuine 4-bit wire: pack two-per-byte
+    into uint32 lane words, then unpack (sign-extended). The identity on
+    levels in [-8, 7] — running it in the pipeline keeps the simulation
+    honest about what the wire can represent. levels: (n, nblk, B)."""
+    from repro.kernels import quantize
+
+    backend = resolve_backend(backend)
+    n, nblk, B = levels.shape
+    assert B == block, f"levels last dim {B} != wire block width {block}"
+    words = quantize.nibble_pack(levels.reshape(n * nblk, B), backend=backend)
+    out = quantize.nibble_unpack(words, B, backend=backend)
+    return out.reshape(n, nblk, B)
+
+
 def key_to_seed(key: jax.Array) -> jax.Array:
     """PRNG key → uint32 seed for the counter-based kernel RNG."""
     return jax.random.bits(key, dtype=jnp.uint32)
 
 
 def seeded_payload_bits(nblk: int, kb: int) -> float:
-    """Wire bits of one seeded-RandK payload: uint32 seed + K f32 values
-    (indices are regenerated from the seed server-side — DESIGN.md §4.2).
-    Single source of truth for FlatEngine and BlockRandK."""
-    return 32.0 + 32.0 * nblk * kb
+    """Wire bits of one seeded-RandK payload (delegates to
+    :mod:`repro.core.wire`, the single source of truth — DESIGN.md §4.6)."""
+    from . import wire
+
+    return wire.seeded_randk_bits(nblk, kb)
 
 
 # ---------------------------------------------------------------------------
@@ -301,15 +369,38 @@ class FlatEngine:
     disjoint (nblk·B)/n slice of the permuted buffer (wire: 32 + 32·(nblk·B)/n
     bits per worker), aggregation collision-free. ``kb`` is ignored there —
     the chunk width is forced to B/n by the partition.
+
+    The *packed quantization wire* (DESIGN.md §4.6) adds three samplers whose
+    on-wire representation is bit-packed rather than f32:
+
+    * ``"qsgd"`` — blockwise s-level ℓ2 QSGD: per-block f32 norm + one level
+      per coordinate (signed nibble for s ≤ 7 — the pipeline genuinely packs
+      through uint32 lane words — int8 for s ≤ 127). Aggregation is the fused
+      dequantize-and-mean kernel: int8 input bandwidth, one f32 accumulator.
+    * ``"natural"`` — blockwise power-of-two stochastic rounding (ω = 1/8):
+      per-block f32 scale + int8 exponent-delta codes.
+    * ``"randk_qsgd"`` — the bandwidth-optimal composition: seeded RandK
+      keeps kb coords per block, QSGD quantizes ONLY those K values (per-block
+      norms of the sampled vector). Wire: seed + nblk norms + K packed levels;
+      aggregation dequantizes the K-sized payload and scatter-accumulates.
     """
 
     layout: FlatLayout
     kb: int = 8
     backend: str = "auto"
-    sampler: str = "randk"  # "randk" | "permk"
+    sampler: str = "randk"  # "randk" | "permk" | "qsgd" | "natural" | "randk_qsgd"
+    s: int = 7              # quantization levels for the qsgd-family samplers
+
+    SAMPLERS = ("randk", "permk", "qsgd", "natural", "randk_qsgd")
 
     def __post_init__(self):
-        assert self.sampler in ("randk", "permk"), self.sampler
+        assert self.sampler in self.SAMPLERS, self.sampler
+        if self.sampler in ("qsgd", "randk_qsgd"):
+            from . import wire
+
+            assert 1 <= self.s <= wire.INT8_MAX_S, (
+                f"s={self.s} does not fit the int8 wire"
+            )
 
     def worker_seeds(self, key: jax.Array, n: int) -> jax.Array:
         """(n,) uint32 seeds, mirroring the tree path's per-worker key split."""
@@ -321,19 +412,41 @@ class FlatEngine:
 
     @property
     def omega(self) -> float:
-        assert self.sampler == "randk", "PermK ω is n−1; ask the compressor"
-        return self.layout.block / self.kb
+        """Def-1.1 ω of one worker's sampler (PermK's is collection-level —
+        ask the compressor). Composition: 1+ω multiplies over independent
+        stages, the QSGD stage acting on the kb-dim sampled block vector."""
+        B = self.layout.block
+        if self.sampler == "randk":
+            return B / self.kb
+        if self.sampler == "qsgd":
+            return min(B / self.s**2, float(np.sqrt(B)) / self.s)
+        if self.sampler == "natural":
+            return 1.0 / 8.0
+        if self.sampler == "randk_qsgd":
+            w_q = min(self.kb / self.s**2, float(np.sqrt(self.kb)) / self.s)
+            return (1.0 + B / self.kb) * (1.0 + w_q) - 1.0
+        raise AssertionError("PermK ω is n−1; ask the compressor")
 
     def payload_bits(self, n: "int | None" = None) -> float:
-        """Wire bits per worker per compressed round. A permk engine REQUIRES
-        the worker count — its chunk width is the partition share B/n, and a
-        defaulted n would silently book the full dense buffer as one worker's
-        compressed payload, corrupting the loss-vs-bits ledger."""
+        """Wire bits per worker per compressed round, from the shared wire
+        accounting (repro.core.wire — DESIGN.md §4.6). A permk engine
+        REQUIRES the worker count — its chunk width is the partition share
+        B/n, and a defaulted n would silently book the full dense buffer as
+        one worker's compressed payload, corrupting the loss-vs-bits ledger."""
+        from . import wire
+
+        lay = self.layout
         if self.sampler == "permk":
             assert n is not None, "permk payload_bits needs the worker count"
-            assert self.layout.block % n == 0, "n must divide the block width"
-            return 32.0 + 32.0 * self.layout.padded / n
-        return seeded_payload_bits(self.layout.nblk, self.kb)
+            assert lay.block % n == 0, "n must divide the block width"
+            return wire.permk_bits(lay.padded, n)
+        if self.sampler == "qsgd":
+            return wire.block_qsgd_bits(lay.nblk, lay.block, self.s)
+        if self.sampler == "natural":
+            return wire.block_natural_bits(lay.nblk, lay.block)
+        if self.sampler == "randk_qsgd":
+            return wire.randk_qsgd_bits(lay.nblk, self.kb, self.s)
+        return wire.seeded_randk_bits(lay.nblk, self.kb)
 
     # -- stages -------------------------------------------------------------
     def compress_stacked(self, seeds: jax.Array, bufs: jax.Array):
@@ -367,6 +480,37 @@ class FlatEngine:
             dense = permk_concat_mean(
                 vals, seed, self.layout.block, self.backend
             )
+        elif self.sampler == "qsgd":
+            from . import wire
+
+            seeds = self.worker_seeds(key, n)
+            levels, norms = block_qsgd_workers(bufs, seeds, self.s, self.backend)
+            if self.s <= wire.NIBBLE_MAX_S:
+                # the levels genuinely cross the wire as packed nibbles
+                levels = nibble_roundtrip(levels, self.layout.block, self.backend)
+            dense = block_qsgd_dequant_mean(levels, norms, self.s, self.backend)
+        elif self.sampler == "natural":
+            seeds = self.worker_seeds(key, n)
+            codes, scales = block_natural_workers(bufs, seeds, self.backend)
+            dense = block_natural_dequant_mean(codes, scales, self.backend)
+        elif self.sampler == "randk_qsgd":
+            from repro.kernels import ref
+            from . import wire
+
+            # the gather/scatter stay on the backend-switched fused kernels;
+            # only the K-sized quantize/dequant runs in plain jnp (ζ ≪ d —
+            # bandwidth irrelevant, and bit-exact on every backend).
+            seeds = self.worker_seeds(key, n)
+            vals, offs = self.compress_stacked(seeds, bufs)
+            levels, norms = ref.qsgd_sampled_quantize_ref(vals, seeds, self.s)
+            # the K-sized levels are wire-accounted at 4/8 bits (wire.py) but
+            # skip the in-pipeline pack/unpack: nibble_pack∘nibble_unpack is
+            # a proven bit-exact identity on |level| ≤ s ≤ 7 (tests), and on
+            # CPU the roundtrip defeats XLA's gather/scatter fusion for no
+            # semantic difference. The dense qsgd sampler above DOES cross
+            # the packed representation (its payload is where packing pays).
+            vals = ref.randk_qsgd_dequant_ref(levels, norms, self.s)
+            dense = self.decompress_mean(vals, offs)
         else:
             vals, offs = self.compress_stacked(self.worker_seeds(key, n), bufs)
             dense = self.decompress_mean(vals, offs)
@@ -386,9 +530,10 @@ def make_engine(
     backend: str = "auto",
     dtype=jnp.float32,
     sampler: str = "randk",
+    s: int = 7,
 ) -> FlatEngine:
     """Engine for a parameter tree: layout once, fused pipeline forever."""
     return FlatEngine(
         layout=make_layout(params, block=block, dtype=dtype), kb=kb,
-        backend=backend, sampler=sampler,
+        backend=backend, sampler=sampler, s=s,
     )

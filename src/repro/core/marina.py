@@ -122,9 +122,12 @@ def _compressed_delta(
 ) -> PyTree:
     """One compressed uplink round: (1/n) Σ_i Q(Δ_i).
 
-    With an engine: the fused flat-buffer pipeline (pack → seeded RandK →
-    scatter-accumulate mean → unpack), cost ∝ ζ_Q. Without: the per-leaf
-    tree path (reference semantics, cost ∝ n·d)."""
+    With an engine: the fused flat-buffer pipeline (pack → sampler →
+    aggregate → unpack), cost ∝ ζ_Q. The sampler is the engine's: seeded
+    RandK / PermK with scatter- or concat-mean, or the packed quantization
+    wire (blockwise QSGD / natural / RandK∘QSGD, DESIGN.md §4.6) whose
+    aggregation is the fused dequantize-and-mean at int8 input bandwidth.
+    Without: the per-leaf tree path (reference semantics, cost ∝ n·d)."""
     if engine is not None:
         return engine.fused_delta(key, diffs, n)
     payloads = _compress_workers(comp, key, diffs, n)

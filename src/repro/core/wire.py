@@ -1,0 +1,100 @@
+"""Wire-format accounting — the single source of truth for payload bits.
+
+Every "bits on the wire" number in the repo (compressor ``payload_bits``,
+``FlatEngine.payload_bits``, the trainer's communication ledger, the
+benchmark payload columns) must come from this module, so compressor
+bookkeeping and the engine can never drift apart (DESIGN.md §4.6).
+
+The packed quantization wire (ISSUE 3) fixes the representation per family:
+
+* seeded RandK    — uint32 seed + K float32 values (indices regenerate from
+                    the seed server-side).
+* PermK           — uint32 seed + (padded/n) float32 values (the partition IS
+                    the index).
+* block QSGD      — per-block f32 ℓ2 norm + one level per coordinate:
+                    a signed 4-bit nibble when s ≤ 7 (two per byte, eight per
+                    uint32 lane word), int8 when s ≤ 127. The dither never
+                    rides the wire (the server only needs levels + norms).
+* block natural   — per-block f32 scale (reference power of two) + int8
+                    sign·(exponent-delta+1) code per coordinate.
+* RandK ∘ QSGD    — uint32 seed + per-block f32 norm of the K sampled values
+                    + K quantized levels (4-bit/int8 as above): the
+                    bandwidth-optimal composition quantizes only what RandK
+                    kept.
+
+All values are bits per worker per compressed round; float so the ledgers
+can accumulate without overflow at production scale.
+"""
+
+from __future__ import annotations
+
+F32_BITS = 32.0
+SEED_BITS = 32.0      # one uint32 murmur3 seed
+NIBBLE_BITS = 4.0     # signed 4-bit level (two per byte / eight per uint32)
+INT8_BITS = 8.0
+
+#: largest s whose signed levels fit a 4-bit two's-complement nibble
+NIBBLE_MAX_S = 7
+#: largest s whose signed levels fit int8
+INT8_MAX_S = 127
+
+
+def qsgd_level_bits(s: int) -> float:
+    """Bits per quantized level on the packed wire: sign folded into the
+    level, 4-bit nibble for s ≤ 7, int8 for s ≤ 127."""
+    assert 1 <= s <= INT8_MAX_S, f"s={s} does not fit the int8 wire"
+    return NIBBLE_BITS if s <= NIBBLE_MAX_S else INT8_BITS
+
+
+def dense_f32_bits(d: int) -> float:
+    """The uncompressed wire: one f32 per coordinate (sync rounds, Identity)."""
+    return F32_BITS * d
+
+
+def seeded_randk_bits(nblk: int, kb: int) -> float:
+    """Seeded-RandK flat wire: uint32 seed + K f32 values (DESIGN.md §4.2)."""
+    return SEED_BITS + F32_BITS * nblk * kb
+
+
+def permk_bits(padded: int, n: int) -> float:
+    """PermK flat wire: uint32 seed + the worker's padded/n f32 shard
+    (DESIGN.md §4.5)."""
+    assert padded % n == 0, "worker count must divide the padded dimension"
+    return SEED_BITS + F32_BITS * padded / n
+
+
+def block_qsgd_bits(nblk: int, block: int, s: int) -> float:
+    """Packed block-QSGD wire: per-block f32 norm + one level per coordinate."""
+    return F32_BITS * nblk + qsgd_level_bits(s) * nblk * block
+
+
+def block_natural_bits(nblk: int, block: int) -> float:
+    """Packed natural-compression wire: per-block f32 scale + int8
+    sign·(exponent-delta+1) code per coordinate."""
+    return F32_BITS * nblk + INT8_BITS * nblk * block
+
+
+def randk_qsgd_bits(nblk: int, kb: int, s: int) -> float:
+    """RandK∘QSGD composition wire: uint32 seed (indices regenerate) +
+    per-block f32 norm of the K sampled values + K packed levels."""
+    return SEED_BITS + F32_BITS * nblk + qsgd_level_bits(s) * nblk * kb
+
+
+def qsgd_global_bits(d: int, s: int) -> float:
+    """Per-leaf QSGD (one global ℓ2 norm over the whole vector): f32 norm +
+    one packed level per coordinate. Replaces the old ceil(log2(2s+1))
+    entropy-coding estimate with what the packed wire actually ships."""
+    return F32_BITS + qsgd_level_bits(s) * d
+
+
+def natural_tree_bits(d: int) -> float:
+    """Per-leaf natural compression: f32 reference exponent + int8 code per
+    coordinate (the historical 9-bit sign+exponent estimate ignored that a
+    byte-aligned wire cannot ship 9-bit symbols)."""
+    return F32_BITS + INT8_BITS * d
+
+
+def correlated_q_bits(d: int, s: int) -> float:
+    """CorrelatedQ wire: f32 norm + one packed level per coordinate (the
+    stratified dither is shared randomness, never transmitted)."""
+    return F32_BITS + qsgd_level_bits(s) * d

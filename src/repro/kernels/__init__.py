@@ -5,7 +5,13 @@
 * ``permk.py``    — PermK correlated uplink (`permk_seeded_workers`): one
                     shared seeded affine permutation per block, worker-disjoint
                     chunk supports (DESIGN.md §4.5/§5).
-* ``quantize.py`` — fused two-pass QSGD.
+* ``quantize.py`` — the packed quantization wire (DESIGN.md §4.6):
+                    fused blockwise QSGD / natural uplinks
+                    (`qsgd_block_workers`, `natural_block_workers`), the
+                    fused dequantize-and-mean server kernels, the 4-bit
+                    `nibble_pack`/`nibble_unpack` wire kernels, and the
+                    legacy two-pass global-norm QSGD — all routed through
+                    `flat.resolve_backend` (`backend="auto"`).
 * ``ref.py``      — bit-exact pure-jnp oracles; the CPU/`ref` backend of the
                     flat engine (repro.core.flat) *is* these oracles.
 * ``ops.py``      — jit'd flat-vector wrappers (padding, host-side samplers).

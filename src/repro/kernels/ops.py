@@ -30,6 +30,17 @@ def _interp(interpret) -> bool:
     return bool(interpret)
 
 
+def _quant_backend(interpret) -> str:
+    """ops' legacy interpret flag → the quantize kernels' backend switch:
+    None resolves like the engine ('pallas' on TPU, bit-exact 'ref' on CPU),
+    an explicit bool forces the Pallas kernel in compiled/interpret mode."""
+    if interpret is None:
+        from repro.core.flat import resolve_backend
+
+        return resolve_backend("auto")
+    return "pallas_interpret" if interpret else "pallas"
+
+
 def pad_to_blocks(x: jax.Array, block: int) -> jax.Array:
     """Flat (d,) → (nblk, block) with zero padding."""
     d = x.shape[0]
@@ -93,10 +104,12 @@ def qsgd_compress(
 ):
     """Fused two-pass QSGD: (q int8 (d_padded,), norm scalar)."""
     x2d = pad_to_blocks(x, block)
-    sumsq = _quant.block_sumsq(x2d, interpret=_interp(interpret))
+    sumsq = _quant.block_sumsq(x2d, backend=_quant_backend(interpret))
     norm = jnp.sqrt(jnp.sum(sumsq))
     u2d = jax.random.uniform(key, x2d.shape)
-    q = _quant.qsgd_quantize(x2d, u2d, norm, s, interpret=_interp(interpret))
+    q = _quant.qsgd_quantize(
+        x2d, u2d, norm, s, backend=_quant_backend(interpret)
+    )
     return q, norm
 
 
@@ -109,5 +122,5 @@ def qsgd_decompress(
     block: int = DEFAULT_BLOCK,
     interpret: bool | None = None,
 ) -> jax.Array:
-    dense = _quant.qsgd_dequantize(q, norm, s, interpret=_interp(interpret))
+    dense = _quant.qsgd_dequantize(q, norm, s, backend=_quant_backend(interpret))
     return dense.reshape(-1)[:d]

@@ -1,12 +1,32 @@
-"""Pallas TPU kernels for fused QSGD (s-level ℓ2) quantization.
+"""Pallas TPU kernels for the packed quantization wire (DESIGN.md §4.6/§5).
 
-Two-pass scheme sized for VMEM:
-  pass 1 — ``block_sumsq``: per-(1,B)-tile Σx² partial reduction,
-  pass 2 — ``qsgd_quantize``: sign/|·|/floor/int8-pack in one sweep using the
-            combined norm. Fusing scale+round+cast keeps the quantize pass
-            memory-bound at the int8 *output* bandwidth instead of three f32
-            round trips (the GPU reference does this with a thrust transform;
-            the TPU version is a single VPU pass per tile).
+Every entry point takes ``backend="auto"`` and routes through
+``repro.core.flat.resolve_backend`` exactly like the randk/permk primitives:
+compiled Pallas on TPU, the bit-exact jnp oracle (kernels/ref.py) on CPU,
+``pallas_interpret`` for interpreter-mode validation. (The v1 module
+hardcoded ``interpret=True`` everywhere, so TPU ran these kernels in the
+interpreter — the one backend that should never see interpret mode.)
+
+Kernel inventory:
+
+* ``block_sumsq`` / ``qsgd_quantize`` / ``qsgd_dequantize`` — the original
+  two-pass global-norm QSGD (kept for the ops.py flat-vector wrappers).
+* ``qsgd_block_workers`` — fused blockwise QSGD uplink: one (1, B) VMEM tile
+  per grid step computes the block's ℓ2 norm, draws the murmur3 dither
+  on-chip, and writes int8 levels + the per-block f32 norm in a single VPU
+  sweep (memory-bound at the int8 *output* bandwidth). Workers fold into the
+  grid (n·nblk steps) with per-worker seeds in SMEM, like
+  ``randk_seeded_workers``.
+* ``natural_block_workers`` — fused natural compression: stochastic
+  power-of-two rounding, wire code = sign·(exponent-delta+1) int8 against the
+  block's reference scale.
+* ``qsgd_dequant_mean`` / ``natural_dequant_mean`` — the fused
+  dequantize-and-mean server side: accumulates the n workers' int8 payloads
+  into one (1, B) f32 tile per block; input traffic is int8, the (n, d)
+  dequantized trees are never materialized.
+* ``nibble_pack`` / ``nibble_unpack`` — the 4-bit wire: two's-complement
+  nibbles, eight per uint32 lane word (half a byte per coordinate for
+  s ≤ 7); pure uint32 shift/mask VPU ops.
 """
 
 from __future__ import annotations
@@ -16,6 +36,26 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref as _ref
+from .randk import murmur_bits
+
+
+def _resolve(backend: str) -> str:
+    from repro.core.flat import resolve_backend
+
+    return resolve_backend(backend)
+
+
+def _uniform_from_bits(bits: jax.Array) -> jax.Array:
+    """Kernel-side twin of ``ref.uniform_from_bits_ref`` (exact f32 convert)."""
+    return (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0**-24)
+
+
+# ---------------------------------------------------------------------------
+# Two-pass global-norm QSGD (ops.py flat-vector path)
+# ---------------------------------------------------------------------------
 
 
 def _block_sumsq_kernel(x_ref, out_ref):
@@ -23,7 +63,10 @@ def _block_sumsq_kernel(x_ref, out_ref):
     out_ref[...] = jnp.sum(x * x, axis=-1, keepdims=True)  # (1, 1)
 
 
-def block_sumsq(x2d: jax.Array, *, interpret: bool = True) -> jax.Array:
+def block_sumsq(x2d: jax.Array, *, backend: str = "auto") -> jax.Array:
+    backend = _resolve(backend)
+    if backend == "ref":
+        return _ref.block_sumsq_ref(x2d)
     nblk, B = x2d.shape
     return pl.pallas_call(
         _block_sumsq_kernel,
@@ -31,7 +74,7 @@ def block_sumsq(x2d: jax.Array, *, interpret: bool = True) -> jax.Array:
         in_specs=[pl.BlockSpec((1, B), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nblk, 1), jnp.float32),
-        interpret=interpret,
+        interpret=(backend == "pallas_interpret"),
     )(x2d).reshape(nblk)
 
 
@@ -45,9 +88,13 @@ def _qsgd_kernel(x_ref, u_ref, norm_ref, out_ref, *, s: int):
 
 
 def qsgd_quantize(
-    x2d: jax.Array, u2d: jax.Array, norm: jax.Array, s: int, *, interpret: bool = True
+    x2d: jax.Array, u2d: jax.Array, norm: jax.Array, s: int, *,
+    backend: str = "auto",
 ) -> jax.Array:
     """(nblk, B) f32/bf16 → (nblk, B) int8 levels; norm is the global ℓ2 norm."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        return _ref.qsgd_quantize_ref(x2d, u2d, norm, s)
     nblk, B = x2d.shape
     return pl.pallas_call(
         functools.partial(_qsgd_kernel, s=int(s)),
@@ -59,7 +106,7 @@ def qsgd_quantize(
         ],
         out_specs=pl.BlockSpec((1, B), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nblk, B), jnp.int8),
-        interpret=interpret,
+        interpret=(backend == "pallas_interpret"),
     )(x2d, u2d, norm.reshape(1, 1).astype(jnp.float32))
 
 
@@ -69,8 +116,11 @@ def _dequant_kernel(q_ref, norm_ref, out_ref, *, s: int):
 
 
 def qsgd_dequantize(
-    q2d: jax.Array, norm: jax.Array, s: int, *, interpret: bool = True
+    q2d: jax.Array, norm: jax.Array, s: int, *, backend: str = "auto"
 ) -> jax.Array:
+    backend = _resolve(backend)
+    if backend == "ref":
+        return _ref.qsgd_dequantize_ref(q2d, norm, s)
     nblk, B = q2d.shape
     return pl.pallas_call(
         functools.partial(_dequant_kernel, s=int(s)),
@@ -81,5 +131,256 @@ def qsgd_dequantize(
         ],
         out_specs=pl.BlockSpec((1, B), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nblk, B), jnp.float32),
-        interpret=interpret,
+        interpret=(backend == "pallas_interpret"),
     )(q2d, norm.reshape(1, 1).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Fused blockwise QSGD uplink (per-block norms on the wire — DESIGN.md §4.6)
+# ---------------------------------------------------------------------------
+
+
+def _qsgd_block_workers_kernel(
+    seed_ref, x_ref, q_ref, norm_ref, *, s: int, nblk: int
+):
+    i = pl.program_id(0)          # global block id over n·nblk
+    w = i // nblk                 # worker
+    b = i % nblk                  # worker-local block
+    x = x_ref[...].astype(jnp.float32)   # (1, B)
+    B = x.shape[-1]
+    norm = jnp.sqrt(jnp.sum(x * x))
+    safe = jnp.where(norm > 0, norm, 1.0)
+    # worker-local dither stream: block b covers counters [b·B, (b+1)·B) —
+    # the same stream BlockQSGD.compress draws, so tree/flat paths coincide.
+    ctr = jax.lax.broadcasted_iota(jnp.uint32, (1, B), 1) + jnp.uint32(b * B)
+    u = _uniform_from_bits(murmur_bits(seed_ref[w].astype(jnp.uint32), ctr))
+    level = jnp.floor(s * jnp.abs(x) / safe + u)
+    q_ref[...] = (jnp.sign(x) * level).astype(jnp.int8)
+    norm_ref[...] = norm.reshape(1, 1)
+
+
+def qsgd_block_workers(
+    x3d: jax.Array, seeds: jax.Array, s: int, *, backend: str = "auto"
+):
+    """Fused per-worker blockwise QSGD: (n, nblk, B) + (n,) seeds →
+    (levels (n, nblk, B) int8, norms (n, nblk) f32). One VPU sweep per
+    (1, B) tile: norm, dither, scale, floor, int8 cast — the quantize pass
+    writes at int8 bandwidth instead of three f32 round trips."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        return _ref.qsgd_block_workers_ref(x3d, seeds.astype(jnp.uint32), s)
+    n, nblk, B = x3d.shape
+    x2d = x3d.reshape(n * nblk, B)
+    q, norms = pl.pallas_call(
+        functools.partial(_qsgd_block_workers_kernel, s=int(s), nblk=nblk),
+        grid=(n * nblk,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n * nblk, B), jnp.int8),
+            jax.ShapeDtypeStruct((n * nblk, 1), jnp.float32),
+        ],
+        interpret=(backend == "pallas_interpret"),
+    )(seeds.astype(jnp.int32), x2d)
+    return q.reshape(n, nblk, B), norms.reshape(n, nblk)
+
+
+def _qsgd_dequant_mean_kernel(q_ref, norm_ref, out_ref, *, s: int, n: int):
+    B = out_ref.shape[-1]
+
+    def body(w, acc):
+        qw = jax.lax.dynamic_index_in_dim(q_ref[...], w, 0, keepdims=False)
+        nw = jax.lax.dynamic_index_in_dim(norm_ref[...], w, 0, keepdims=False)
+        return acc + qw.astype(jnp.float32) * (nw[0] / s)
+
+    acc = jax.lax.fori_loop(0, n, body, jnp.zeros((1, B), jnp.float32))
+    out_ref[...] = acc / n
+
+
+def qsgd_dequant_mean(
+    levels: jax.Array, norms: jax.Array, s: int, *, backend: str = "auto"
+) -> jax.Array:
+    """Fused dequantize-and-mean: (n, nblk, B) int8 + (n, nblk) f32 →
+    (nblk, B) f32 mean over workers. The grid owns one (1, B) output tile
+    per block and streams the n int8 payloads through it — aggregation runs
+    at int8 input bandwidth with a single dense f32 accumulator."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        return _ref.qsgd_dequant_mean_ref(levels, norms, s)
+    n, nblk, B = levels.shape
+    return pl.pallas_call(
+        functools.partial(_qsgd_dequant_mean_kernel, s=int(s), n=n),
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((n, 1, B), lambda i: (0, i, 0)),
+            pl.BlockSpec((n, 1), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, B), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblk, B), jnp.float32),
+        interpret=(backend == "pallas_interpret"),
+    )(levels, norms)
+
+
+# ---------------------------------------------------------------------------
+# Fused blockwise natural compression (power-of-two stochastic rounding)
+# ---------------------------------------------------------------------------
+
+
+def _natural_block_workers_kernel(seed_ref, x_ref, code_ref, scale_ref, *, nblk: int):
+    i = pl.program_id(0)
+    w = i // nblk
+    b = i % nblk
+    x = x_ref[...].astype(jnp.float32)   # (1, B)
+    B = x.shape[-1]
+    ax = jnp.abs(x)
+    e = jnp.floor(jnp.log2(jnp.where(ax > 0, ax, 1.0)))
+    lo = jnp.exp2(e)
+    p_up = jnp.where(ax > 0, (ax - lo) / lo, 0.0)
+    ctr = jax.lax.broadcasted_iota(jnp.uint32, (1, B), 1) + jnp.uint32(b * B)
+    u = _uniform_from_bits(murmur_bits(seed_ref[w].astype(jnp.uint32), ctr))
+    e_q = e + (u < p_up).astype(jnp.float32)
+    mx = jnp.max(ax)
+    e_ref = jnp.floor(jnp.log2(jnp.where(mx > 0, mx, 1.0))) + 1.0
+    delta = e_ref - e_q
+    keep = (ax > 0) & (delta <= 126.0)
+    code_ref[...] = jnp.where(
+        keep, jnp.sign(x) * (delta + 1.0), 0.0
+    ).astype(jnp.int8)
+    scale_ref[...] = jnp.exp2(e_ref).reshape(1, 1)
+
+
+def natural_block_workers(
+    x3d: jax.Array, seeds: jax.Array, *, backend: str = "auto"
+):
+    """Fused per-worker natural compression: (n, nblk, B) + (n,) seeds →
+    (codes (n, nblk, B) int8, scales (n, nblk) f32)."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        return _ref.natural_block_workers_ref(x3d, seeds.astype(jnp.uint32))
+    n, nblk, B = x3d.shape
+    x2d = x3d.reshape(n * nblk, B)
+    codes, scales = pl.pallas_call(
+        functools.partial(_natural_block_workers_kernel, nblk=nblk),
+        grid=(n * nblk,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n * nblk, B), jnp.int8),
+            jax.ShapeDtypeStruct((n * nblk, 1), jnp.float32),
+        ],
+        interpret=(backend == "pallas_interpret"),
+    )(seeds.astype(jnp.int32), x2d)
+    return codes.reshape(n, nblk, B), scales.reshape(n, nblk)
+
+
+def _natural_dequant_mean_kernel(code_ref, scale_ref, out_ref, *, n: int):
+    B = out_ref.shape[-1]
+
+    def body(w, acc):
+        cw = jax.lax.dynamic_index_in_dim(code_ref[...], w, 0, keepdims=False)
+        sw = jax.lax.dynamic_index_in_dim(scale_ref[...], w, 0, keepdims=False)
+        c = cw.astype(jnp.float32)
+        mag = sw[0] * jnp.exp2(-(jnp.abs(c) - 1.0))
+        return acc + jnp.where(c != 0, jnp.sign(c) * mag, 0.0)
+
+    acc = jax.lax.fori_loop(0, n, body, jnp.zeros((1, B), jnp.float32))
+    out_ref[...] = acc / n
+
+
+def natural_dequant_mean(
+    codes: jax.Array, scales: jax.Array, *, backend: str = "auto"
+) -> jax.Array:
+    """Fused decode-and-mean of natural payloads: (n, nblk, B) int8 +
+    (n, nblk) f32 → (nblk, B) f32; int8 input bandwidth."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        return _ref.natural_dequant_mean_ref(codes, scales)
+    n, nblk, B = codes.shape
+    return pl.pallas_call(
+        functools.partial(_natural_dequant_mean_kernel, n=n),
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((n, 1, B), lambda i: (0, i, 0)),
+            pl.BlockSpec((n, 1), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, B), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblk, B), jnp.float32),
+        interpret=(backend == "pallas_interpret"),
+    )(codes, scales)
+
+
+# ---------------------------------------------------------------------------
+# 4-bit wire: nibble pack/unpack (two levels per byte, eight per uint32)
+# ---------------------------------------------------------------------------
+
+
+def _nibble_pack_kernel(q_ref, out_ref):
+    q = q_ref[...]                       # (1, B) int8
+    B = q.shape[-1]
+    nib = (q.astype(jnp.int32) & 0xF).astype(jnp.uint32).reshape(B // 8, 8)
+    word = nib[:, 0]
+    for t in range(1, 8):
+        word = word | (nib[:, t] << jnp.uint32(4 * t))
+    out_ref[...] = word.reshape(1, B // 8)
+
+
+def nibble_pack(q2d: jax.Array, *, backend: str = "auto") -> jax.Array:
+    """(nblk, B) int8 levels in [-8, 7] → (nblk, B/8) uint32 lane words —
+    the genuine 4-bit on-wire representation (DESIGN.md §4.6)."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        return _ref.nibble_pack_ref(q2d)
+    nblk, B = q2d.shape
+    assert B % 8 == 0, "block width must pack into whole uint32 words"
+    return pl.pallas_call(
+        _nibble_pack_kernel,
+        grid=(nblk,),
+        in_specs=[pl.BlockSpec((1, B), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, B // 8), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblk, B // 8), jnp.uint32),
+        interpret=(backend == "pallas_interpret"),
+    )(q2d)
+
+
+def _nibble_unpack_kernel(w_ref, out_ref):
+    words = w_ref[...]                   # (1, B/8) uint32
+    nw = words.shape[-1]
+    cols = [
+        ((words >> jnp.uint32(4 * t)) & jnp.uint32(0xF)).reshape(nw, 1)
+        for t in range(8)
+    ]
+    nib = jnp.concatenate(cols, axis=1).astype(jnp.int8)  # (B/8, 8) in 0..15
+    q = jnp.where(nib >= 8, nib - jnp.int8(16), nib)
+    out_ref[...] = q.reshape(1, nw * 8)
+
+
+def nibble_unpack(
+    words: jax.Array, block: int, *, backend: str = "auto"
+) -> jax.Array:
+    """(nblk, B/8) uint32 lane words → (nblk, B) int8; exact inverse of
+    :func:`nibble_pack` on levels in [-8, 7]."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        return _ref.nibble_unpack_ref(words, block)
+    nblk, nw = words.shape
+    assert nw * 8 == block
+    return pl.pallas_call(
+        _nibble_unpack_kernel,
+        grid=(nblk,),
+        in_specs=[pl.BlockSpec((1, nw), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblk, block), jnp.int8),
+        interpret=(backend == "pallas_interpret"),
+    )(words)

@@ -43,6 +43,21 @@ def scatter_accum_ref(
     return dense / n
 
 
+#: counter offset separating the composition's dither stream from the index
+#: stream of the same seed (index counters are < nblk·kb ≪ 2^30). Plain int:
+#: a module-level jnp constant would capture a tracer if the module is first
+#: imported inside a jit trace (the engine imports lazily).
+DITHER_CTR_OFFSET = 0x40000000
+
+
+def uniform_from_bits_ref(bits: jax.Array) -> jax.Array:
+    """uint32 hash bits → f32 uniform in [0, 1), bit-exact on every backend.
+
+    (bits >> 8) < 2^24 is exactly representable in f32, so the conversion and
+    the 2^-24 scale are both exact — ref and kernel agree bit for bit."""
+    return (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0**-24)
+
+
 def qsgd_quantize_ref(
     x2d: jax.Array, u2d: jax.Array, norm: jax.Array, s: int
 ) -> jax.Array:
@@ -187,3 +202,192 @@ def permk_concat_mean_ref(
     by_slot = jnp.moveaxis(values, 0, 1).reshape(nblk, n * chunk)
     dense = jnp.take_along_axis(by_slot, slot.astype(jnp.int32), axis=1)
     return dense.astype(jnp.float32) / n
+
+
+# ---------------------------------------------------------------------------
+# Packed quantization wire: block QSGD / natural compression (DESIGN.md §4.6)
+# ---------------------------------------------------------------------------
+
+
+def qsgd_block_ref(x2d: jax.Array, seed: jax.Array, s: int):
+    """Blockwise s-level ℓ2 QSGD with seeded murmur3 dither.
+
+    x2d: (nblk, B); each block quantized against its OWN ℓ2 norm (the
+    per-block f32 norm rides the wire — DESIGN.md §4.6), dither counters
+    [b·B, (b+1)·B) so the stream is a pure function of (seed, coordinate).
+    Returns (levels int8 (nblk, B), norms f32 (nblk,)); |level| ≤ s, so
+    levels fit a signed nibble for s ≤ 7 and int8 for s ≤ 127."""
+    nblk, B = x2d.shape
+    x = x2d.astype(jnp.float32)
+    norm = jnp.sqrt(jnp.sum(x * x, axis=1))                    # (nblk,)
+    safe = jnp.where(norm > 0, norm, 1.0)
+    ctr = (
+        jnp.arange(B, dtype=jnp.uint32)[None, :]
+        + (jnp.arange(nblk, dtype=jnp.uint32) * B)[:, None]
+    )
+    u = uniform_from_bits_ref(murmur_bits_ref(seed.astype(jnp.uint32), ctr))
+    level = jnp.floor(s * jnp.abs(x) / safe[:, None] + u)
+    return (jnp.sign(x) * level).astype(jnp.int8), norm
+
+
+def qsgd_block_workers_ref(x3d: jax.Array, seeds: jax.Array, s: int):
+    """Per-worker blockwise QSGD: (n, nblk, B) + (n,) seeds →
+    (levels (n, nblk, B) int8, norms (n, nblk) f32). Worker counter streams
+    restart at 0, mirroring the tree path's per-worker key split."""
+    return jax.vmap(
+        lambda x2d, sd: qsgd_block_ref(x2d, sd.astype(jnp.uint32), s)
+    )(x3d, seeds)
+
+
+def qsgd_dequant_mean_ref(
+    levels: jax.Array, norms: jax.Array, s: int
+) -> jax.Array:
+    """Fused server aggregation: (n, nblk, B) int8 levels + (n, nblk) norms
+    → (nblk, B) f32 mean. Accumulates worker by worker (fori_loop) so the
+    only dense f32 buffer is the single (nblk, B) accumulator — the (n, d)
+    dequantized trees are never materialized, and the input traffic stays at
+    int8 bandwidth. Same accumulation order as the Pallas kernel (bit-exact
+    float sums)."""
+    n, nblk, B = levels.shape
+
+    def body(w, acc):
+        lw = jax.lax.dynamic_index_in_dim(levels, w, 0, keepdims=False)
+        nw = jax.lax.dynamic_index_in_dim(norms, w, 0, keepdims=False)
+        return acc + lw.astype(jnp.float32) * (nw / s)[:, None]
+
+    acc = jax.lax.fori_loop(0, n, body, jnp.zeros((nblk, B), jnp.float32))
+    return acc / n
+
+
+def natural_block_ref(x2d: jax.Array, seed: jax.Array):
+    """Blockwise natural compression (Horváth et al. 2019) on the packed wire.
+
+    |x| is stochastically rounded to a power of two (E preserved, ω = 1/8);
+    the wire code is the exponent *delta* from the block's reference scale
+    ``2^(⌊log2 max|x_b|⌋ + 1)``: code = sign·(delta + 1) in int8, 0 for true
+    zeros AND for magnitudes ≥ 2^126 below the block max (dropping those is a
+    ≤ 2^-126·‖x_b‖_∞ perturbation — below f32 relative resolution).
+    Returns (codes int8 (nblk, B), scales f32 (nblk,))."""
+    nblk, B = x2d.shape
+    x = x2d.astype(jnp.float32)
+    ax = jnp.abs(x)
+    e = jnp.floor(jnp.log2(jnp.where(ax > 0, ax, 1.0)))
+    lo = jnp.exp2(e)
+    p_up = jnp.where(ax > 0, (ax - lo) / lo, 0.0)              # in [0, 1)
+    ctr = (
+        jnp.arange(B, dtype=jnp.uint32)[None, :]
+        + (jnp.arange(nblk, dtype=jnp.uint32) * B)[:, None]
+    )
+    u = uniform_from_bits_ref(murmur_bits_ref(seed.astype(jnp.uint32), ctr))
+    e_q = e + (u < p_up).astype(jnp.float32)
+    mx = jnp.max(ax, axis=1)                                   # (nblk,)
+    e_ref = jnp.floor(jnp.log2(jnp.where(mx > 0, mx, 1.0))) + 1.0
+    scale = jnp.exp2(e_ref)
+    delta = e_ref[:, None] - e_q                               # ≥ 0
+    keep = (ax > 0) & (delta <= 126.0)
+    code = jnp.where(keep, jnp.sign(x) * (delta + 1.0), 0.0)
+    return code.astype(jnp.int8), scale
+
+
+def natural_block_workers_ref(x3d: jax.Array, seeds: jax.Array):
+    """Per-worker blockwise natural compression: (n, nblk, B) + (n,) seeds →
+    (codes (n, nblk, B) int8, scales (n, nblk) f32)."""
+    return jax.vmap(
+        lambda x2d, sd: natural_block_ref(x2d, sd.astype(jnp.uint32))
+    )(x3d, seeds)
+
+
+def natural_decode_ref(codes: jax.Array, scales: jax.Array) -> jax.Array:
+    """(nblk, B) int8 codes + (nblk,) f32 scales → dense f32 block buffer."""
+    c = codes.astype(jnp.float32)
+    mag = scales[:, None] * jnp.exp2(-(jnp.abs(c) - 1.0))
+    return jnp.where(c != 0, jnp.sign(c) * mag, 0.0)
+
+
+def natural_dequant_mean_ref(codes: jax.Array, scales: jax.Array) -> jax.Array:
+    """Fused server aggregation of natural payloads: (n, nblk, B) int8 +
+    (n, nblk) f32 → (nblk, B) f32 mean; single dense accumulator."""
+    n, nblk, B = codes.shape
+
+    def body(w, acc):
+        cw = jax.lax.dynamic_index_in_dim(codes, w, 0, keepdims=False)
+        sw = jax.lax.dynamic_index_in_dim(scales, w, 0, keepdims=False)
+        return acc + natural_decode_ref(cw, sw)
+
+    acc = jax.lax.fori_loop(0, n, body, jnp.zeros((nblk, B), jnp.float32))
+    return acc / n
+
+
+def nibble_pack_ref(q2d: jax.Array) -> jax.Array:
+    """(nblk, B) int8 levels in [-8, 7] → (nblk, B/8) uint32 lane words.
+
+    Level t of each 8-group occupies bits [4t, 4t+4) as a two's-complement
+    nibble; this IS the 4-bit wire representation (half a byte per
+    coordinate). Requires B % 8 == 0 (lane-aligned layouts always satisfy)."""
+    nblk, B = q2d.shape
+    assert B % 8 == 0, "block width must pack into whole uint32 words"
+    nib = (q2d.astype(jnp.int32) & 0xF).astype(jnp.uint32).reshape(nblk, B // 8, 8)
+    word = nib[..., 0]
+    for t in range(1, 8):
+        word = word | (nib[..., t] << jnp.uint32(4 * t))
+    return word
+
+
+def nibble_unpack_ref(words: jax.Array, block: int) -> jax.Array:
+    """(nblk, B/8) uint32 lane words → (nblk, B) int8 (sign-extended nibbles).
+    Exact inverse of :func:`nibble_pack_ref` on levels in [-8, 7]."""
+    nblk, nw = words.shape
+    assert nw * 8 == block
+    nib = jnp.stack(
+        [(words >> jnp.uint32(4 * t)) & jnp.uint32(0xF) for t in range(8)],
+        axis=-1,
+    ).astype(jnp.int8)                                         # values 0..15
+    q = jnp.where(nib >= 8, nib - jnp.int8(16), nib)
+    return q.reshape(nblk, block)
+
+
+def randk_qsgd_workers_ref(
+    x3d: jax.Array, seeds: jax.Array, kb: int, scale: float, s: int
+):
+    """RandK∘QSGD composition uplink: seeded RandK keeps kb coords per block
+    (scaled B/kb), then blockwise QSGD quantizes ONLY those K values against
+    the per-block norm of the sampled vector. Dither counters live at
+    DITHER_CTR_OFFSET so they never collide with the index stream of the same
+    seed. Returns (levels (n, nblk, kb) int8, offsets (n, nblk, kb) int32,
+    norms (n, nblk) f32). K-sized compute: no Pallas kernel needed — the
+    quantization touches ζ ≪ d values (the gather/scatter stay on the fused
+    kernels)."""
+    vals, offs = randk_seeded_workers_ref(x3d, seeds, kb, scale)
+    levels, norms = qsgd_sampled_quantize_ref(vals, seeds, s)
+    return levels, offs, norms
+
+
+def qsgd_sampled_quantize_ref(vals: jax.Array, seeds: jax.Array, s: int):
+    """QSGD stage of the composition: quantize already-sampled values
+    (n, nblk, kb) against per-block norms of the SAMPLED vector. Works on
+    whatever the gather kernel produced (so the gather itself can stay on the
+    backend-switched Pallas path). Returns (levels int8, norms f32)."""
+    _, nblk, kb = vals.shape
+    ctr = (
+        jnp.arange(kb, dtype=jnp.uint32)[None, :]
+        + (jnp.arange(nblk, dtype=jnp.uint32) * kb)[:, None]
+        + jnp.uint32(DITHER_CTR_OFFSET)
+    )
+
+    def quantize(v2d, sd):
+        v = v2d.astype(jnp.float32)
+        norm = jnp.sqrt(jnp.sum(v * v, axis=1))
+        safe = jnp.where(norm > 0, norm, 1.0)
+        u = uniform_from_bits_ref(murmur_bits_ref(sd.astype(jnp.uint32), ctr))
+        level = jnp.floor(s * jnp.abs(v) / safe[:, None] + u)
+        return (jnp.sign(v) * level).astype(jnp.int8), norm
+
+    return jax.vmap(quantize)(vals, seeds)
+
+
+def randk_qsgd_dequant_ref(
+    levels: jax.Array, norms: jax.Array, s: int
+) -> jax.Array:
+    """Composition payload → f32 values ready for scatter-accumulate:
+    (n, nblk, kb) int8 + (n, nblk) f32 → (n, nblk, kb) f32. K-sized."""
+    return levels.astype(jnp.float32) * (norms / s)[..., None]

@@ -18,6 +18,12 @@ explicit GSPMD shardings and payload collectives — DESIGN.md §3):
   indices on the wire (the permutation regenerates from the replicated round
   key), and the mean assembles by inverse-perm gather with zero scatter
   collisions.
+  With ``compression="qsgd"`` the round ships the packed quantization wire
+  (DESIGN.md §4.6): workers quantize dense diff rows against per-row ℓ2
+  norms under worker-local sharding constraints, the collective carries int8
+  levels (or 4-bit nibbles in uint32 with ``packed_payload`` and s ≤ 7) +
+  f32 norms — 1 (or 0.5) B/coord instead of 4 — and every device runs the
+  worker-indexed dequantize-and-mean.
 * ``train_step``      — production step: Bernoulli(p) `lax.cond` over the two.
   The dry-run lowers sync/compressed separately so §Roofline can attribute
   costs per round type.
@@ -41,6 +47,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ArchConfig
 from repro.core import flat as flat_engine
+from repro.kernels import ref as kref
 from repro.models import init_cache, init_params, lm_loss, decode_step as model_decode, prefill as model_prefill
 from repro.launch import sharding as shd
 from repro.launch.mesh import num_workers, worker_axis_names
@@ -96,6 +103,7 @@ def _compress_decompress_mean(
     out_shardings: "PyTree | None" = None,
     backend: str = "auto",
     compression: str = "randk",
+    qsgd_s: int = 15,
 ) -> PyTree:
     """Per-leaf Block-RandK across workers → dense mean update.
 
@@ -117,6 +125,15 @@ def _compress_decompress_mean(
     both stay sharded, and the scheme scales to 671B. Theory cost: the
     cross-worker error correlation forfeits the 1/n variance averaging
     (ω instead of ω/√n in Thm 2.1).
+
+    compression="qsgd" (the packed quantization wire — DESIGN.md §4.6): each
+    worker quantizes its dense diff rows against per-row ℓ2 norms (s levels,
+    stochastic dither) and the payload collective carries int8 levels + f32
+    norms — 1 B/coord instead of 4. With ``packed_payload`` and s ≤ 7 the
+    levels ship as signed 4-bit nibbles packed eight-per-uint32 (0.5 B/coord).
+    The dense f32 diffs stay worker-local (staged constraints); every device
+    dequantize-and-means the replicated int8 payload with a worker-indexed
+    accumulation loop, so no (n, d) f32 buffer is ever materialized.
 
     compression="permk" (Szlendak et al. 2021): one permutation of each
     leaf's lane dimension, SHARED across workers, partitions the coordinates;
@@ -163,6 +180,49 @@ def _compress_decompress_mean(
             by_slot = jnp.moveaxis(wire.astype(jnp.float32), 0, 1).reshape(R, L)
             inv = jnp.argsort(perm)
             dense = (jnp.take(by_slot, inv, axis=1) / n).astype(leaf.dtype)
+        elif compression == "qsgd":
+            s = int(qsgd_s)
+            # same bound every other entry point enforces (wire.INT8_MAX_S):
+            # s > 127 would silently wrap the int8 level cast on the wire
+            assert 1 <= s <= 127, f"qsgd_s={s} does not fit the int8 wire"
+            xf = x.astype(jnp.float32)
+            norm = jnp.sqrt(jnp.sum(xf * xf, axis=-1, keepdims=True))  # (n,R,1)
+            safe = jnp.where(norm > 0, norm, 1.0)
+            u = jax.random.uniform(lk, (n, R, L))
+            level = jnp.floor(s * jnp.abs(xf) / safe + u)
+            q = (jnp.sign(xf) * level).astype(jnp.int8)
+            norm = norm.astype(jnp.float32)
+            if staged_payload:
+                # quantize under the worker-sharded layout: the dense f32
+                # diffs never leave their worker
+                q = jax.lax.with_sharding_constraint(q, worker_sharded)
+                norm = jax.lax.with_sharding_constraint(norm, worker_sharded)
+            repl = NamedSharding(mesh, P())
+            if packed_payload and s <= 7 and L % 8 == 0:
+                # genuine 4-bit wire: eight signed nibbles per uint32 lane
+                # word cross the collective (0.5 B/coord)
+                words = kref.nibble_pack_ref(q.reshape(n * R, L))
+                words = jax.lax.with_sharding_constraint(
+                    words.reshape(n, R, L // 8), repl
+                )
+                q = kref.nibble_unpack_ref(
+                    words.reshape(n * R, L // 8), L
+                ).reshape(n, R, L)
+            else:
+                q = jax.lax.with_sharding_constraint(q, repl)
+            norm = jax.lax.with_sharding_constraint(norm, repl)
+
+            # fused dequantize-and-mean: worker-indexed accumulation into one
+            # (R, L) f32 buffer — input bandwidth stays int8
+            def dq_body(w, acc):
+                qw = jax.lax.dynamic_index_in_dim(q, w, 0, keepdims=False)
+                nw = jax.lax.dynamic_index_in_dim(norm, w, 0, keepdims=False)
+                return acc + qw.astype(jnp.float32) * (nw / s)
+
+            acc = jax.lax.fori_loop(
+                0, n, dq_body, jnp.zeros((R, L), jnp.float32)
+            )
+            dense = (acc / n).astype(leaf.dtype)
         elif shared_mask:
             idx = jax.random.randint(lk, (R, kb), 0, L, jnp.int32)
             vals = _gather_along_last(
@@ -233,15 +293,21 @@ def build_train_steps(
     staged_payload: bool = True,
     compression_backend: str = "auto",
     compression: str = "randk",
+    qsgd_s: int = 15,
 ):
     """Returns (fns, abstract_args) for sync_step / compressed_step / train_step.
 
     §Perf overrides:
     * shared_mask      — SharedRandK: K-value psum instead of n·K all-gather
     * packed_payload   — bf16 values + int16 indices on the wire (8 → 4
-      B/coord; indices fall back to int32 when L > 32767, 8 → 6 B/coord)
-    * compression      — "randk" (independent masks, n·K all-gather) or
+      B/coord; indices fall back to int32 when L > 32767, 8 → 6 B/coord);
+      with compression="qsgd" and s ≤ 7 it instead packs the int8 levels
+      into 4-bit nibbles (1 → 0.5 B/coord)
+    * compression      — "randk" (independent masks, n·K all-gather),
       "permk" (correlated Perm-K: disjoint d/n shards, values-only exchange)
+      or "qsgd" (dense s-level quantization: int8 levels + f32 row norms on
+      the wire — the packed quantization wire of DESIGN.md §4.6)
+    * qsgd_s           — quantization levels for compression="qsgd"
     * replicate_params — small-model mode: no tensor parallelism; the model
       axis becomes within-worker data parallelism (per-worker batch sharded
       over "model", params replicated)
@@ -304,6 +370,7 @@ def build_train_steps(
             key, diffs, n, mesh, waxes, shared_mask, packed_payload,
             staged_payload, out_shardings=p_shard,
             backend=compression_backend, compression=compression,
+            qsgd_s=qsgd_s,
         )
         g_new = jax.tree.map(jnp.add, g, delta)
         return x_new, g_new

@@ -43,6 +43,12 @@ VARIANTS = {
     # correlated Perm-K: disjoint d/n shards, values-only exchange, γ = 1/L
     "permk_payload": ({"compression": "permk"}, {}, {}),
     "permk_packed": ({"compression": "permk", "packed_payload": True}, {}, {}),
+    # packed quantization wire: dense s-level QSGD, int8 levels + f32 norms
+    # (1 B/coord); qsgd4_packed ships 4-bit nibbles in uint32 (0.5 B/coord)
+    "qsgd_payload": ({"compression": "qsgd"}, {}, {}),
+    "qsgd4_packed": (
+        {"compression": "qsgd", "packed_payload": True, "qsgd_s": 7}, {}, {},
+    ),
     # memory/compute policy
     "no_remat": ({"remat": False}, {}, {}),
     "f32_params": ({"dtype": jnp.float32}, {}, {}),

@@ -36,6 +36,8 @@ from repro.core import (
     DCGD,
     Diana,
     ECSGD,
+    BlockNatural,
+    BlockQSGD,
     BlockRandK,
     CorrelatedCompressor,
     Marina,
@@ -120,7 +122,9 @@ class Trainer:
         p = train_cfg.p if train_cfg.p is not None else comp.default_p(d)
         self.p = p
         self.comp = comp
-        # block_randk / permk rounds run fused over the packed flat buffer;
+        # block_randk / permk / block_qsgd / block_natural rounds run fused
+        # over the packed flat buffer (the quantized ones on the bit-packed
+        # wire, so the bits ledger books the packed accounting — wire.py);
         # every other compressor keeps the per-leaf tree path.
         if isinstance(comp, BlockRandK):
             self.engine = make_engine(
@@ -131,6 +135,16 @@ class Trainer:
             self.engine = make_engine(
                 init_params, block=comp.block,
                 backend=train_cfg.flat_backend, sampler="permk",
+            )
+        elif isinstance(comp, BlockQSGD):
+            self.engine = make_engine(
+                init_params, block=comp.block,
+                backend=train_cfg.flat_backend, sampler="qsgd", s=comp.s,
+            )
+        elif isinstance(comp, BlockNatural):
+            self.engine = make_engine(
+                init_params, block=comp.block,
+                backend=train_cfg.flat_backend, sampler="natural",
             )
         else:
             self.engine = None

@@ -60,10 +60,10 @@ def test_qsgd_quantize_matches_ref(nblk, B, s):
     x2d = jax.random.normal(key, (nblk, B), jnp.float32) * 3
     u2d = jax.random.uniform(jax.random.fold_in(key, 1), (nblk, B))
     norm = jnp.linalg.norm(x2d)
-    q = qsgd_quantize(x2d, u2d, norm, s, interpret=True)
+    q = qsgd_quantize(x2d, u2d, norm, s, backend="pallas_interpret")
     want = ref.qsgd_quantize_ref(x2d, u2d, norm, s)
     np.testing.assert_array_equal(np.asarray(q), np.asarray(want))
-    deq = qsgd_dequantize(q, norm, s, interpret=True)
+    deq = qsgd_dequantize(q, norm, s, backend="pallas_interpret")
     np.testing.assert_allclose(
         np.asarray(deq), np.asarray(ref.qsgd_dequantize_ref(want, norm, s)), rtol=1e-6
     )
@@ -72,7 +72,7 @@ def test_qsgd_quantize_matches_ref(nblk, B, s):
 @pytest.mark.parametrize("nblk,B", SHAPES)
 def test_block_sumsq_matches_ref(nblk, B):
     x2d = jax.random.normal(jax.random.PRNGKey(0), (nblk, B), jnp.float32)
-    out = block_sumsq(x2d, interpret=True)
+    out = block_sumsq(x2d, backend="pallas_interpret")
     np.testing.assert_allclose(
         np.asarray(out), np.asarray(ref.block_sumsq_ref(x2d)), rtol=1e-5
     )

@@ -1,0 +1,345 @@
+"""Packed quantization wire validation (DESIGN.md §4.6).
+
+* nibble pack/unpack is the identity on 4-bit levels and bit-exact between
+  the jnp ref and the interpreted Pallas kernels (the packed uint32 words ARE
+  the wire);
+* the fused blockwise QSGD / natural uplinks agree bit-exactly with their
+  oracles (integer levels, single-rounded norms); the fused
+  dequantize-and-mean agrees to float-accumulation tolerance (same convention
+  as scatter_accum — FMA fusion may differ by 1 ulp across compilation
+  contexts);
+* empirical ω of BlockQSGD stays within the min(B/s², √B/s) bound and both
+  packed compressors are unbiased;
+* quantized MARINA trajectories are identical between the per-leaf tree path
+  and the fused flat path (single-leaf, block-aligned problem);
+* bf16 params survive a packed quantized round;
+* the wire-format accounting cannot drift: compressor payload_bits ==
+  FlatEngine.payload_bits == the shared helpers in repro.core.wire.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BlockNatural,
+    BlockQSGD,
+    Marina,
+    make_compressor,
+    make_engine,
+)
+from repro.core import wire
+from repro.core.flat import FlatEngine, make_layout
+from repro.core.problems import make_synthetic_binclass, nonconvex_binclass_loss
+from repro.kernels import quantize, ref
+
+
+# ---------------------------------------------------------------------------
+# 4-bit wire: pack/unpack
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("nblk,B", [(1, 128), (3, 256), (5, 1024)])
+def test_nibble_roundtrip_identity_and_bit_exact(nblk, B):
+    q = jax.random.randint(jax.random.PRNGKey(nblk), (nblk, B), -8, 8, jnp.int8)
+    words_ref = ref.nibble_pack_ref(q)
+    words_pal = quantize.nibble_pack(q, backend="pallas_interpret")
+    assert words_ref.dtype == jnp.uint32 and words_ref.shape == (nblk, B // 8)
+    np.testing.assert_array_equal(np.asarray(words_ref), np.asarray(words_pal))
+    for back in (ref.nibble_unpack_ref(words_ref, B),
+                 quantize.nibble_unpack(words_pal, B, backend="pallas_interpret")):
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+
+def test_nibble_words_are_genuinely_packed():
+    """Eight levels per uint32: the word width is B/8, and a known pattern
+    lands in the expected bit positions (two's-complement nibbles)."""
+    q = jnp.array([[1, -1, 7, -8, 0, 2, -3, 5]], jnp.int8)
+    w = int(ref.nibble_pack_ref(q)[0, 0])
+    nibs = [1, 0xF, 7, 0x8, 0, 2, 0xD, 5]
+    assert w == sum(nib << (4 * t) for t, nib in enumerate(nibs))
+
+
+# ---------------------------------------------------------------------------
+# Fused uplink / aggregation kernels vs oracles
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 4])
+@pytest.mark.parametrize("s", [3, 7, 15])
+def test_qsgd_block_workers_bit_exact_and_bounded(n, s):
+    x3d = jax.random.normal(jax.random.PRNGKey(s), (n, 3, 256)) * 2.0
+    seeds = jnp.arange(n, dtype=jnp.uint32) * jnp.uint32(2654435761) + 1
+    lv_r, nm_r = ref.qsgd_block_workers_ref(x3d, seeds, s)
+    lv_p, nm_p = quantize.qsgd_block_workers(
+        x3d, seeds, s, backend="pallas_interpret"
+    )
+    np.testing.assert_array_equal(np.asarray(lv_r), np.asarray(lv_p))
+    np.testing.assert_array_equal(np.asarray(nm_r), np.asarray(nm_p))
+    assert lv_r.dtype == jnp.int8
+    assert int(jnp.max(jnp.abs(lv_r))) <= s  # nibble-safe for s <= 7
+    # per-block norms match the data
+    np.testing.assert_allclose(
+        np.asarray(nm_r),
+        np.linalg.norm(np.asarray(x3d, np.float64), axis=-1),
+        rtol=1e-5,
+    )
+    dm_r = ref.qsgd_dequant_mean_ref(lv_r, nm_r, s)
+    dm_p = quantize.qsgd_dequant_mean(lv_r, nm_r, s, backend="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(dm_r), np.asarray(dm_p),
+                               rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("n", [1, 3])
+def test_natural_block_workers_bit_exact_power_of_two(n):
+    x3d = jax.random.normal(jax.random.PRNGKey(n), (n, 2, 128)) * 5.0
+    seeds = jnp.arange(n, dtype=jnp.uint32) + 9
+    cd_r, sc_r = ref.natural_block_workers_ref(x3d, seeds)
+    cd_p, sc_p = quantize.natural_block_workers(
+        x3d, seeds, backend="pallas_interpret"
+    )
+    np.testing.assert_array_equal(np.asarray(cd_r), np.asarray(cd_p))
+    np.testing.assert_array_equal(np.asarray(sc_r), np.asarray(sc_p))
+    dm_r = ref.natural_dequant_mean_ref(cd_r, sc_r)
+    dm_p = quantize.natural_dequant_mean(cd_r, sc_r, backend="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(dm_r), np.asarray(dm_p),
+                               rtol=1e-6, atol=1e-7)
+    # decoded magnitudes are exact powers of two within [|x|, 2|x|]
+    dec = np.asarray(ref.natural_decode_ref(cd_r[0], sc_r[0]))
+    x = np.asarray(x3d[0], np.float32)
+    nz = np.abs(x) > 0
+    m = np.abs(dec[nz])
+    assert np.all(np.exp2(np.round(np.log2(m))) == m)
+    assert np.all(m <= 2 * np.abs(x[nz]) * (1 + 1e-6))
+    assert np.all(m >= 0.5 * np.abs(x[nz]) * (1 - 1e-6))
+
+
+def test_dequant_mean_never_materializes_dense_workers():
+    """The fused aggregation jaxpr holds one (nblk, B) f32 accumulator — the
+    n dequantized worker trees never appear (int8 inputs don't count: they
+    ARE the payload)."""
+    n, nblk, B = 16, 64, 1024
+    levels = jnp.zeros((n, nblk, B), jnp.int8)
+    norms = jnp.ones((n, nblk), jnp.float32)
+
+    jaxpr = jax.make_jaxpr(
+        lambda l, m: ref.qsgd_dequant_mean_ref(l, m, 7)
+    )(levels, norms)
+
+    def walk(jpr):
+        for eqn in jpr.eqns:
+            for v in eqn.outvars:
+                shape = getattr(v.aval, "shape", ())
+                dt = getattr(v.aval, "dtype", None)
+                if dt == jnp.int8 or dt == jnp.uint32:
+                    continue  # the payload itself
+                size = int(np.prod(shape)) if shape else 1
+                assert size <= 2 * nblk * B, (
+                    f"dense f32 intermediate {shape} in fused dequant-mean"
+                )
+            for sub in eqn.params.values():
+                if isinstance(sub, jax.extend.core.ClosedJaxpr):
+                    walk(sub.jaxpr)
+                elif isinstance(sub, (list, tuple)):
+                    for s in sub:
+                        if isinstance(s, jax.extend.core.ClosedJaxpr):
+                            walk(s.jaxpr)
+
+    walk(jaxpr.jaxpr)
+
+
+# ---------------------------------------------------------------------------
+# ω and unbiasedness
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("s", [1, 3, 7])
+def test_block_qsgd_empirical_omega_within_bound(s):
+    """E‖Q(x)−x‖² / ‖x‖² ≤ min(B/s², √B/s) over many seeds, and E[Q(x)] ≈ x."""
+    B, d = 128, 300
+    comp = BlockQSGD(s=s, block=B)
+    x = jax.random.normal(jax.random.PRNGKey(0), (d,))
+    trials = 1500
+    keys = jax.random.split(jax.random.PRNGKey(1), trials)
+    qs = jax.vmap(lambda k: comp(k, x))(keys)
+    err2 = jnp.sum((qs - x[None, :]) ** 2, axis=1) / jnp.sum(x**2)
+    omega_hat = float(jnp.mean(err2))
+    bound = comp.omega(d)
+    # the bound is worst-case over x; the empirical ω must sit below it with
+    # MC slack, and must not be wildly conservative at s=1 (within 50×)
+    se = float(jnp.std(err2)) / np.sqrt(trials)
+    assert omega_hat <= bound + 3 * se, (omega_hat, bound)
+    assert omega_hat > bound / 50
+    mean = jnp.mean(qs, axis=0)
+    rel = float(jnp.linalg.norm(mean - x) / jnp.linalg.norm(x))
+    assert rel < 3.0 * np.sqrt(bound / trials)
+
+
+def test_block_natural_unbiased_omega_eighth():
+    d = 400
+    comp = BlockNatural(block=128)
+    x = jax.random.normal(jax.random.PRNGKey(2), (d,)) * 3.0
+    trials = 1500
+    keys = jax.random.split(jax.random.PRNGKey(3), trials)
+    qs = jax.vmap(lambda k: comp(k, x))(keys)
+    err2 = jnp.sum((qs - x[None, :]) ** 2, axis=1) / jnp.sum(x**2)
+    assert float(jnp.mean(err2)) <= 0.125 + 0.01
+    mean = jnp.mean(qs, axis=0)
+    rel = float(jnp.linalg.norm(mean - x) / jnp.linalg.norm(x))
+    assert rel < 3.0 * np.sqrt(0.125 / trials)
+
+
+def test_engine_ref_and_pallas_interpret_agree():
+    """Full fused_delta through both backends for every packed sampler."""
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(3), (11, 13)),
+            "b": jax.random.normal(jax.random.PRNGKey(4), (200,))}
+    n = 3
+    diffs = jax.tree.map(
+        lambda x: jnp.stack([x * (i + 1) for i in range(n)]), tree
+    )
+    key = jax.random.PRNGKey(5)
+    for sampler in ("qsgd", "natural", "randk_qsgd"):
+        eng_ref = make_engine(tree, kb=8, block=128, backend="ref",
+                              sampler=sampler, s=7)
+        eng_pal = make_engine(tree, kb=8, block=128,
+                              backend="pallas_interpret", sampler=sampler, s=7)
+        out_ref = eng_ref.fused_delta(key, diffs, n)
+        out_pal = eng_pal.fused_delta(key, diffs, n)
+        for a, b in zip(jax.tree.leaves(out_ref), jax.tree.leaves(out_pal)):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-7
+            )
+
+
+# ---------------------------------------------------------------------------
+# Tree path == flat path on a quantized MARINA run
+# ---------------------------------------------------------------------------
+
+
+def test_quantized_marina_tree_path_equals_flat_path():
+    """Same seeds ⇒ identical trajectories between the per-leaf BlockQSGD
+    path and the fused packed-wire engine (single-leaf params, d a multiple
+    of the block — the samplers' murmur streams coincide)."""
+    N, M, D = 4, 32, 256  # D == 2 blocks of 128
+    data = make_synthetic_binclass(jax.random.PRNGKey(0), N, M, D)
+    comp = BlockQSGD(s=7, block=128)
+    grad = jax.grad(nonconvex_binclass_loss)
+
+    m_tree = Marina(grad, comp, gamma=0.05, p=0.3)
+    eng = FlatEngine(layout=make_layout(jnp.zeros((D,)), block=128),
+                     backend="ref", sampler="qsgd", s=7)
+    m_flat = Marina(grad, comp, gamma=0.05, p=0.3, engine=eng)
+
+    st_t = m_tree.init(jnp.zeros((D,)), data)
+    st_f = m_flat.init(jnp.zeros((D,)), data)
+    step_t = jax.jit(m_tree.step)
+    step_f = jax.jit(m_flat.step)
+    saw_compressed = False
+    for k in range(25):
+        key = jax.random.PRNGKey(k)
+        st_t, met_t = step_t(st_t, key, data)
+        st_f, met_f = step_f(st_f, key, data)
+        saw_compressed |= int(met_t.sync_round) == 0
+        np.testing.assert_allclose(
+            np.asarray(st_f.params), np.asarray(st_t.params), rtol=1e-5,
+            atol=1e-6,
+        )
+        np.testing.assert_allclose(
+            np.asarray(st_f.g), np.asarray(st_t.g), rtol=1e-5, atol=1e-6
+        )
+        # the ledger books the packed wire on compressed rounds
+        if not int(met_f.sync_round):
+            assert float(met_f.bits_per_worker) == comp.payload_bits(D)
+    assert saw_compressed
+
+
+def test_bf16_params_packed_quantized_round_smoke():
+    """bf16 params survive fused packed-QSGD compressed rounds end to end."""
+    n = 3
+    params = {
+        "w": jnp.ones((4, 40), jnp.bfloat16) * 0.5,
+        "b": jnp.zeros((10,), jnp.bfloat16),
+    }
+
+    def loss(p, batch):
+        return sum(
+            jnp.sum((a.astype(jnp.float32) - b) ** 2)
+            for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(batch))
+        )
+
+    batches = jax.tree.map(
+        lambda x: jax.random.normal(jax.random.PRNGKey(0), (n, *x.shape)),
+        params,
+    )
+    comp = BlockQSGD(s=7, block=128)
+    eng = make_engine(params, block=128, backend="ref", sampler="qsgd", s=7)
+    m = Marina(jax.grad(loss), comp, gamma=0.01, p=0.5, engine=eng)
+    st = m.init(params, batches)
+    step = jax.jit(m.step)
+    seen = set()
+    for k in range(12):
+        st, met = step(st, jax.random.PRNGKey(k), batches)
+        seen.add(int(met.sync_round))
+    assert seen == {0, 1}
+    for leaf in (*jax.tree.leaves(st.params), *jax.tree.leaves(st.g)):
+        assert leaf.dtype == jnp.bfloat16
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+
+
+# ---------------------------------------------------------------------------
+# Wire accounting cannot drift
+# ---------------------------------------------------------------------------
+
+
+def test_wire_accounting_consistency():
+    d, B = 2000, 1024
+    nblk = 2
+    tree = {"w": jnp.ones((d,))}
+
+    # dense block QSGD: nibble wire for s <= 7, int8 above
+    for s, bits_per in ((7, 4.0), (15, 8.0), (127, 8.0)):
+        comp = make_compressor("block_qsgd", s=s, block=B)
+        eng = make_engine(tree, block=B, sampler="qsgd", s=s)
+        want = 32.0 * nblk + bits_per * nblk * B
+        assert comp.payload_bits(d) == want == eng.payload_bits()
+        assert want == wire.block_qsgd_bits(nblk, B, s)
+
+    comp = make_compressor("block_natural", block=B)
+    eng = make_engine(tree, block=B, sampler="natural")
+    want = 32.0 * nblk + 8.0 * nblk * B
+    assert comp.payload_bits(d) == want == eng.payload_bits()
+
+    # composition: seed + norms + packed levels; 4x fewer bits than the f32
+    # flat-fused wire carrying the same sampled values at the same kb
+    eng = make_engine(tree, kb=8, block=B, sampler="randk_qsgd", s=7)
+    assert eng.payload_bits() == 32.0 + 32.0 * nblk + 4.0 * nblk * 8
+    f32_wire = wire.seeded_randk_bits(nblk, 8)
+    assert (f32_wire - 32.0) / (eng.payload_bits() - 32.0) == 4.0
+
+    # dense quantizers use the bits-balanced p (ζ ≈ d would give p = 1 = GD)
+    q4 = make_compressor("block_qsgd", s=7, block=B)
+    assert abs(q4.default_p(B * nblk) - (32.0 * nblk + 4.0 * nblk * B)
+               / (32.0 * nblk * B)) < 1e-12
+    assert 0 < make_compressor("block_natural", block=B).default_p(d) < 0.3
+
+    # the audited per-leaf quantizers book the byte-aligned packed wire
+    assert make_compressor("qsgd", s=7).payload_bits(d) == 32.0 + 4.0 * d
+    assert make_compressor("qsgd", s=8).payload_bits(d) == 32.0 + 8.0 * d
+    assert make_compressor("natural").payload_bits(d) == 32.0 + 8.0 * d
+    assert make_compressor("cqsgd", s=4).payload_bits(d) == 32.0 + 4.0 * d
+    assert make_compressor("cqsgd", s=63).payload_bits(d) == 32.0 + 8.0 * d
+
+
+def test_engine_omega_routing():
+    tree = {"w": jnp.ones((2048,))}
+    B = 1024
+    eng_q = make_engine(tree, block=B, sampler="qsgd", s=7)
+    assert eng_q.omega == min(B / 49, np.sqrt(B) / 7)
+    eng_n = make_engine(tree, block=B, sampler="natural")
+    assert eng_n.omega == 0.125
+    eng_rq = make_engine(tree, kb=8, block=B, sampler="randk_qsgd", s=7)
+    w_q = min(8 / 49, np.sqrt(8) / 7)
+    assert abs(eng_rq.omega - ((1 + B / 8) * (1 + w_q) - 1)) < 1e-12
+    with pytest.raises(AssertionError):
+        make_engine(tree, block=B, sampler="qsgd", s=200)

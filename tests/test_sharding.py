@@ -138,7 +138,26 @@ _SUBPROCESS_PROG = textwrap.dedent(
     nz3 = sum(int(jnp.sum(jnp.abs(t) > 1e-12)) for t in delta3)
     frac3 = nz3 / tot
     assert frac3 > 2 * frac, f"PermK support {frac3} not denser than RandK {frac}"
-    print("SUBPROCESS_OK", err, frac, frac3)
+
+    # packed quantization wire (DESIGN.md 4.6): dense 4-bit QSGD round on the
+    # sharded mesh — int8/uint32 payload collectives, dense finite delta.
+    bundle_q = build_train_steps(
+        arch, mesh, multi_pod=False, global_batch=8, seq_len=64,
+        gamma=0.1, dtype=jnp.float32, compression="qsgd", qsgd_s=7,
+        packed_payload=True,
+    )
+    params4 = init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    g_init4 = jax.tree.map(lambda t: jnp.full_like(t, 0.01), params4)
+    g_keep4 = jax.tree.map(jnp.array, g_init4)
+    with bundle_q.mesh:
+        fn, _ = bundle_q.fns["compressed_step"]
+        x4, g4 = fn(params4, g_init4, batch, jax.random.PRNGKey(2))
+    delta4 = [a - b for a, b in zip(jax.tree.leaves(g4), jax.tree.leaves(g_keep4))]
+    assert all(bool(jnp.all(jnp.isfinite(t))) for t in delta4)
+    nz4 = sum(int(jnp.sum(jnp.abs(t) > 1e-12)) for t in delta4)
+    frac4 = nz4 / tot
+    assert frac4 > 2 * frac, f"QSGD support {frac4} not denser than RandK {frac}"
+    print("SUBPROCESS_OK", err, frac, frac3, frac4)
     """
 )
 
