@@ -11,6 +11,10 @@
     §Perf    → bench_compression       (per-leaf tree path vs fused flat engine,
                µs/round at d ∈ {1e5, 1e6}, n ∈ {4, 16}; writes
                BENCH_compression.json for the perf trajectory)
+    §Perf    → bench_roundstep         (end-to-end train-step wall clock:
+               sync vs compressed, two-backprop vs grad-carry + fused
+               epilogue, dense vs compressed downlink; writes
+               BENCH_roundstep.json — the CI regression gate)
 
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call = step wall time;
 derived = the figure-of-merit for that table).
@@ -451,6 +455,166 @@ def bench_compression(quick=False):
     print(f"# wrote {os.path.normpath(path)}", file=sys.stderr)
 
 
+def _roundstep_problem(key, n, d):
+    """Per-worker log-cosh regression through a (128, F) projection:
+    loss_i(x) = Σ logcosh(reshape(x)·W − b_i).
+
+    The contraction matters: an *elementwise* oracle lets XLA fuse the whole
+    backprop through the RandK gather, so a "two-backprop" compressed round
+    silently computes only ζ gradient coordinates and the benchmark would
+    measure nothing. The matmul VJP (t @ Wᵀ) materializes the full (d,)
+    gradient — the regime real models live in, and the cost the ISSUE's
+    single-backprop rounds actually remove. The oracle is deterministic in x
+    (fixed local b_i — the Alg. 1 regime where grad-carry is bit-exact)."""
+    F = 64
+    rows = d // 128
+    assert rows * 128 == d, "roundstep dims are 128-aligned"
+    kw, kb_ = jax.random.split(key)
+    W = jax.random.normal(kw, (128, F)) / jnp.sqrt(128.0)
+    b = jax.random.normal(kb_, (n, rows, F)) * 0.1
+    batches = {"b": b}
+
+    def loss(x, batch):
+        z = x.reshape(rows, 128) @ W - batch["b"]
+        # log cosh(z) = logaddexp(z, -z) - log 2 (stable)
+        return jnp.sum(jnp.logaddexp(z, -z) - jnp.log(2.0))
+
+    return jax.grad(loss), batches
+
+
+def bench_roundstep(quick=False):
+    """End-to-end MARINA train-step wall clock (jit-compiled, interleaved
+    min-of-trials) at d ∈ {1e5, 1e6}, n ∈ {4, 16}:
+
+    * sync round (p = 1) — the dense baseline, flat-psum exchange;
+    * compressed round, two-backprop (the pre-carry seed path: flat-fused
+      RandK uplink, dequant-mean + two tree.map passes server-side);
+    * compressed round, grad-carry + fused epilogue (one backprop, one
+      (nblk, B)-sweep epilogue kernel);
+    * grad-carry + compressed downlink (Q_down = 4-bit block QSGD, s = 7).
+
+    Wire bytes per compressed round (up + down, per worker) ride along from
+    repro.core.wire — the downlink column is what the bits ledger used to
+    silently ignore. Writes BENCH_roundstep.json (CI gates on the
+    carry/sync ratio — scripts/check_roundstep.py)."""
+    from repro.core import Marina, BlockRandK, make_downlink, make_engine, wire
+
+    reps = 3 if quick else 10
+    kb, block, s_down = 8, 1024, 7
+    entries = []
+    # ~1e5 and ~1e6, block-aligned (98·1024 and 976·1024)
+    dims = ((100_352,) if quick else (100_352, 999_424))
+    for d in dims:
+        for n in (4, 16):
+            grad_fn, batches = _roundstep_problem(jax.random.PRNGKey(0), n, d)
+            x0 = jnp.zeros((d,))
+            comp = BlockRandK(kb=kb, block=block)
+            eng = make_engine(x0, kb=kb, block=block)
+            down = make_downlink(eng, sampler="qsgd", s=s_down)
+            gamma = 0.02
+
+            def methods(p):
+                return {
+                    "two_backprop": Marina(grad_fn, comp, gamma, p, eng),
+                    "carry_fused": Marina(grad_fn, comp, gamma, p, eng,
+                                          carry=True),
+                    "carry_down": Marina(grad_fn, comp, gamma, p, eng,
+                                         carry=True, down_engine=down),
+                }
+
+            # p pins the lax.cond branch: p=1 times the sync round through
+            # the full jitted step, p=0 the compressed round.
+            sync_m = Marina(grad_fn, comp, gamma, 1.0, eng, carry=True)
+            comp_ms = methods(0.0)
+
+            fns = {}
+            states = {}
+            key = jax.random.PRNGKey(1)
+            st0 = sync_m.init(x0, batches)
+            fns["sync"] = jax.jit(sync_m.step)
+            states["sync"] = st0
+            for name, m in comp_ms.items():
+                fns[name] = jax.jit(m.step)
+                states[name] = m.init(x0, batches)
+
+            # interleaved min-of-trials (same discipline as
+            # bench_compression): each candidate measured in every trial
+            # window so transient CPU load hits all alike.
+            # per-call round-robin min-of-trials: steps here are 1–100 ms, so
+            # single calls are timeable and interleaving at call granularity
+            # gives every method the same draw from this container's load
+            # noise (which swings coarser windows ±50%); the min converges
+            # with the number of rounds.
+            for name, fn in fns.items():
+                jax.block_until_ready(fn(states[name], key, batches))  # compile
+            # quick mode (the CI gate) only visits the small-d configs where
+            # steps are milliseconds: take MORE draws there, not fewer — the
+            # regression gate needs a converged min far more than CI minutes.
+            rounds = max(2 * reps, 16) if quick else 2 * reps
+            best = {name: float("inf") for name in fns}
+            for _ in range(rounds):
+                for name, fn in fns.items():
+                    t0 = time.time()
+                    st, _met = fn(states[name], key, batches)
+                    jax.block_until_ready(st)
+                    best[name] = min(best[name], (time.time() - t0) * 1e6)
+
+            up_bits = eng.payload_bits(n)
+            down_dense = wire.downlink_dense_bits(d)
+            down_q = down.payload_bits(1)
+            entry = {
+                "d": d,
+                "n": n,
+                "sync_us": best["sync"],
+                "two_backprop_us": best["two_backprop"],
+                "carry_fused_us": best["carry_fused"],
+                "carry_down_us": best["carry_down"],
+                "carry_speedup": best["two_backprop"] / best["carry_fused"],
+                # normalized (machine-portable) compressed/sync ratios — the
+                # CI regression metric
+                "carry_over_sync": best["carry_fused"] / best["sync"],
+                "two_backprop_over_sync": best["two_backprop"] / best["sync"],
+                # per-worker wire bits of one compressed round, both
+                # directions (the up+down column EXPERIMENTS.md renders)
+                "up_bits": up_bits,
+                "down_bits_dense": down_dense,
+                "down_bits_q": down_q,
+                "total_bits_baseline": wire.round_total_bits(
+                    up_bits, down_dense),
+                "total_bits_down_q": wire.round_total_bits(up_bits, down_q),
+                "wire_reduction": wire.round_total_bits(up_bits, down_dense)
+                / wire.round_total_bits(up_bits, down_q),
+            }
+            entries.append(entry)
+            emit(
+                f"roundstep/d{d}_n{n}", best["carry_fused"],
+                f"two_bp_us={best['two_backprop']:.0f};"
+                f"speedup={entry['carry_speedup']:.2f}x;"
+                f"wire_down={entry['wire_reduction']:.1f}x",
+            )
+
+    geo = float(
+        np.exp(np.mean([np.log(e["carry_speedup"]) for e in entries]))
+    )
+    out = {
+        "block": block,
+        "kb": kb,
+        "down_s": s_down,
+        "backend": "ref(cpu)" if jax.default_backend() != "tpu" else "pallas",
+        "reps": reps,
+        "quick": bool(quick),
+        # the headline: compressed-round wall clock, two-backprop → carry +
+        # fused epilogue, geometric mean over the (d, n) grid
+        "geomean_carry_speedup": geo,
+        "entries": entries,
+    }
+    print(f"# geomean carry speedup: {geo:.2f}x", file=sys.stderr)
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_roundstep.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {os.path.normpath(path)}", file=sys.stderr)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -465,6 +629,7 @@ def main():
         "lm": bench_lm,
         "kernels": bench_kernels,
         "compression": bench_compression,
+        "roundstep": bench_roundstep,
     }
     print("name,us_per_call,derived")
     for name, fn in benches.items():

@@ -1,0 +1,100 @@
+"""CI regression gate for the round-step benchmark.
+
+Compares a fresh BENCH_roundstep.json (written by
+`python -m benchmarks.run --only roundstep --quick` on the CI runner)
+against the committed baseline and fails if the compressed round regressed
+more than the threshold.
+
+Absolute microseconds are NOT comparable across runners (CI machines differ
+wildly from the box that committed the baseline), so the gate is on the
+*within-run* normalized metric
+
+    carry_over_sync = carry_fused_us / sync_us
+
+— both sides of the ratio are measured interleaved in the same process, so
+machine speed and transient load divide out; what remains is the relative
+cost of the compressed round against the sync round, which is exactly what
+this PR's pipeline work (one backprop, fused epilogue) pins down. A >25%
+increase in that ratio on any matching (d, n) entry fails the job. The
+two-backprop ratio is checked at the same threshold so the seed path cannot
+silently rot either.
+
+Multiple fresh JSONs may be passed; the gate takes the per-metric MINIMUM
+across them (CI runs the quick bench twice). Load noise only ever slows a
+run, so the min across independent runs is the honest estimate and keeps
+the tight 25% threshold from false-failing on one unlucky draw (single
+quick runs on a 2-core container swing ±30%).
+
+Usage: python scripts/check_roundstep.py [fresh.json ...] [--baseline path]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+THRESHOLD = 1.25  # fail if fresh ratio > baseline ratio * 1.25
+
+METRICS = ("carry_over_sync", "two_backprop_over_sync")
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def main():
+    args = sys.argv[1:]
+    base_path = os.path.join(ROOT, "benchmarks", "roundstep_baseline.json")
+    if "--baseline" in args:
+        i = args.index("--baseline")
+        base_path = args[i + 1]
+        args = args[:i] + args[i + 2:]
+    fresh_paths = args or [os.path.join(ROOT, "BENCH_roundstep.json")]
+    freshes, base = [load(p) for p in fresh_paths], load(base_path)
+    base_by_key = {(e["d"], e["n"]): e for e in base["entries"]}
+
+    # per-metric min across the fresh runs (noise only ever slows a run)
+    fresh_by_key = {}
+    for f in freshes:
+        for e in f["entries"]:
+            cur = fresh_by_key.setdefault((e["d"], e["n"]), dict(e))
+            for m in METRICS:
+                cur[m] = min(cur[m], e[m])
+
+    failures = []
+    checked = 0
+    for (d, n), e in sorted(fresh_by_key.items()):
+        b = base_by_key.get((d, n))
+        if b is None:
+            continue
+        for m in METRICS:
+            checked += 1
+            ratio = e[m] / b[m]
+            status = "OK" if ratio <= THRESHOLD else "REGRESSED"
+            print(
+                f"d={d:>7} n={n:>2} {m}: baseline {b[m]:.3f} "
+                f"fresh {e[m]:.3f} ({ratio:.2f}x) {status}"
+            )
+            if ratio > THRESHOLD:
+                failures.append((d, n, m, ratio))
+
+    if not checked:
+        print("ERROR: no (d, n) entries matched the baseline", file=sys.stderr)
+        return 2
+    if failures:
+        print(
+            f"FAIL: compressed-round step time regressed >25% vs the "
+            f"committed baseline on {len(failures)} entr"
+            f"{'y' if len(failures) == 1 else 'ies'}",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"roundstep gate passed ({checked} checks)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

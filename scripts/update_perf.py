@@ -16,12 +16,17 @@ PERF = os.path.join(ROOT, "experiments", "perf")
 DRY = os.path.join(ROOT, "experiments", "dryrun")
 EXP = os.path.join(ROOT, "EXPERIMENTS.md")
 BENCH_COMPRESSION = os.path.join(ROOT, "BENCH_compression.json")
+BENCH_ROUNDSTEP = os.path.join(ROOT, "BENCH_roundstep.json")
 
 EXP_SKELETON = """# EXPERIMENTS
 
 ## Compression engine
 
 <!-- COMPRESSION_BENCH -->
+
+## Round pipeline
+
+<!-- ROUNDSTEP_BENCH -->
 
 ## Perf log
 
@@ -57,6 +62,25 @@ HYPOTHESES = {
     "representation of the same quantizer is recorded in bench_compression "
     "(7.9×) and the dense wire is for DIANA/DCGD-style dense-method "
     "workloads, not a RandK replacement.",
+    "grad_carry": "gradient-carry rounds: the carried h_i^k = ∇f_i(x^k) "
+    "replaces the second vmapped backprop of every compressed round ⇒ "
+    "compute term of compressed_step ↓ ~2× (one grad sweep), at the memory "
+    "cost of one worker-stacked gradient tree in the carry.",
+    "downlink_qsgd": "compressed downlink: the server broadcasts "
+    "Q_down(g^{k+1} − g^k) (per-row s=7 QSGD of the aggregated delta) "
+    "instead of the dense f32 estimator ⇒ the previously-uncounted 32d "
+    "broadcast shrinks to ~4 bits/coord; compute adds one d-sweep "
+    "quantize/decode.",
+    "carry_down_qsgd": "grad-carry + compressed downlink composed: one "
+    "backprop per round and both wire directions compressed.",
+    "flat_sync": "sync rounds exchange ONE packed (nblk, B) buffer (a "
+    "single worker-axis psum) instead of one collective per leaf. Expected "
+    "REFUTED on tensor/FSDP-sharded params: GSPMD must all-gather the dense "
+    "grads to assemble the buffer (involuntary full remat) — which is why "
+    "the packed exchange only auto-enables on worker-pure/replicated "
+    "meshes.",
+    "tree_sync": "negative control: per-leaf dense sync exchange forced on "
+    "a mesh where the packed flat-psum exchange is the auto default.",
     "no_remat": "dropping rematerialization ⇒ compute term ↓ (no recompute) "
     "at the cost of activation memory ↑.",
     "replicate_params": "small model: abandon tensor parallelism; model axis "
@@ -219,6 +243,53 @@ def render_compression_bench():
     return "\n".join(lines)
 
 
+def render_roundstep_bench():
+    """BENCH_roundstep.json → markdown table (end-to-end train-step wall
+    clock + the up+down total-bytes column)."""
+    if not os.path.exists(BENCH_ROUNDSTEP):
+        return ("(no round-step benchmark recorded — run "
+                "`python -m benchmarks.run --only roundstep`)")
+    r = load(BENCH_ROUNDSTEP)
+    quick = " — ⚠ QUICK MODE (noisy, re-run without --quick)" if r.get("quick") else ""
+    lines = [
+        f"End-to-end MARINA train-step wall clock (jit-compiled, interleaved "
+        f"min-of-trials; B={r['block']}, kb={r['kb']}, downlink s={r['down_s']}, "
+        f"backend={r['backend']}, reps={r.get('reps', '?')}){quick}. "
+        "`two-backprop` is the pre-carry compressed round (flat-fused RandK "
+        "uplink, dequant-mean + two tree.map passes); `carry+epilogue` runs "
+        "ONE backprop against the carried h_i^k and finishes in the fused "
+        "(nblk, B)-sweep epilogue kernel; `+downlink` additionally broadcasts "
+        "Q_down(g^{k+1} − g^k) as 4-bit block QSGD. The total-wire column "
+        "counts BOTH directions per worker per compressed round — the dense "
+        "f32 downlink the ledger used to ignore is what the compressed "
+        "downlink removes.",
+        "",
+        "| d | n | sync µs | two-backprop µs | carry+epilogue µs | speedup "
+        "| +downlink µs | up+down KB (dense down) | up+down KB (Q_down) | "
+        "wire ↓ |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for e in r["entries"]:
+        lines.append(
+            f"| {e['d']:.0e} | {e['n']} | {e['sync_us']:.0f} "
+            f"| {e['two_backprop_us']:.0f} | {e['carry_fused_us']:.0f} "
+            f"| **{e['carry_speedup']:.2f}×** | {e['carry_down_us']:.0f} "
+            f"| {e['total_bits_baseline']/8/1024:,.1f} "
+            f"| {e['total_bits_down_q']/8/1024:,.1f} "
+            f"| **{e['wire_reduction']:.1f}×** |"
+        )
+    lines += [
+        "",
+        "Grad-carry trajectories are bit-exact against the two-backprop "
+        "seed estimator (deterministic oracle; tests/test_roundstep.py), "
+        "with the carried params leading by exactly one lookahead step. "
+        "CI gates on the carry/sync ratio (scripts/check_roundstep.py): "
+        "absolute µs are not comparable across runners, the within-run "
+        "ratio is.",
+    ]
+    return "\n".join(lines)
+
+
 def _splice(text, marker, body):
     pattern = re.compile(re.escape(marker) + r".*?(?=\n## |\Z)", re.DOTALL)
     return pattern.sub(
@@ -284,11 +355,14 @@ def main():
         text = EXP_SKELETON
     if "<!-- COMPRESSION_BENCH -->" not in text:
         text += "\n## Compression engine\n\n<!-- COMPRESSION_BENCH -->\n"
+    if "<!-- ROUNDSTEP_BENCH -->" not in text:
+        text += "\n## Round pipeline\n\n<!-- ROUNDSTEP_BENCH -->\n"
     text = _splice(text, "<!-- PERF_LOG -->", body)
     text = _splice(text, "<!-- COMPRESSION_BENCH -->", render_compression_bench())
+    text = _splice(text, "<!-- ROUNDSTEP_BENCH -->", render_roundstep_bench())
     with open(EXP, "w") as f:
         f.write(text)
-    print(f"rendered {len(entries)} perf entries + compression bench")
+    print(f"rendered {len(entries)} perf entries + compression + roundstep bench")
 
 
 if __name__ == "__main__":

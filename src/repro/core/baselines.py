@@ -91,6 +91,8 @@ class Diana:
             ),
             sync_round=jnp.zeros((), jnp.int32),
             oracle_calls=jnp.asarray(1.0),
+            # dense estimator broadcast every round (now counted — DESIGN.md §4.7)
+            down_bits=jnp.asarray(32.0 * tree_dim(state.params)),
         )
         return (
             DianaState(params=x_new, h=h_new, h_mean=h_mean_new, step=state.step + 1),
@@ -180,6 +182,8 @@ class VRDiana:
             ),
             sync_round=refresh.astype(jnp.int32),
             oracle_calls=jnp.where(refresh, 2.0 * b + m_full, 2.0 * b),
+            # dense estimator broadcast every round (now counted — DESIGN.md §4.7)
+            down_bits=jnp.asarray(32.0 * tree_dim(state.params)),
         )
         return (
             VRDianaState(
@@ -229,6 +233,8 @@ class DCGD:
             ),
             sync_round=jnp.zeros((), jnp.int32),
             oracle_calls=jnp.asarray(1.0),
+            # dense estimator broadcast every round (now counted — DESIGN.md §4.7)
+            down_bits=jnp.asarray(32.0 * tree_dim(state.params)),
         )
         return DCGDState(params=x_new, step=state.step + 1), metrics
 
@@ -273,5 +279,7 @@ class ECSGD:
             ),
             sync_round=jnp.zeros((), jnp.int32),
             oracle_calls=jnp.asarray(1.0),
+            # dense estimator broadcast every round (now counted — DESIGN.md §4.7)
+            down_bits=jnp.asarray(32.0 * tree_dim(state.params)),
         )
         return ECSGDState(params=x_new, e=e_new, step=state.step + 1), metrics

@@ -474,6 +474,13 @@ class FlatEngine:
         inverse permutation.
         """
         bufs = pack_stacked(self.layout, diffs)
+        return unpack(self.layout, self.aggregate(key, bufs, n))
+
+    def aggregate(self, key: jax.Array, bufs: jax.Array, n: int) -> jax.Array:
+        """Server-side aggregate over packed diffs: (n, nblk, B) → the dense
+        (nblk, B) round delta (the buffer-level body of :meth:`fused_delta`,
+        exposed so the downlink can re-compress the aggregate before it ever
+        leaves flat form — DESIGN.md §4.7)."""
         if self.sampler == "permk":
             seed = key_to_seed(key)  # shared: all workers, same permutation
             vals, _ = block_permk_workers(bufs, seed, self.backend)
@@ -514,7 +521,88 @@ class FlatEngine:
         else:
             vals, offs = self.compress_stacked(self.worker_seeds(key, n), bufs)
             dense = self.decompress_mean(vals, offs)
-        return unpack(self.layout, dense)
+        return dense
+
+    # -- the fused server epilogue (DESIGN.md §4.7) -------------------------
+    def fused_round(
+        self,
+        key: jax.Array,
+        diff_bufs: jax.Array,
+        n: int,
+        g2d: jax.Array,
+        x2d: jax.Array,
+        gamma: float,
+        down: "FlatEngine | None" = None,
+        down_key: "jax.Array | None" = None,
+    ):
+        """Finish a compressed round in ONE (nblk, B)-tile sweep: sample the
+        uplink payloads from the packed diffs, then run the fused epilogue
+        (kernels/epilogue.py) — dequant/scatter-mean → ``g += δ`` →
+        ``x −= γ·g`` — directly on the wire representation. Returns
+        ``(g_new (nblk, B) f32, x_new (nblk, B) layout-dtype)``.
+
+        With ``down`` set (a second engine sharing this layout), the round is
+        bidirectional: the uplink aggregates to the dense δ_up, the server
+        broadcasts ``Q_down(δ_up)`` (= Q_down(g^{k+1} − g^k) — the estimator
+        recursion runs on the broadcast sequence), and the epilogue consumes
+        the single downlink payload (n = 1): the worker-side
+        decompress-accumulate."""
+        from repro.kernels import epilogue as epi
+        from repro.kernels import ref as kref
+
+        if down is not None:
+            delta = self.aggregate(key, diff_bufs, n)
+            assert down.layout.block == self.layout.block and (
+                down.layout.nblk == self.layout.nblk
+            ), "downlink engine must share the uplink layout"
+            assert down.sampler != "permk", (
+                "PermK is a partition across n receivers; a broadcast "
+                "downlink has one payload — use randk/qsgd/natural"
+            )
+            return down.fused_round(down_key, delta[None], 1, g2d, x2d, gamma)
+
+        backend = self.backend
+        if self.sampler == "permk":
+            seed = key_to_seed(key)
+            vals, _ = block_permk_workers(diff_bufs, seed, backend)
+            delta = permk_concat_mean(vals, seed, self.layout.block, backend)
+            return epi.delta_epilogue(delta, g2d, x2d, gamma, backend=backend)
+        if self.sampler == "qsgd":
+            from . import wire
+
+            seeds = self.worker_seeds(key, n)
+            levels, norms = block_qsgd_workers(
+                diff_bufs, seeds, self.s, backend
+            )
+            if self.s <= wire.NIBBLE_MAX_S:
+                levels = nibble_roundtrip(levels, self.layout.block, backend)
+            return epi.qsgd_epilogue(
+                levels, norms, g2d, x2d, gamma, self.s, backend=backend
+            )
+        if self.sampler == "natural":
+            seeds = self.worker_seeds(key, n)
+            codes, scales = block_natural_workers(diff_bufs, seeds, backend)
+            return epi.natural_epilogue(
+                codes, scales, g2d, x2d, gamma, backend=backend
+            )
+        if self.sampler == "randk_qsgd":
+            seeds = self.worker_seeds(key, n)
+            vals, offs = self.compress_stacked(seeds, diff_bufs)
+            levels, norms = kref.qsgd_sampled_quantize_ref(vals, seeds, self.s)
+            vals = kref.randk_qsgd_dequant_ref(levels, norms, self.s)
+            return epi.scatter_epilogue(
+                vals, offs, g2d, x2d, gamma, backend=backend
+            )
+        vals, offs = self.compress_stacked(self.worker_seeds(key, n), diff_bufs)
+        return epi.scatter_epilogue(vals, offs, g2d, x2d, gamma, backend=backend)
+
+    def fused_sync(self, grad_bufs: jax.Array, x2d: jax.Array, gamma: float):
+        """Sync-round epilogue: worker-mean over the ONE packed gradient
+        buffer (the fused psum replacing the per-leaf tree exchange) fused
+        with the iterate update. Returns (g_new, x_new) like fused_round."""
+        from repro.kernels import epilogue as epi
+
+        return epi.mean_epilogue(grad_bufs, x2d, gamma, backend=self.backend)
 
     # -- test/validation helpers -------------------------------------------
     def roundtrip_worker(self, key: jax.Array, tree: PyTree) -> PyTree:
@@ -536,4 +624,20 @@ def make_engine(
     return FlatEngine(
         layout=make_layout(params, block=block, dtype=dtype), kb=kb,
         backend=backend, sampler=sampler, s=s,
+    )
+
+
+def make_downlink(
+    engine: FlatEngine,
+    sampler: str = "qsgd",
+    kb: "int | None" = None,
+    s: "int | None" = None,
+) -> FlatEngine:
+    """Downlink engine sharing ``engine``'s layout/backend: the server-side
+    compressor of Q_down(g^{k+1} − g^k) (DESIGN.md §4.7). PermK is rejected
+    at use time (a broadcast has one payload, not an n-partition)."""
+    return dataclasses.replace(
+        engine, sampler=sampler,
+        kb=engine.kb if kb is None else kb,
+        s=engine.s if s is None else s,
     )

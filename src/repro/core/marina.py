@@ -19,13 +19,44 @@ Faithfulness notes
 * Compressor randomness is independent across workers (the n-fold key split),
   which is what gives the 1/n variance averaging in Thm 2.1's proof (eq. 21).
   ``SharedRandK`` deliberately breaks this for the §Perf communication experiment.
+
+Beyond-paper round engineering (DESIGN.md §4.7)
+-----------------------------------------------
+* ``carry=True`` — *gradient-carry rounds*: the state additionally carries the
+  per-worker gradients ``h_i^k = ∇f_i(x^k)`` that the previous round already
+  computed, so a compressed round runs ONE backprop (at x^{k+1}) instead of
+  two; the difference Δ_i = ∇f_i(x^{k+1}) − h_i^k is bit-identical to the
+  recompute-at-the-old-point path whenever the local gradient oracle is
+  deterministic in the iterate (fixed local datasets — the Alg. 1/2 regime).
+  In the online Alg. 3 regime (fresh minibatch per round) the carry replaces
+  the same-minibatch correlation with last round's realization; this is a
+  different (higher-variance) estimator, so the flag is opt-in. Carry states
+  are *lookahead*: the stored params are already stepped (x^{k+1} after init,
+  x^{k+2} after step k), which is what lets the fused epilogue finish
+  ``g += δ`` and ``x −= γ·g`` in one sweep; ``g`` sequences coincide with the
+  seed estimator step for step, and params lead by exactly one step.
+* With an engine, a carry round ends in the fused epilogue kernel
+  (kernels/epilogue.py): dequant/scatter-mean of the payloads, the estimator
+  update and the iterate update in a single (nblk, B)-tile HBM sweep, and the
+  carried ``h`` / estimator ``g`` live as packed flat buffers
+  ((n, nblk, B) / (nblk, B)) rather than trees.
+* ``down_compressor`` / ``down_engine`` — *compressed downlink* (Gruntkowska
+  et al. 2024's bidirectional program on DIANA-style shifts): on compressed
+  rounds the server broadcasts Q_down(g^{k+1} − g^k) = Q_down(δ_up) instead
+  of the dense estimator, and every worker decompress-accumulates; since the
+  recursion runs on the single broadcast estimator, unbiased Q_down composes
+  with the uplink as (1+ω_down)(1+ω_up/n) − 1. Sync rounds broadcast dense
+  (32d down-bits), mirroring the Bernoulli structure in both directions.
+  ``StepMetrics.down_bits`` books the per-worker received bits every round —
+  the dense 32d broadcast that the seed ledger silently ignored is now
+  counted even when no downlink compressor is configured.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +72,7 @@ from .compressors import (
     tree_dim,
     tree_payload_bits,
 )
-from .flat import FlatEngine
+from .flat import FlatEngine, pack, pack_stacked, unpack
 from .tree_util import (
     tree_axpy,
     tree_mean_axis0,
@@ -53,20 +84,31 @@ from .tree_util import (
 PyTree = Any
 GradFn = Callable[[PyTree, PyTree], PyTree]  # (params, batch) -> grad tree
 
+#: fold_in constant deriving the downlink key from the step key WITHOUT
+#: perturbing the (k_bern, k_q) split — carry/downlink rounds must draw the
+#: same uplink randomness as the seed estimator for bit-exact trajectories.
+_DOWN_FOLD = 0x0D0C
 
 class StepMetrics(NamedTuple):
     grad_est_norm: jax.Array      # ‖g^k‖ (the estimator driving the step)
     bits_per_worker: jax.Array    # bits uplinked by one worker this round
     sync_round: jax.Array         # c_k (1 = dense round)
     oracle_calls: jax.Array       # stochastic first-order oracle calls per worker
+    down_bits: jax.Array = 0.0    # bits each worker RECEIVES this round
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class MarinaState:
     params: PyTree
-    g: PyTree          # server estimator g^k, replicated
+    g: PyTree          # server estimator g^k, replicated ((nblk, B) flat
+                       # buffer in the fused carry path, tree otherwise)
     step: jax.Array
+    h: Optional[PyTree] = None  # carry mode: per-worker ∇f_i(x^k), a
+                                # worker-stacked tree (kept in tree form even
+                                # on the fused path: the subtract-and-pack
+                                # then fuses into the ζ-sized sampler gather
+                                # instead of materializing (n, nblk, B))
 
 
 def _per_worker_grads(grad_fn: GradFn, params: PyTree, batches: PyTree) -> PyTree:
@@ -134,6 +176,25 @@ def _compressed_delta(
     return _decompress_mean(comp, payloads, like, n)
 
 
+def _down_roundtrip(
+    down_comp: "Compressor | None",
+    down_engine: "FlatEngine | None",
+    key: jax.Array,
+    delta: PyTree,
+    like: PyTree,
+) -> PyTree:
+    """Compressed downlink on the aggregated round delta: the server
+    broadcasts Q_down(δ_up) and every worker decompress-accumulates — since
+    g^{k+1} − g^k = δ_up, this IS broadcasting the compressed estimator
+    difference. Identity when no downlink is configured (dense broadcast)."""
+    if down_engine is not None:
+        return down_engine.roundtrip_worker(key, delta)
+    if down_comp is not None:
+        payload = tree_compress(down_comp, key, delta)
+        return tree_decompress(down_comp, payload, like)
+    return delta
+
+
 def _round_bits(
     comp: Compressor, engine: "FlatEngine | None", like: PyTree, n: int = 1
 ):
@@ -146,6 +207,46 @@ def _round_bits(
     return jnp.asarray(tree_payload_bits(comp, like))
 
 
+def _down_round_bits(
+    down_comp: "Compressor | None",
+    down_engine: "FlatEngine | None",
+    like: PyTree,
+    d: int,
+):
+    """Per-worker downlink bits of one compressed round: the compressed
+    broadcast payload, or the dense 32d estimator when no downlink
+    compression is configured (counted either way — DESIGN.md §4.7)."""
+    from . import wire
+
+    if down_engine is not None:
+        return jnp.asarray(down_engine.payload_bits(1))
+    if down_comp is not None:
+        return jnp.asarray(tree_payload_bits(down_comp, like))
+    return jnp.asarray(wire.downlink_dense_bits(d))
+
+
+def _check_downlink_config(m) -> None:
+    """The fused carry round consumes the downlink payload inside the
+    epilogue kernel, which only speaks the flat wire formats — a per-leaf
+    tree ``down_compressor`` cannot slot in there, and silently skipping it
+    would book compressed down-bits for a dense broadcast. Refuse loudly."""
+    if m.carry and m.engine is not None and (
+        m.down_compressor is not None and m.down_engine is None
+    ):
+        raise ValueError(
+            "carry=True with a flat engine needs a down_engine for the "
+            "compressed downlink (make_downlink(engine, ...)); a per-leaf "
+            "down_compressor only fits the tree paths"
+        )
+
+
+def _flat_sync_mean(engine: FlatEngine, grads: PyTree) -> PyTree:
+    """Sync rounds ride the flat buffer: ONE fused mean over the packed
+    (n, nblk, B) gradient buffer instead of a per-leaf tree exchange."""
+    bufs = pack_stacked(engine.layout, grads)
+    return unpack(engine.layout, jnp.mean(bufs, axis=0))
+
+
 # ---------------------------------------------------------------------------
 # MARINA — Algorithm 1
 # ---------------------------------------------------------------------------
@@ -155,19 +256,40 @@ def _round_bits(
 class Marina:
     """Algorithm 1. ``grad_fn(params, batch)`` must return the *local full*
     gradient ∇f_i (the trainer passes each worker's full data shard — or, in the
-    online LM setting, the round's large batch, matching Alg. 3 line 8 c_k=1)."""
+    online LM setting, the round's large batch, matching Alg. 3 line 8 c_k=1).
+
+    ``carry=True`` enables single-backprop lookahead rounds; ``down_*`` add
+    the compressed downlink — see the module docstring for both contracts."""
 
     grad_fn: GradFn
     compressor: Compressor
     gamma: float
     p: float
     engine: FlatEngine | None = None  # fused flat path when set (DESIGN.md §4)
+    carry: bool = False
+    down_compressor: Compressor | None = None
+    down_engine: FlatEngine | None = None
+
+    def __post_init__(self):
+        _check_downlink_config(self)
 
     def init(self, params: PyTree, batches: PyTree) -> MarinaState:
-        g0 = tree_mean_axis0(_per_worker_grads(self.grad_fn, params, batches))
-        return MarinaState(params=params, g=g0, step=jnp.zeros((), jnp.int32))
+        grads = _per_worker_grads(self.grad_fn, params, batches)
+        if not self.carry:
+            g0 = tree_mean_axis0(grads)
+            return MarinaState(params=params, g=g0, step=jnp.zeros((), jnp.int32))
+        g0 = tree_mean_axis0(grads)
+        x1 = tree_axpy(-self.gamma, g0, params)
+        if self.engine is not None:
+            # lookahead fused state: estimator lives as the packed buffer
+            return MarinaState(
+                params=x1, g=pack(self.engine.layout, g0),
+                step=jnp.zeros((), jnp.int32), h=grads,
+            )
+        return MarinaState(params=x1, g=g0, step=jnp.zeros((), jnp.int32), h=grads)
 
-    def step(self, state: MarinaState, key: jax.Array, batches: PyTree):
+    # -- seed-shaped rounds (two backprops on compressed rounds) ------------
+    def _step_recompute(self, state: MarinaState, key: jax.Array, batches: PyTree):
         n = jax.tree.leaves(batches)[0].shape[0]
         k_bern, k_q = jax.random.split(key)
         c_k = jax.random.bernoulli(k_bern, self.p)
@@ -177,6 +299,8 @@ class Marina:
 
         def sync_branch(_):
             grads = _per_worker_grads(self.grad_fn, x_new, batches)
+            if self.engine is not None:
+                return _flat_sync_mean(self.engine, grads)
             return tree_mean_axis0(grads)
 
         def compressed_branch(_):
@@ -186,6 +310,10 @@ class Marina:
             delta = _compressed_delta(
                 self.compressor, self.engine, k_q, diffs, state.params, n
             )
+            delta = _down_roundtrip(
+                self.down_compressor, self.down_engine,
+                jax.random.fold_in(key, _DOWN_FOLD), delta, state.params,
+            )
             return jax.tree.map(jnp.add, state.g, delta)
 
         g_next = jax.lax.cond(c_k, sync_branch, compressed_branch, None)
@@ -193,13 +321,95 @@ class Marina:
         d = tree_dim(state.params)
         bits_dense = jnp.asarray(32.0 * d)
         bits_q = _round_bits(self.compressor, self.engine, state.params, n)
+        down_q = _down_round_bits(
+            self.down_compressor, self.down_engine, state.params, d
+        )
         metrics = StepMetrics(
             grad_est_norm=tree_norm(g_next),
             bits_per_worker=jnp.where(c_k, bits_dense, bits_q),
             sync_round=c_k.astype(jnp.int32),
             oracle_calls=jnp.where(c_k, 1.0, 2.0),
+            down_bits=jnp.where(c_k, bits_dense, down_q),
         )
         return MarinaState(params=x_new, g=g_next, step=state.step + 1), metrics
+
+    # -- gradient-carry lookahead rounds (one backprop, fused epilogue) -----
+    def _step_carry(self, state: MarinaState, key: jax.Array, batches: PyTree):
+        n = jax.tree.leaves(batches)[0].shape[0]
+        k_bern, k_q = jax.random.split(key)
+        c_k = jax.random.bernoulli(k_bern, self.p)
+        k_down = jax.random.fold_in(key, _DOWN_FOLD)
+        d = tree_dim(state.params)
+
+        # the ONE backprop of the round, shared by both branches: state.params
+        # is already the evaluation point x^{k+1} (lookahead state).
+        grads = _per_worker_grads(self.grad_fn, state.params, batches)
+
+        if self.engine is not None:
+            lay = self.engine.layout
+            x2d = pack(lay, state.params)
+
+            def sync_branch(_):
+                return self.engine.fused_sync(
+                    pack_stacked(lay, grads), x2d, self.gamma
+                )
+
+            def compressed_branch(_):
+                # subtract-and-pack stays in tree form until here so XLA can
+                # fuse it into the sampler's ζ-sized gather (a packed h would
+                # force an (n, nblk, B) materialization every round)
+                diffs = pack_stacked(lay, tree_sub(grads, state.h))
+                return self.engine.fused_round(
+                    k_q, diffs, n, state.g, x2d, self.gamma,
+                    down=self.down_engine, down_key=k_down,
+                )
+
+            g2d, x_new2d = jax.lax.cond(c_k, sync_branch, compressed_branch, None)
+            new_state = MarinaState(
+                params=unpack(lay, x_new2d), g=g2d, step=state.step + 1,
+                h=grads,
+            )
+            gnorm = tree_norm(g2d)
+        else:
+            def sync_branch(_):
+                return tree_mean_axis0(grads)
+
+            def compressed_branch(_):
+                diffs = tree_sub(grads, state.h)
+                delta = _compressed_delta(
+                    self.compressor, None, k_q, diffs, state.params, n
+                )
+                delta = _down_roundtrip(
+                    self.down_compressor, self.down_engine, k_down, delta,
+                    state.params,
+                )
+                return jax.tree.map(jnp.add, state.g, delta)
+
+            g_next = jax.lax.cond(c_k, sync_branch, compressed_branch, None)
+            x_next = tree_axpy(-self.gamma, g_next, state.params)
+            new_state = MarinaState(
+                params=x_next, g=g_next, step=state.step + 1, h=grads
+            )
+            gnorm = tree_norm(g_next)
+
+        bits_dense = jnp.asarray(32.0 * d)
+        bits_q = _round_bits(self.compressor, self.engine, state.params, n)
+        down_q = _down_round_bits(
+            self.down_compressor, self.down_engine, state.params, d
+        )
+        metrics = StepMetrics(
+            grad_est_norm=gnorm,
+            bits_per_worker=jnp.where(c_k, bits_dense, bits_q),
+            sync_round=c_k.astype(jnp.int32),
+            oracle_calls=jnp.asarray(1.0),
+            down_bits=jnp.where(c_k, bits_dense, down_q),
+        )
+        return new_state, metrics
+
+    def step(self, state: MarinaState, key: jax.Array, batches: PyTree):
+        if self.carry:
+            return self._step_carry(state, key, batches)
+        return self._step_recompute(state, key, batches)
 
 
 # ---------------------------------------------------------------------------
@@ -219,7 +429,14 @@ class VRMarina:
     The trainer samples the batches; this keeps the algorithm agnostic to the
     dataset layout (and identical between the finite-sum and online cases, which
     differ only in what the oracles receive — exactly the Alg. 2 vs Alg. 3 delta).
-    """
+
+    ``carry=True`` carries the minibatch recursion: h_i holds whatever local
+    gradient the previous round evaluated (full on sync rounds, b′-minibatch
+    on compressed rounds) and the compressed difference is
+    ∇̂(x^{k+1}; ξ_k) − h_i — one oracle sweep per round instead of two.
+    Bit-exact vs. the recompute path when the oracles and batches are
+    deterministic per round (e.g. b′ = m); in the fresh-minibatch regime it
+    trades the same-ξ correlation for the halved oracle cost (opt-in)."""
 
     full_grad_fn: GradFn
     mb_grad_fn: GradFn
@@ -227,18 +444,28 @@ class VRMarina:
     gamma: float
     p: float
     engine: FlatEngine | None = None
+    carry: bool = False
+    down_compressor: Compressor | None = None
+    down_engine: FlatEngine | None = None
+
+    def __post_init__(self):
+        _check_downlink_config(self)
 
     def init(self, params: PyTree, full_batches: PyTree) -> MarinaState:
-        g0 = tree_mean_axis0(_per_worker_grads(self.full_grad_fn, params, full_batches))
-        return MarinaState(params=params, g=g0, step=jnp.zeros((), jnp.int32))
+        grads = _per_worker_grads(self.full_grad_fn, params, full_batches)
+        if not self.carry:
+            g0 = tree_mean_axis0(grads)
+            return MarinaState(params=params, g=g0, step=jnp.zeros((), jnp.int32))
+        g0 = tree_mean_axis0(grads)
+        x1 = tree_axpy(-self.gamma, g0, params)
+        if self.engine is not None:
+            return MarinaState(
+                params=x1, g=pack(self.engine.layout, g0),
+                step=jnp.zeros((), jnp.int32), h=grads,
+            )
+        return MarinaState(params=x1, g=g0, step=jnp.zeros((), jnp.int32), h=grads)
 
-    def step(
-        self,
-        state: MarinaState,
-        key: jax.Array,
-        full_batches: PyTree,
-        mb_batches: PyTree,
-    ):
+    def _step_recompute(self, state, key, full_batches, mb_batches):
         n = jax.tree.leaves(full_batches)[0].shape[0]
         k_bern, k_q = jax.random.split(key)
         c_k = jax.random.bernoulli(k_bern, self.p)
@@ -248,6 +475,8 @@ class VRMarina:
 
         def sync_branch(_):
             grads = _per_worker_grads(self.full_grad_fn, x_new, full_batches)
+            if self.engine is not None:
+                return _flat_sync_mean(self.engine, grads)
             return tree_mean_axis0(grads)
 
         def compressed_branch(_):
@@ -258,6 +487,10 @@ class VRMarina:
             delta = _compressed_delta(
                 self.compressor, self.engine, k_q, diffs, state.params, n
             )
+            delta = _down_roundtrip(
+                self.down_compressor, self.down_engine,
+                jax.random.fold_in(key, _DOWN_FOLD), delta, state.params,
+            )
             return jax.tree.map(jnp.add, state.g, delta)
 
         g_next = jax.lax.cond(c_k, sync_branch, compressed_branch, None)
@@ -265,6 +498,9 @@ class VRMarina:
         d = tree_dim(state.params)
         m_full = jax.tree.leaves(full_batches)[0].shape[1]
         b_prime = jax.tree.leaves(mb_batches)[0].shape[1]
+        down_q = _down_round_bits(
+            self.down_compressor, self.down_engine, state.params, d
+        )
         metrics = StepMetrics(
             grad_est_norm=tree_norm(g_next),
             bits_per_worker=jnp.where(
@@ -274,8 +510,110 @@ class VRMarina:
             ),
             sync_round=c_k.astype(jnp.int32),
             oracle_calls=jnp.where(c_k, float(m_full), 2.0 * b_prime),
+            down_bits=jnp.where(c_k, jnp.asarray(32.0 * d), down_q),
         )
         return MarinaState(params=x_new, g=g_next, step=state.step + 1), metrics
+
+    def _step_carry(self, state, key, full_batches, mb_batches):
+        n = jax.tree.leaves(full_batches)[0].shape[0]
+        k_bern, k_q = jax.random.split(key)
+        c_k = jax.random.bernoulli(k_bern, self.p)
+        k_down = jax.random.fold_in(key, _DOWN_FOLD)
+        d = tree_dim(state.params)
+
+        if self.engine is not None:
+            lay = self.engine.layout
+            x2d = pack(lay, state.params)
+
+            # each branch runs its ONE oracle sweep (the two branches use
+            # different oracles, so the backprop cannot hoist out of the cond
+            # as in plain MARINA — but each round still runs exactly one).
+            def sync_branch(_):
+                grads = _per_worker_grads(
+                    self.full_grad_fn, state.params, full_batches
+                )
+                g2d, x_new2d = self.engine.fused_sync(
+                    pack_stacked(lay, grads), x2d, self.gamma
+                )
+                return g2d, x_new2d, grads
+
+            def compressed_branch(_):
+                grads = _per_worker_grads(
+                    self.mb_grad_fn, state.params, mb_batches
+                )
+                diffs = pack_stacked(lay, tree_sub(grads, state.h))
+                g2d, x_new2d = self.engine.fused_round(
+                    k_q, diffs, n, state.g, x2d, self.gamma,
+                    down=self.down_engine, down_key=k_down,
+                )
+                return g2d, x_new2d, grads
+
+            g2d, x_new2d, h_new = jax.lax.cond(
+                c_k, sync_branch, compressed_branch, None
+            )
+            new_state = MarinaState(
+                params=unpack(lay, x_new2d), g=g2d, step=state.step + 1,
+                h=h_new,
+            )
+            gnorm = tree_norm(g2d)
+        else:
+            def sync_branch(_):
+                grads = _per_worker_grads(
+                    self.full_grad_fn, state.params, full_batches
+                )
+                return tree_mean_axis0(grads), grads
+
+            def compressed_branch(_):
+                grads = _per_worker_grads(
+                    self.mb_grad_fn, state.params, mb_batches
+                )
+                diffs = tree_sub(grads, state.h)
+                delta = _compressed_delta(
+                    self.compressor, None, k_q, diffs, state.params, n
+                )
+                delta = _down_roundtrip(
+                    self.down_compressor, self.down_engine, k_down, delta,
+                    state.params,
+                )
+                return jax.tree.map(jnp.add, state.g, delta), grads
+
+            g_next, h_new = jax.lax.cond(
+                c_k, sync_branch, compressed_branch, None
+            )
+            x_next = tree_axpy(-self.gamma, g_next, state.params)
+            new_state = MarinaState(
+                params=x_next, g=g_next, step=state.step + 1, h=h_new
+            )
+            gnorm = tree_norm(g_next)
+
+        m_full = jax.tree.leaves(full_batches)[0].shape[1]
+        b_prime = jax.tree.leaves(mb_batches)[0].shape[1]
+        down_q = _down_round_bits(
+            self.down_compressor, self.down_engine, state.params, d
+        )
+        metrics = StepMetrics(
+            grad_est_norm=gnorm,
+            bits_per_worker=jnp.where(
+                c_k,
+                jnp.asarray(32.0 * d),
+                _round_bits(self.compressor, self.engine, state.params, n),
+            ),
+            sync_round=c_k.astype(jnp.int32),
+            oracle_calls=jnp.where(c_k, float(m_full), 1.0 * b_prime),
+            down_bits=jnp.where(c_k, jnp.asarray(32.0 * d), down_q),
+        )
+        return new_state, metrics
+
+    def step(
+        self,
+        state: MarinaState,
+        key: jax.Array,
+        full_batches: PyTree,
+        mb_batches: PyTree,
+    ):
+        if self.carry:
+            return self._step_carry(state, key, full_batches, mb_batches)
+        return self._step_recompute(state, key, full_batches, mb_batches)
 
 
 # ---------------------------------------------------------------------------
@@ -286,7 +624,10 @@ class VRMarina:
 @dataclasses.dataclass
 class PPMarina:
     """Algorithm 4: on compressed rounds only r i.i.d.-sampled clients upload;
-    the server averages the r quantized differences (line 11, 1/r scaling)."""
+    the server averages the r quantized differences (line 11, 1/r scaling).
+    No carry mode: the sampled client set changes every round, so h_i cannot
+    be maintained from the rounds a client sat out. The compressed downlink
+    applies unchanged (the broadcast reaches all n clients)."""
 
     grad_fn: GradFn
     compressor: Compressor
@@ -294,6 +635,8 @@ class PPMarina:
     p: float
     r: int
     engine: FlatEngine | None = None
+    down_compressor: Compressor | None = None
+    down_engine: FlatEngine | None = None
 
     def init(self, params: PyTree, batches: PyTree) -> MarinaState:
         g0 = tree_mean_axis0(_per_worker_grads(self.grad_fn, params, batches))
@@ -309,6 +652,8 @@ class PPMarina:
 
         def sync_branch(_):
             grads = _per_worker_grads(self.grad_fn, x_new, batches)
+            if self.engine is not None:
+                return _flat_sync_mean(self.engine, grads)
             return tree_mean_axis0(grads)
 
         def compressed_branch(_):
@@ -323,6 +668,10 @@ class PPMarina:
             delta = _compressed_delta(
                 self.compressor, self.engine, k_q, diffs, state.params, self.r
             )
+            delta = _down_roundtrip(
+                self.down_compressor, self.down_engine,
+                jax.random.fold_in(key, _DOWN_FOLD), delta, state.params,
+            )
             return jax.tree.map(jnp.add, state.g, delta)
 
         g_next = jax.lax.cond(c_k, sync_branch, compressed_branch, None)
@@ -335,11 +684,15 @@ class PPMarina:
             _round_bits(self.compressor, self.engine, state.params, self.r)
             * self.r,
         )
+        down_q = _down_round_bits(
+            self.down_compressor, self.down_engine, state.params, d
+        )
         metrics = StepMetrics(
             grad_est_norm=tree_norm(g_next),
             bits_per_worker=bits_total / n,
             sync_round=c_k.astype(jnp.int32),
             oracle_calls=jnp.where(c_k, 1.0, 2.0 * self.r / n),
+            down_bits=jnp.where(c_k, jnp.asarray(32.0 * d), down_q),
         )
         return MarinaState(params=x_new, g=g_next, step=state.step + 1), metrics
 

@@ -98,3 +98,30 @@ def correlated_q_bits(d: int, s: int) -> float:
     """CorrelatedQ wire: f32 norm + one packed level per coordinate (the
     stratified dither is shared randomness, never transmitted)."""
     return F32_BITS + qsgd_level_bits(s) * d
+
+
+# ---------------------------------------------------------------------------
+# Downlink accounting (DESIGN.md §4.7)
+#
+# The server→worker direction was historically invisible to the ledger: every
+# round broadcast the dense f32 estimator g^{k+1} (or equivalently the
+# params) and booked zero bits. The bidirectional wire makes the direction
+# explicit: sync rounds and unconfigured downlinks book the dense broadcast,
+# compressed downlinks book the Q_down(g^{k+1} − g^k) payload — which reuses
+# the per-sampler formats above (the payload is ONE worker-shaped message,
+# n = 1), so there are no new per-format formulas to drift.
+# ---------------------------------------------------------------------------
+
+
+def downlink_dense_bits(d: int) -> float:
+    """The uncompressed downlink: the dense f32 estimator broadcast each
+    worker receives (sync rounds, and every round when no Q_down is set)."""
+    return F32_BITS * d
+
+
+def round_total_bits(up_bits_per_worker: float,
+                     down_bits_per_worker: float) -> float:
+    """Total up+down wire bits one worker moves in one round (the benchmark
+    and ledger convention: per worker, both directions — multiply by n for
+    the fleet)."""
+    return up_bits_per_worker + down_bits_per_worker

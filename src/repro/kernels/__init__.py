@@ -12,6 +12,12 @@
                     `nibble_pack`/`nibble_unpack` wire kernels, and the
                     legacy two-pass global-norm QSGD — all routed through
                     `flat.resolve_backend` (`backend="auto"`).
+* ``epilogue.py`` — the fused server epilogue (DESIGN.md §4.7): one
+                    (nblk, B)-tile sweep doing dequant/scatter-mean →
+                    ``g += δ`` → ``x −= γ·g`` per wire family
+                    (`delta`/`mean`/`scatter`/`qsgd`/`natural_epilogue`),
+                    consuming either the n-worker uplink payloads or the
+                    single compressed-downlink payload.
 * ``ref.py``      — bit-exact pure-jnp oracles; the CPU/`ref` backend of the
                     flat engine (repro.core.flat) *is* these oracles.
 * ``ops.py``      — jit'd flat-vector wrappers (padding, host-side samplers).

@@ -1,0 +1,289 @@
+"""Pallas TPU kernels for the fused server epilogue (DESIGN.md §4.7/§5).
+
+One (nblk, B)-tile HBM sweep finishes a compressed round on the receiving
+side: dequantize/scatter-mean the worker payloads into the round delta,
+advance the estimator ``g += δ`` and step the iterate ``x −= γ·g`` — three
+passes (dequant-mean kernel + two ``tree.map`` sweeps) collapsed into one
+kernel whose only dense traffic is reading (g, x) and writing (g', x') once.
+The same kernels consume either direction's wire format: the n-worker uplink
+payloads directly (no downlink configured), or the single server payload of
+the compressed downlink ``Q_down(g^{k+1} − g^k)`` (n = 1), which makes them
+the worker-side decompress-accumulate of the bidirectional wire.
+
+Variants (one per wire family, mirroring the PR-3 kernel suite):
+
+* ``delta_epilogue``   — already-dense δ (PermK concat-mean, tree paths).
+* ``mean_epilogue``    — sync rounds: worker-mean of the packed gradient
+                         buffers fused with the x update (the "sync rounds
+                         ride the flat buffer" exchange).
+* ``scatter_epilogue`` — seeded-RandK payloads: scatter-accumulate (one-hot
+                         MXU matmuls, as in ``scatter_accum``) + apply.
+* ``qsgd_epilogue``    — packed block-QSGD payloads: worker-indexed int8
+                         dequant accumulation (input bandwidth stays int8).
+* ``natural_epilogue`` — natural-compression payloads.
+
+Every entry point takes ``backend="auto"`` and routes through
+``repro.core.flat.resolve_backend``; the pure-jnp oracles live in
+``kernels/ref.py`` (integer payload handling bit-exact, float accumulations
+to the 1-ulp standard of DESIGN.md §4.4).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref as _ref
+
+
+def _resolve(backend: str) -> str:
+    from repro.core.flat import resolve_backend
+
+    return resolve_backend(backend)
+
+
+def _apply(g_new, x, gamma):
+    """The shared tail: x' = (−γ)·g' + x, evaluated exactly like the
+    per-leaf ``tree_axpy(-γ, g', x)`` so fused/unfused trajectories agree
+    bit for bit (sign-flip and commuted add are IEEE-exact)."""
+    return ((-gamma) * g_new + x.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Dense-δ and sync-mean epilogues
+# ---------------------------------------------------------------------------
+
+
+def _delta_epilogue_kernel(d_ref, g_ref, x_ref, gout_ref, xout_ref, *, gamma):
+    g_new = g_ref[...].astype(jnp.float32) + d_ref[...].astype(jnp.float32)
+    gout_ref[...] = g_new
+    xout_ref[...] = _apply(g_new, x_ref[...], gamma).astype(xout_ref.dtype)
+
+
+def delta_epilogue(delta2d, g2d, x2d, gamma: float, *, backend: str = "auto"):
+    """(nblk, B) dense δ + g + x → (g' f32, x' x.dtype) in one sweep."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        return _ref.delta_epilogue_ref(delta2d, g2d, x2d, float(gamma))
+    nblk, B = g2d.shape
+    return pl.pallas_call(
+        functools.partial(_delta_epilogue_kernel, gamma=float(gamma)),
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblk, B), jnp.float32),
+            jax.ShapeDtypeStruct((nblk, B), x2d.dtype),
+        ],
+        interpret=(backend == "pallas_interpret"),
+    )(delta2d, g2d, x2d)
+
+
+def _mean_epilogue_kernel(gb_ref, x_ref, gout_ref, xout_ref, *, n, gamma):
+    B = x_ref.shape[-1]
+
+    def body(w, acc):
+        return acc + jax.lax.dynamic_index_in_dim(
+            gb_ref[...], w, 0, keepdims=False
+        ).astype(jnp.float32)
+
+    acc = jax.lax.fori_loop(0, n, body, jnp.zeros((1, B), jnp.float32))
+    g_new = acc / n
+    gout_ref[...] = g_new
+    xout_ref[...] = _apply(g_new, x_ref[...], gamma).astype(xout_ref.dtype)
+
+
+def mean_epilogue(gbufs, x2d, gamma: float, *, backend: str = "auto"):
+    """Sync-round epilogue: (n, nblk, B) packed worker gradients + x →
+    (g' = worker mean f32, x' x.dtype). The worker mean runs over the ONE
+    packed buffer — the fused psum replacing the per-leaf tree exchange."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        return _ref.mean_epilogue_ref(gbufs, x2d, float(gamma))
+    n, nblk, B = gbufs.shape
+    return pl.pallas_call(
+        functools.partial(_mean_epilogue_kernel, n=n, gamma=float(gamma)),
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((n, 1, B), lambda i: (0, i, 0)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblk, B), jnp.float32),
+            jax.ShapeDtypeStruct((nblk, B), x2d.dtype),
+        ],
+        interpret=(backend == "pallas_interpret"),
+    )(gbufs, x2d)
+
+
+# ---------------------------------------------------------------------------
+# Payload-consuming epilogues (the wire formats of DESIGN.md §4.2/§4.6)
+# ---------------------------------------------------------------------------
+
+
+def _scatter_epilogue_kernel(
+    vals_ref, off_ref, g_ref, x_ref, gout_ref, xout_ref, *, n, gamma
+):
+    vals = vals_ref[...]      # (n, 1, kb)
+    offs = off_ref[...]       # (n, 1, kb)
+    kb = vals.shape[-1]
+    B = g_ref.shape[-1]
+
+    def body(w, acc):
+        off_w = jax.lax.dynamic_index_in_dim(offs, w, 0, keepdims=False)
+        val_w = jax.lax.dynamic_index_in_dim(vals, w, 0, keepdims=False)
+        iota = jax.lax.broadcasted_iota(jnp.int32, (kb, B), 1)
+        onehot = (iota == off_w.reshape(kb, 1)).astype(jnp.float32)
+        return acc + jax.lax.dot_general(
+            val_w.astype(jnp.float32), onehot, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    acc = jax.lax.fori_loop(0, n, body, jnp.zeros((1, B), jnp.float32))
+    g_new = g_ref[...].astype(jnp.float32) + acc / n
+    gout_ref[...] = g_new
+    xout_ref[...] = _apply(g_new, x_ref[...], gamma).astype(xout_ref.dtype)
+
+
+def scatter_epilogue(values, offsets, g2d, x2d, gamma: float, *,
+                     backend: str = "auto"):
+    """Seeded-RandK epilogue: payloads (n, nblk, kb) ×2 + g + x → (g', x').
+    The scatter-accumulate (one-hot MXU matmuls) and the g/x update share
+    one grid sweep; per-worker dense trees are never materialized."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        return _ref.scatter_epilogue_ref(values, offsets, g2d, x2d,
+                                         float(gamma))
+    n, nblk, kb = values.shape
+    B = g2d.shape[-1]
+    return pl.pallas_call(
+        functools.partial(_scatter_epilogue_kernel, n=n, gamma=float(gamma)),
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((n, 1, kb), lambda i: (0, i, 0)),
+            pl.BlockSpec((n, 1, kb), lambda i: (0, i, 0)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblk, B), jnp.float32),
+            jax.ShapeDtypeStruct((nblk, B), x2d.dtype),
+        ],
+        interpret=(backend == "pallas_interpret"),
+    )(values.astype(jnp.float32), offsets, g2d, x2d)
+
+
+def _qsgd_epilogue_kernel(
+    q_ref, norm_ref, g_ref, x_ref, gout_ref, xout_ref, *, n, s, gamma
+):
+    B = g_ref.shape[-1]
+
+    def body(w, acc):
+        qw = jax.lax.dynamic_index_in_dim(q_ref[...], w, 0, keepdims=False)
+        nw = jax.lax.dynamic_index_in_dim(norm_ref[...], w, 0, keepdims=False)
+        return acc + qw.astype(jnp.float32) * (nw[0] / s)
+
+    acc = jax.lax.fori_loop(0, n, body, jnp.zeros((1, B), jnp.float32))
+    g_new = g_ref[...].astype(jnp.float32) + acc / n
+    gout_ref[...] = g_new
+    xout_ref[...] = _apply(g_new, x_ref[...], gamma).astype(xout_ref.dtype)
+
+
+def qsgd_epilogue(levels, norms, g2d, x2d, gamma: float, s: int, *,
+                  backend: str = "auto"):
+    """Packed block-QSGD epilogue: (n, nblk, B) int8 levels + (n, nblk) f32
+    norms + g + x → (g', x'). Same worker-indexed accumulation as
+    ``qsgd_dequant_mean`` — input bandwidth stays int8 — fused with the
+    estimator/iterate update."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        return _ref.qsgd_epilogue_ref(levels, norms, g2d, x2d, float(gamma),
+                                      s)
+    n, nblk, B = levels.shape
+    return pl.pallas_call(
+        functools.partial(
+            _qsgd_epilogue_kernel, n=n, s=int(s), gamma=float(gamma)
+        ),
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((n, 1, B), lambda i: (0, i, 0)),
+            pl.BlockSpec((n, 1), lambda i: (0, i)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblk, B), jnp.float32),
+            jax.ShapeDtypeStruct((nblk, B), x2d.dtype),
+        ],
+        interpret=(backend == "pallas_interpret"),
+    )(levels, norms, g2d, x2d)
+
+
+def _natural_epilogue_kernel(
+    code_ref, scale_ref, g_ref, x_ref, gout_ref, xout_ref, *, n, gamma
+):
+    B = g_ref.shape[-1]
+
+    def body(w, acc):
+        cw = jax.lax.dynamic_index_in_dim(code_ref[...], w, 0, keepdims=False)
+        sw = jax.lax.dynamic_index_in_dim(scale_ref[...], w, 0, keepdims=False)
+        c = cw.astype(jnp.float32)
+        mag = sw[0] * jnp.exp2(-(jnp.abs(c) - 1.0))
+        return acc + jnp.where(c != 0, jnp.sign(c) * mag, 0.0)
+
+    acc = jax.lax.fori_loop(0, n, body, jnp.zeros((1, B), jnp.float32))
+    g_new = g_ref[...].astype(jnp.float32) + acc / n
+    gout_ref[...] = g_new
+    xout_ref[...] = _apply(g_new, x_ref[...], gamma).astype(xout_ref.dtype)
+
+
+def natural_epilogue(codes, scales, g2d, x2d, gamma: float, *,
+                     backend: str = "auto"):
+    """Natural-compression epilogue: (n, nblk, B) int8 codes + (n, nblk) f32
+    scales + g + x → (g', x'), decode-and-mean fused with the update."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        return _ref.natural_epilogue_ref(codes, scales, g2d, x2d,
+                                         float(gamma))
+    n, nblk, B = codes.shape
+    return pl.pallas_call(
+        functools.partial(_natural_epilogue_kernel, n=n, gamma=float(gamma)),
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((n, 1, B), lambda i: (0, i, 0)),
+            pl.BlockSpec((n, 1), lambda i: (0, i)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblk, B), jnp.float32),
+            jax.ShapeDtypeStruct((nblk, B), x2d.dtype),
+        ],
+        interpret=(backend == "pallas_interpret"),
+    )(codes, scales, g2d, x2d)

@@ -346,6 +346,60 @@ def nibble_unpack_ref(words: jax.Array, block: int) -> jax.Array:
     return q.reshape(nblk, block)
 
 
+# ---------------------------------------------------------------------------
+# Fused server epilogue (DESIGN.md §4.7): dequant/scatter-mean → g += δ →
+# x −= γ·g in one (nblk, B)-tile sweep. Every oracle mirrors its Pallas twin
+# in kernels/epilogue.py accumulation-order for accumulation-order, so integer
+# payload handling is bit-exact and float sums agree to the same 1-ulp
+# standard as the dequant-mean kernels (DESIGN.md §4.4).
+# ---------------------------------------------------------------------------
+
+
+def delta_epilogue_ref(delta2d, g2d, x2d, gamma: float):
+    """Apply an already-dense round delta: g' = g + δ, x' = x − γ·g'.
+
+    delta2d/g2d: (nblk, B) f32; x2d: (nblk, B) in the layout compute dtype.
+    Returns (g_new f32, x_new x.dtype). The x update is evaluated exactly as
+    the per-leaf path's ``tree_axpy(-γ, g', x)`` (IEEE sign-flip + commuted
+    add are exact), so fused and unfused trajectories coincide bit for bit."""
+    g_new = g2d.astype(jnp.float32) + delta2d.astype(jnp.float32)
+    x_new = (-gamma) * g_new + x2d.astype(jnp.float32)
+    return g_new, x_new.astype(x2d.dtype)
+
+
+def mean_epilogue_ref(gbufs, x2d, gamma: float):
+    """Sync-round epilogue: g' = mean over the worker axis of the packed
+    gradient buffers (the ONE fused psum replacing the per-leaf tree mean),
+    x' = x − γ·g'. gbufs: (n, nblk, B); returns (g_new f32, x_new x.dtype)."""
+    g_new = jnp.mean(gbufs.astype(jnp.float32), axis=0)
+    x_new = (-gamma) * g_new + x2d.astype(jnp.float32)
+    return g_new, x_new.astype(x2d.dtype)
+
+
+def scatter_epilogue_ref(values, offsets, g2d, x2d, gamma: float):
+    """Seeded-RandK epilogue: scatter-accumulate the n worker payloads into
+    the round delta and apply it, never materializing per-worker dense trees.
+    values/offsets: (n, nblk, kb); returns (g_new f32, x_new x.dtype)."""
+    delta = scatter_accum_ref(
+        values.astype(jnp.float32), offsets, g2d.shape[-1]
+    )
+    return delta_epilogue_ref(delta, g2d, x2d, gamma)
+
+
+def qsgd_epilogue_ref(levels, norms, g2d, x2d, gamma: float, s: int):
+    """Packed-QSGD epilogue: fused dequantize-and-mean of the int8 payloads
+    (same worker-indexed accumulation as ``qsgd_dequant_mean_ref``) + the
+    g/x update. levels: (n, nblk, B) int8; norms: (n, nblk) f32."""
+    delta = qsgd_dequant_mean_ref(levels, norms, s)
+    return delta_epilogue_ref(delta, g2d, x2d, gamma)
+
+
+def natural_epilogue_ref(codes, scales, g2d, x2d, gamma: float):
+    """Natural-compression epilogue: fused decode-and-mean + g/x update."""
+    delta = natural_dequant_mean_ref(codes, scales)
+    return delta_epilogue_ref(delta, g2d, x2d, gamma)
+
+
 def randk_qsgd_workers_ref(
     x3d: jax.Array, seeds: jax.Array, kb: int, scale: float, s: int
 ):

@@ -28,6 +28,26 @@ explicit GSPMD shardings and payload collectives — DESIGN.md §3):
   The dry-run lowers sync/compressed separately so §Roofline can attribute
   costs per round type.
 
+Round-pipeline overrides (DESIGN.md §4.7):
+
+* ``grad_carry=True`` — the step carry grows the per-worker gradients
+  ``h_i^k = ∇f_i(x^k)`` (worker-stacked tree, sharded like the grads,
+  donated): a compressed round evaluates ONE vmapped backprop (at x^{k+1})
+  and differences against the carried h instead of recomputing at x^k —
+  legal whenever each worker's oracle is deterministic in the iterate (fixed
+  local shards). Step signatures become (params, g, h, batch[, key]) →
+  (params, g, h).
+* ``flat_sync=True`` — sync rounds ride the flat buffer: the per-leaf dense
+  tree exchange is replaced by ONE fused mean over the packed (nblk, B)
+  buffer (a single worker-axis psum of d instead of one collective per
+  leaf); the unpacked mean is pinned back to the parameter shardings.
+* ``downlink=`` — compressed downlink mirroring ``compression=``: the server
+  side broadcasts Q_down(g^{k+1} − g^k) = Q_down(δ_up) instead of the dense
+  estimator ("qsgd" quantizes the aggregated delta rows against per-row ℓ2
+  norms, int8 — or 4-bit nibbles with ``packed_payload`` — and every worker
+  decompress-accumulates; "randk" broadcasts a seeded K-subsample). The
+  recursion runs on the broadcast estimator, so worker replicas stay exact.
+
 The inner gather/scatter run through the backend-switched block primitives in
 repro.core.flat (``block_gather`` / ``block_scatter_mean``): the pure-jnp ref
 path (bit-identical to kernels/ref.py) on CPU simulation, the Pallas kernels
@@ -72,6 +92,32 @@ class StepBundle:
 # ---------------------------------------------------------------------------
 # Block-RandK on worker-stacked leaves (pure jnp; ref semantics of kernels/)
 # ---------------------------------------------------------------------------
+
+
+def _qsgd_quantize_rows(key: jax.Array, x, s: int):
+    """Per-row ℓ2-norm s-level stochastic quantization over the LAST axis:
+    levels = sign(x)·⌊s|x|/‖row‖ + u⌋ as int8, norms f32 (kept-dims). The
+    one quantize formula both wire directions share — uplink
+    (``compression="qsgd"``, worker-stacked rows) and downlink
+    (:func:`_downlink_roundtrip`) must never drift apart."""
+    assert 1 <= s <= 127, f"s={s} does not fit the int8 wire"
+    xf = x.astype(jnp.float32)
+    norm = jnp.sqrt(jnp.sum(xf * xf, axis=-1, keepdims=True))
+    safe = jnp.where(norm > 0, norm, 1.0)
+    u = jax.random.uniform(key, x.shape)
+    q = (jnp.sign(xf) * jnp.floor(s * jnp.abs(xf) / safe + u)).astype(jnp.int8)
+    return q, norm.astype(jnp.float32)
+
+
+def _nibble_roundtrip_rows(q: jax.Array) -> jax.Array:
+    """Push int8 levels through the genuine 4-bit wire (|level| ≤ 7): pack
+    eight two's-complement nibbles per uint32 lane word, unpack back."""
+    L = q.shape[-1]
+    lead = q.shape[:-1]
+    flat = q.reshape(-1, L)
+    return kref.nibble_unpack_ref(kref.nibble_pack_ref(flat), L).reshape(
+        *lead, L
+    )
 
 
 def _gather_along_last(x3d, idx3d, scale, backend):
@@ -181,17 +227,10 @@ def _compress_decompress_mean(
             inv = jnp.argsort(perm)
             dense = (jnp.take(by_slot, inv, axis=1) / n).astype(leaf.dtype)
         elif compression == "qsgd":
+            # shared row-quantize formula (int8-wire bound asserted inside);
+            # norm is (n, R, 1) f32
+            q, norm = _qsgd_quantize_rows(lk, x, int(qsgd_s))
             s = int(qsgd_s)
-            # same bound every other entry point enforces (wire.INT8_MAX_S):
-            # s > 127 would silently wrap the int8 level cast on the wire
-            assert 1 <= s <= 127, f"qsgd_s={s} does not fit the int8 wire"
-            xf = x.astype(jnp.float32)
-            norm = jnp.sqrt(jnp.sum(xf * xf, axis=-1, keepdims=True))  # (n,R,1)
-            safe = jnp.where(norm > 0, norm, 1.0)
-            u = jax.random.uniform(lk, (n, R, L))
-            level = jnp.floor(s * jnp.abs(xf) / safe + u)
-            q = (jnp.sign(xf) * level).astype(jnp.int8)
-            norm = norm.astype(jnp.float32)
             if staged_payload:
                 # quantize under the worker-sharded layout: the dense f32
                 # diffs never leave their worker
@@ -271,6 +310,53 @@ def _compress_decompress_mean(
     return jax.tree.unflatten(treedef, outs)
 
 
+def _downlink_roundtrip(
+    key: jax.Array,
+    delta: PyTree,
+    mode: str,
+    s: int,
+    packed_payload: bool,
+) -> PyTree:
+    """Compressed downlink on the aggregated round delta (DESIGN.md §4.7).
+
+    The server broadcasts Q_down(g^{k+1} − g^k) = Q_down(δ_up); since δ_up is
+    replicated after aggregation, every device compresses with the SHARED
+    round key (one payload, one broadcast) and decompress-accumulates — the
+    estimator recursion runs on the broadcast sequence, so worker replicas
+    stay bitwise in sync. "qsgd": per-row ℓ2-norm s-level quantization, int8
+    (4-bit nibbles with ``packed_payload`` and s ≤ 7). "randk": seeded
+    K-subsample (K = L/128 per row), indices regenerate from the key.
+    """
+    if mode == "none":
+        return delta
+    leaves, treedef = jax.tree.flatten(delta)
+    keys = jax.random.split(key, len(leaves))
+    outs = []
+    for lk, leaf in zip(keys, leaves):
+        shape = leaf.shape
+        L = int(shape[-1])
+        R = int(np.prod(shape[:-1])) if len(shape) > 1 else 1
+        x = leaf.reshape(R, L).astype(jnp.float32)
+        if mode == "qsgd":
+            # the same shared row-quantize formula as the uplink
+            q, norm = _qsgd_quantize_rows(lk, x, s)
+            if packed_payload and s <= 7 and L % 8 == 0:
+                # the broadcast genuinely crosses the 4-bit wire
+                q = _nibble_roundtrip_rows(q)
+            y = q.astype(jnp.float32) * (norm / s)
+        elif mode == "randk":
+            kb = max(1, L // 128)
+            idx = jax.random.randint(lk, (R, kb), 0, L, jnp.int32)
+            vals = jnp.take_along_axis(x, idx, axis=1) * (L / kb)
+            y = jnp.zeros((R, L), jnp.float32).at[
+                jnp.arange(R)[:, None], idx
+            ].add(vals)
+        else:
+            raise ValueError(f"unknown downlink {mode!r}")
+        outs.append(y.reshape(shape).astype(leaf.dtype))
+    return jax.tree.unflatten(treedef, outs)
+
+
 # ---------------------------------------------------------------------------
 # step builders
 # ---------------------------------------------------------------------------
@@ -294,6 +380,10 @@ def build_train_steps(
     compression_backend: str = "auto",
     compression: str = "randk",
     qsgd_s: int = 15,
+    grad_carry: bool = False,
+    flat_sync: "bool | None" = None,
+    downlink: str = "none",
+    downlink_s: int = 7,
 ):
     """Returns (fns, abstract_args) for sync_step / compressed_step / train_step.
 
@@ -311,6 +401,20 @@ def build_train_steps(
     * replicate_params — small-model mode: no tensor parallelism; the model
       axis becomes within-worker data parallelism (per-worker batch sharded
       over "model", params replicated)
+    * grad_carry       — single-backprop compressed rounds: the step carry
+      grows per-worker h_i^k = ∇f_i(x^k) (sharded like the grads, donated);
+      signatures become (params, g, h, batch[, key]) → (params, g, h)
+    * flat_sync        — sync rounds exchange ONE packed (n, nblk, B) buffer
+      (a single worker-axis psum) instead of one collective per leaf.
+      Default (None) auto-enables it only when packing cannot force a
+      reshard of model-parallel leaves (replicated params, or a mesh whose
+      axes are all worker axes) — on tensor/FSDP-sharded params GSPMD must
+      all-gather the dense grads to assemble the flat buffer (involuntary
+      full remat, ~4× sync-step memory on the qwen 0.5B dryrun), so the
+      per-leaf exchange stays the sharded default
+    * downlink         — "none" (dense estimator broadcast) or "qsgd"/"randk":
+      broadcast Q_down(g^{k+1} − g^k) and decompress-accumulate worker-side
+      (downlink_s levels; packed_payload packs the downlink nibbles too)
     """
     cfg = dataclasses.replace(arch.model, remat=remat)
     waxes = worker_axis_names(multi_pod, arch.worker_axes)
@@ -355,68 +459,146 @@ def build_train_steps(
     def worker_grads(params, batch):
         return jax.vmap(grad_one, in_axes=(None, 0))(params, batch)
 
-    def sync_step(params, g, batch):
-        x_new = jax.tree.map(lambda w, gg: w - gamma * gg.astype(w.dtype), params, g)
-        grads = worker_grads(x_new, batch)
-        g_new = jax.tree.map(lambda t: jnp.mean(t, axis=0), grads)
-        return x_new, g_new
+    # sync rounds ride the flat buffer: one fused mean over the packed
+    # (n, nblk, B) buffer — a single worker-axis psum of d — instead of one
+    # collective per leaf. The buffer's block dim is pinned to the non-worker
+    # mesh axes (when they divide nblk) so the dense grads never replicate,
+    # and the unpacked mean is pinned back to the parameter shardings.
+    lay = flat_engine.make_layout(param_shapes, block=BLOCK)
+    wlead = waxes if len(waxes) > 1 else (waxes[0] if waxes else None)
+    # size-1 axes cannot shard anything, so they neither disqualify the
+    # packed exchange nor are worth pinning block rows to
+    inner = tuple(
+        a for a in mesh.shape
+        if a not in set(waxes) and mesh.shape[a] > 1
+    )
+    if flat_sync is None:
+        flat_sync = replicate_params or not inner
+    blk_axes = inner if (
+        inner and lay.nblk % int(np.prod([mesh.shape[a] for a in inner])) == 0
+    ) else None
+    buf_shard = NamedSharding(
+        mesh,
+        P(wlead, blk_axes if blk_axes and len(blk_axes) > 1
+          else (blk_axes[0] if blk_axes else None), None),
+    )
 
-    def compressed_step(params, g, batch, key):
-        x_new = jax.tree.map(lambda w, gg: w - gamma * gg.astype(w.dtype), params, g)
-        g_plus = worker_grads(x_new, batch)
-        g_minus = worker_grads(params, batch)
-        diffs = jax.tree.map(jnp.subtract, g_plus, g_minus)
+    def flat_worker_mean(grads):
+        bufs = jax.vmap(lambda t: flat_engine.pack(lay, t))(grads)
+        bufs = jax.lax.with_sharding_constraint(bufs, buf_shard)
+        g_new = flat_engine.unpack(lay, jnp.mean(bufs, axis=0))
+        return jax.tree.map(
+            jax.lax.with_sharding_constraint, g_new, p_shard
+        )
+
+    def worker_mean(grads):
+        if flat_sync:
+            return flat_worker_mean(grads)
+        return jax.tree.map(lambda t: jnp.mean(t, axis=0), grads)
+
+    def descend(params, g):
+        return jax.tree.map(
+            lambda w, gg: w - gamma * gg.astype(w.dtype), params, g
+        )
+
+    def compressed_delta(key, diffs):
+        k_up, k_down = jax.random.split(key)
         delta = _compress_decompress_mean(
-            key, diffs, n, mesh, waxes, shared_mask, packed_payload,
-            staged_payload, out_shardings=p_shard,
-            backend=compression_backend, compression=compression,
-            qsgd_s=qsgd_s,
+            k_up if downlink != "none" else key, diffs, n, mesh, waxes,
+            shared_mask, packed_payload, staged_payload,
+            out_shardings=p_shard, backend=compression_backend,
+            compression=compression, qsgd_s=qsgd_s,
         )
-        g_new = jax.tree.map(jnp.add, g, delta)
-        return x_new, g_new
+        return _downlink_roundtrip(
+            k_down, delta, downlink, downlink_s, packed_payload
+        )
 
-    def train_step(params, g, batch, key):
-        k_b, k_q = jax.random.split(key)
-        c_k = jax.random.bernoulli(k_b, p)
-        return jax.lax.cond(
-            c_k,
-            lambda _: sync_step(params, g, batch),
-            lambda _: compressed_step(params, g, batch, k_q),
-            None,
-        )
+    if grad_carry:
+        # single-backprop rounds: the carry holds h_i^k = ∇f_i(x^k), so the
+        # compressed round differences against it instead of re-running the
+        # second vmapped backprop at the old point.
+        def sync_step(params, g, h, batch):
+            x_new = descend(params, g)
+            grads = worker_grads(x_new, batch)
+            return x_new, worker_mean(grads), grads
+
+        def compressed_step(params, g, h, batch, key):
+            x_new = descend(params, g)
+            g_plus = worker_grads(x_new, batch)
+            diffs = jax.tree.map(jnp.subtract, g_plus, h)
+            g_new = jax.tree.map(jnp.add, g, compressed_delta(key, diffs))
+            return x_new, g_new, g_plus
+
+        def train_step(params, g, h, batch, key):
+            k_b, k_q = jax.random.split(key)
+            c_k = jax.random.bernoulli(k_b, p)
+            return jax.lax.cond(
+                c_k,
+                lambda _: sync_step(params, g, h, batch),
+                lambda _: compressed_step(params, g, h, batch, k_q),
+                None,
+            )
+    else:
+        def sync_step(params, g, batch):
+            x_new = descend(params, g)
+            grads = worker_grads(x_new, batch)
+            return x_new, worker_mean(grads)
+
+        def compressed_step(params, g, batch, key):
+            x_new = descend(params, g)
+            g_plus = worker_grads(x_new, batch)
+            g_minus = worker_grads(params, batch)
+            diffs = jax.tree.map(jnp.subtract, g_plus, g_minus)
+            g_new = jax.tree.map(jnp.add, g, compressed_delta(key, diffs))
+            return x_new, g_new
+
+        def train_step(params, g, batch, key):
+            k_b, k_q = jax.random.split(key)
+            c_k = jax.random.bernoulli(k_b, p)
+            return jax.lax.cond(
+                c_k,
+                lambda _: sync_step(params, g, batch),
+                lambda _: compressed_step(params, g, batch, k_q),
+                None,
+            )
 
     g_shard = p_shard  # estimator g^k lives like the params
     key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
     repl = shd.replicated(mesh)
 
+    # one fns construction for both carries: grad_carry threads the h slot
+    # (worker axes on the leading dim, the leaf's own parameter sharding
+    # behind it; donated with params/g) through every entry.
+    if grad_carry:
+        h_in = (jax.tree.map(
+            lambda ns: NamedSharding(mesh, P(wlead, *ns.spec)), p_shard
+        ),)
+        h_args = (jax.tree.map(
+            lambda sh: jax.ShapeDtypeStruct((n, *sh.shape), sh.dtype),
+            param_shapes,
+        ),)
+    else:
+        h_in = h_args = ()
+    state_out = (p_shard, g_shard, *h_in)
+    donate = tuple(range(2 + len(h_in)))
+
+    def entry(fn, needs_key):
+        key_in = (repl,) if needs_key else ()
+        key_arg = (key_spec,) if needs_key else ()
+        return (
+            jax.jit(
+                fn,
+                in_shardings=(p_shard, g_shard, *h_in, batch_shard, *key_in),
+                out_shardings=state_out,
+                donate_argnums=donate,
+            ),
+            (param_shapes, param_shapes, *h_args, batch, *key_arg),
+        )
+
     fns = {
-        "sync_step": (
-            jax.jit(
-                sync_step,
-                in_shardings=(p_shard, g_shard, batch_shard),
-                out_shardings=(p_shard, g_shard),
-                donate_argnums=(0, 1),
-            ),
-            (param_shapes, param_shapes, batch),
-        ),
-        "compressed_step": (
-            jax.jit(
-                compressed_step,
-                in_shardings=(p_shard, g_shard, batch_shard, repl),
-                out_shardings=(p_shard, g_shard),
-                donate_argnums=(0, 1),
-            ),
-            (param_shapes, param_shapes, batch, key_spec),
-        ),
-        "train_step": (
-            jax.jit(
-                train_step,
-                in_shardings=(p_shard, g_shard, batch_shard, repl),
-                out_shardings=(p_shard, g_shard),
-                donate_argnums=(0, 1),
-            ),
-            (param_shapes, param_shapes, batch, key_spec),
-        ),
+        "sync_step": entry(sync_step, needs_key=False),
+        "compressed_step": entry(compressed_step, needs_key=True),
+        "train_step": entry(train_step, needs_key=True),
     }
     return StepBundle(
         mesh=mesh,

@@ -49,6 +49,17 @@ VARIANTS = {
     "qsgd4_packed": (
         {"compression": "qsgd", "packed_payload": True, "qsgd_s": 7}, {}, {},
     ),
+    # round-pipeline overhaul (DESIGN.md §4.7)
+    "grad_carry": ({"grad_carry": True}, {}, {}),
+    "downlink_qsgd": ({"downlink": "qsgd", "downlink_s": 7}, {}, {}),
+    "carry_down_qsgd": (
+        {"grad_carry": True, "downlink": "qsgd", "downlink_s": 7}, {}, {},
+    ),
+    # sync-exchange A/B: force the packed flat-psum exchange on (it
+    # auto-enables only for worker-pure/replicated meshes) vs force the
+    # per-leaf exchange off
+    "flat_sync": ({"flat_sync": True}, {}, {}),
+    "tree_sync": ({"flat_sync": False}, {}, {}),
     # memory/compute policy
     "no_remat": ({"remat": False}, {}, {}),
     "f32_params": ({"dtype": jnp.float32}, {}, {}),

@@ -46,6 +46,7 @@ from repro.core import (
     VRMarina,
     diana_alpha,
     make_compressor,
+    make_downlink,
     make_engine,
     tree_dim,
     tree_omega,
@@ -75,6 +76,16 @@ class TrainConfig:
     ckpt_every: int = 0
     diana_alpha: Optional[float] = None
     flat_backend: str = "auto"         # kernel backend for the flat engine
+    # gradient-carry rounds (DESIGN.md §4.7): one backprop per round; with a
+    # flat engine the round ends in the fused epilogue kernel. marina /
+    # vr_marina only.
+    carry_grads: bool = False
+    # compressed downlink: compressor/sampler name for Q_down(g^{k+1} − g^k)
+    # ("qsgd" | "randk" | "natural" | None = dense broadcast). With a flat
+    # engine the name selects the downlink engine's sampler; on the per-leaf
+    # tree path it is a make_compressor name.
+    downlink: Optional[str] = None
+    downlink_kwargs: dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -83,6 +94,7 @@ class TrainMetrics:
     loss: list = dataclasses.field(default_factory=list)
     grad_est_norm: list = dataclasses.field(default_factory=list)
     bits_cum: list = dataclasses.field(default_factory=list)
+    down_cum: list = dataclasses.field(default_factory=list)
     oracle_cum: list = dataclasses.field(default_factory=list)
     wall: list = dataclasses.field(default_factory=list)
 
@@ -149,21 +161,59 @@ class Trainer:
         else:
             self.engine = None
 
+        # compressed downlink (DESIGN.md §4.7): with a flat engine the
+        # downlink is a second engine sharing the uplink layout (the name is
+        # the sampler); on the per-leaf path it is a tree compressor. Either
+        # way the ledger books wire.py accounting for the broadcast.
+        self.down_engine = None
+        self.down_comp = None
+        if train_cfg.downlink is not None:
+            dkw = dict(train_cfg.downlink_kwargs)
+            if self.engine is not None:
+                name = train_cfg.downlink.removeprefix("block_")
+                assert name in ("randk", "qsgd", "natural"), (
+                    f"downlink {train_cfg.downlink!r} is not broadcastable "
+                    "(permk partitions across receivers)"
+                )
+                self.down_engine = make_downlink(
+                    self.engine, sampler=name,
+                    kb=dkw.get("kb"), s=dkw.get("s"),
+                )
+            else:
+                self.down_comp = make_compressor(train_cfg.downlink, **dkw)
+
         m = train_cfg.method
+        if train_cfg.carry_grads and m not in ("marina", "vr_marina"):
+            raise ValueError(f"carry_grads is a marina/vr_marina mode, not {m!r}")
+        if train_cfg.downlink is not None and m not in (
+            "marina", "vr_marina", "pp_marina"
+        ):
+            # refuse rather than silently broadcast dense while the user
+            # believes the downlink is compressed
+            raise ValueError(
+                f"downlink is a marina-family mode, not {m!r}"
+            )
         if m == "marina":
-            self.method = Marina(grad_fn, comp, train_cfg.gamma, p, self.engine)
+            self.method = Marina(
+                grad_fn, comp, train_cfg.gamma, p, self.engine,
+                carry=train_cfg.carry_grads,
+                down_compressor=self.down_comp, down_engine=self.down_engine,
+            )
         elif m == "gd":
             from repro.core import make_gd
 
             self.method = make_gd(grad_fn, train_cfg.gamma)
         elif m == "vr_marina":
             self.method = VRMarina(
-                grad_fn, grad_fn, comp, train_cfg.gamma, p, self.engine
+                grad_fn, grad_fn, comp, train_cfg.gamma, p, self.engine,
+                carry=train_cfg.carry_grads,
+                down_compressor=self.down_comp, down_engine=self.down_engine,
             )
         elif m == "pp_marina":
             self.method = PPMarina(
                 grad_fn, comp, train_cfg.gamma, p, train_cfg.r_participating,
                 self.engine,
+                down_compressor=self.down_comp, down_engine=self.down_engine,
             )
         elif m == "diana":
             alpha = train_cfg.diana_alpha
@@ -190,7 +240,8 @@ class Trainer:
         self.params0 = init_params
         self._jitted_step = jax.jit(self._step)
         # chunked hot loop: one dispatch + one host sync per log interval.
-        # carry = (state, bits, oracle); donated so params/g update in place.
+        # carry = (state, bits, down, oracle); donated so params/g (and the
+        # carried h) update in place.
         self._jitted_chunk = jax.jit(self._chunk, donate_argnums=(0,))
 
     # ------------------------------------------------------------------
@@ -218,13 +269,13 @@ class Trainer:
 
         Batches are regenerated inside the trace from the step index (the
         data pipeline is a pure function of (seed, step)), and the bits /
-        oracle ledgers accumulate in the carry — no per-step host sync.
-        Returns the final carry and the last step's metrics.
+        down-bits / oracle ledgers accumulate in the carry — no per-step host
+        sync. Returns the final carry and the last step's metrics.
         """
         base_key = jax.random.PRNGKey(self.tcfg.seed)
 
         def body(c, step):
-            state, bits, oracle = c
+            state, bits, down, oracle = c
             key = jax.random.fold_in(base_key, step)
             full_b = self._batches(step, self.tcfg.batch_per_worker)
             mb_b = self._batches(10**7 + step, self.tcfg.mb_per_worker)
@@ -232,6 +283,7 @@ class Trainer:
             return (
                 state,
                 bits + met.bits_per_worker,
+                down + met.down_bits,
                 oracle + met.oracle_calls,
             ), met
 
@@ -277,28 +329,40 @@ class Trainer:
 
         start = 0
         bits = 0.0
+        down = 0.0
         oracle = 0.0
         if tc.ckpt_dir:
             s = latest_step(tc.ckpt_dir)
             if s is not None:
-                # the communication/oracle ledgers resume WITH the state:
-                # a restart that zeroes them silently shifts every resumed
-                # loss-vs-bits curve (the Fig. 1/2 x-axis) left.
+                # the communication/oracle ledgers resume WITH the state
+                # (which includes the carried h_i^k in carry mode): a restart
+                # that zeroes them silently shifts every resumed loss-vs-bits
+                # curve (the Fig. 1/2 x-axis) left.
                 like = {
                     "state": state,
                     "bits": np.zeros((), np.float32),
+                    "down": np.zeros((), np.float32),
                     "oracle": np.zeros((), np.float32),
                 }
                 try:
                     ck = load_checkpoint(tc.ckpt_dir, s, like)
                     state = ck["state"]
                     bits = float(ck["bits"])
+                    down = float(ck["down"])
                     oracle = float(ck["oracle"])
                 except KeyError:
-                    # pre-ledger checkpoint (bare state tree): resume the
-                    # iterates and accept zeroed ledgers rather than refuse
-                    # the directory outright.
-                    state = load_checkpoint(tc.ckpt_dir, s, state)
+                    try:
+                        # pre-downlink checkpoint: bits/oracle ledgers only.
+                        del like["down"]
+                        ck = load_checkpoint(tc.ckpt_dir, s, like)
+                        state = ck["state"]
+                        bits = float(ck["bits"])
+                        oracle = float(ck["oracle"])
+                    except KeyError:
+                        # pre-ledger checkpoint (bare state tree): resume the
+                        # iterates and accept zeroed ledgers rather than
+                        # refuse the directory outright.
+                        state = load_checkpoint(tc.ckpt_dir, s, state)
                 start = s + 1
 
         # the chunk carry is donated; copy so self.params0 (aliased into the
@@ -320,19 +384,24 @@ class Trainer:
             float(tree_norm(state.g)) if hasattr(state, "g") else 0.0
         )
         hist.bits_cum.append(bits)
+        hist.down_cum.append(down)
         hist.oracle_cum.append(oracle)
         hist.wall.append(time.time() - t0)
 
         prev = start
         for bound, is_log, is_ckpt in self._boundaries(start):
             # one fused device dispatch for steps [prev, bound]; the bits /
-            # oracle ledgers accumulate on device, read back once per chunk.
+            # down-bits / oracle ledgers accumulate on device, read back once
+            # per chunk.
             steps_arr = jnp.arange(prev, bound + 1, dtype=jnp.int32)
-            (state, chunk_bits, chunk_oracle), met = self._jitted_chunk(
-                (state, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
-                steps_arr,
+            # three distinct zero buffers: the chunk carry is donated, and
+            # donating one buffer thrice is an XLA error
+            zeros = [jnp.zeros((), jnp.float32) for _ in range(3)]
+            (state, chunk_bits, chunk_down, chunk_oracle), met = (
+                self._jitted_chunk((state, *zeros), steps_arr)
             )
             bits += float(chunk_bits)
+            down += float(chunk_down)
             oracle += float(chunk_oracle)
             prev = bound + 1
 
@@ -342,6 +411,7 @@ class Trainer:
                 hist.loss.append(loss)
                 hist.grad_est_norm.append(float(met.grad_est_norm))
                 hist.bits_cum.append(bits)
+                hist.down_cum.append(down)
                 hist.oracle_cum.append(oracle)
                 hist.wall.append(time.time() - t0)
             if is_ckpt:
@@ -351,6 +421,7 @@ class Trainer:
                     {
                         "state": state,
                         "bits": np.float32(bits),
+                        "down": np.float32(down),
                         "oracle": np.float32(oracle),
                     },
                 )

@@ -1,0 +1,399 @@
+"""Round-pipeline validation (DESIGN.md §4.7): gradient-carry rounds, the
+fused server epilogue, and the compressed downlink.
+
+* Grad-carry trajectory equality: with a deterministic oracle and fixed
+  batches, the single-backprop carry rounds are BIT-EXACT against the seed
+  two-backprop estimator — g^k coincides step for step, the lookahead params
+  lead by exactly one step. Covered on the per-leaf tree path and the fused
+  flat path, for MARINA and VR-MARINA.
+* Epilogue kernels: ref == pallas_interpret under the repo's tolerance
+  convention (integer payload handling exact; float accumulations to the
+  1-ulp / FMA-fusion standard of DESIGN.md §4.4), and the fused epilogue
+  equals the unfused dequant-mean → g+=δ → x−=γ·g composition.
+* Compressed downlink: Q_down(δ_up) round-trips unbiasedly, the fused
+  bidirectional round equals the manual aggregate→downlink→epilogue
+  composition, and the bits ledger books both directions per wire.py (drift
+  guard) — including the dense 32d broadcast on sync rounds.
+* Checkpoint resume with the carried h state continues bit-exactly.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BlockRandK,
+    Marina,
+    VRMarina,
+    make_downlink,
+    make_engine,
+    wire,
+)
+from repro.core.flat import pack, unpack
+from repro.core.problems import make_synthetic_binclass, nonconvex_binclass_loss
+from repro.kernels import epilogue as epi
+from repro.kernels import ref
+
+N, M, D = 4, 32, 256  # D = 2 blocks of 128
+
+
+@pytest.fixture(scope="module")
+def problem():
+    data = make_synthetic_binclass(jax.random.PRNGKey(0), N, M, D)
+    return data, jax.grad(nonconvex_binclass_loss)
+
+
+def _engine(sampler="randk", **kw):
+    return make_engine(
+        jnp.zeros((D,)), kb=8, block=128, backend="ref", sampler=sampler, **kw
+    )
+
+
+def _run_seed(method, data, steps):
+    st = method.init(jnp.zeros((D,)), data)
+    step = jax.jit(method.step)
+    params, gs, syncs = [np.asarray(st.params)], [], []
+    for k in range(steps):
+        st, met = step(st, jax.random.PRNGKey(k), data)
+        params.append(np.asarray(st.params))
+        gs.append(np.asarray(st.g))
+        syncs.append(int(met.sync_round))
+    return params, gs, syncs
+
+
+def _g_as_vector(g):
+    """Carry-mode flat g buffers unpack by truncation (zero tail pad)."""
+    arr = np.asarray(g)
+    return arr.reshape(-1)[:D] if arr.ndim > 1 else arr
+
+
+@pytest.mark.parametrize("path", ["tree", "flat"])
+def test_marina_carry_bit_exact_vs_two_backprop(problem, path):
+    """Single-backprop carry rounds reproduce the seed estimator bit for
+    bit: g^k equal exactly, lookahead params lead by exactly one step."""
+    data, grad = problem
+    comp = BlockRandK(kb=8, block=128)
+    eng = _engine() if path == "flat" else None
+    seed = Marina(grad, comp, gamma=0.05, p=0.3, engine=eng)
+    carry = Marina(grad, comp, gamma=0.05, p=0.3, engine=eng, carry=True)
+
+    params, gs, syncs = _run_seed(seed, data, 14)
+    assert 0 in syncs and 1 in syncs  # both round types exercised
+
+    st = carry.init(jnp.zeros((D,)), data)
+    np.testing.assert_array_equal(np.asarray(st.params), params[1])
+    step = jax.jit(carry.step)
+    for k in range(13):
+        st, met = step(st, jax.random.PRNGKey(k), data)
+        assert float(met.oracle_calls) == 1.0  # ONE backprop, every round
+        np.testing.assert_array_equal(_g_as_vector(st.g), gs[k])
+        np.testing.assert_array_equal(np.asarray(st.params), params[k + 2])
+
+
+@pytest.mark.parametrize("path", ["tree", "flat"])
+def test_vr_marina_carry_bit_exact(problem, path):
+    """VR carry: with deterministic oracles and mb == full batches the
+    carried minibatch recursion equals the recompute path bit for bit."""
+    data, grad = problem
+    comp = BlockRandK(kb=8, block=128)
+    eng = _engine() if path == "flat" else None
+    seed = VRMarina(grad, grad, comp, gamma=0.05, p=0.3, engine=eng)
+    carry = VRMarina(grad, grad, comp, gamma=0.05, p=0.3, engine=eng,
+                     carry=True)
+
+    st_s = seed.init(jnp.zeros((D,)), data)
+    step_s = jax.jit(seed.step)
+    params, gs = [np.asarray(st_s.params)], []
+    for k in range(12):
+        st_s, _ = step_s(st_s, jax.random.PRNGKey(k), data, data)
+        params.append(np.asarray(st_s.params))
+        gs.append(np.asarray(st_s.g))
+
+    st = carry.init(jnp.zeros((D,)), data)
+    np.testing.assert_array_equal(np.asarray(st.params), params[1])
+    step = jax.jit(carry.step)
+    for k in range(11):
+        st, _ = step(st, jax.random.PRNGKey(k), data, data)
+        np.testing.assert_array_equal(_g_as_vector(st.g), gs[k])
+        np.testing.assert_array_equal(np.asarray(st.params), params[k + 2])
+
+
+# ---------------------------------------------------------------------------
+# Epilogue kernels: ref == pallas_interpret, fused == unfused
+# ---------------------------------------------------------------------------
+
+
+def _epilogue_fixtures():
+    k = jax.random.PRNGKey(3)
+    n, nblk, B = 3, 4, 128
+    g = jax.random.normal(k, (nblk, B))
+    x = jax.random.normal(jax.random.fold_in(k, 1), (nblk, B))
+    x3d = jax.random.normal(jax.random.fold_in(k, 2), (n, nblk, B))
+    seeds = jnp.arange(n, dtype=jnp.uint32) + 11
+    return n, nblk, B, g, x, x3d, seeds
+
+
+def test_epilogue_ref_matches_pallas_interpret():
+    n, nblk, B, g, x, x3d, seeds = _epilogue_fixtures()
+    gamma = 0.07
+
+    # integer-payload epilogues (qsgd/natural): payloads are exact, the
+    # fused float accumulation follows the identical worker-indexed order
+    levels, norms = ref.qsgd_block_workers_ref(x3d, seeds, 7)
+    for fn, args in (
+        (epi.qsgd_epilogue, (levels, norms, g, x, gamma, 7)),
+        (epi.natural_epilogue, ref.natural_block_workers_ref(x3d, seeds)
+         + (g, x, gamma)),
+        (epi.delta_epilogue, (x3d[0], g, x, gamma)),
+        (epi.mean_epilogue, (x3d, x, gamma)),
+    ):
+        out_r = fn(*args, backend="ref")
+        out_p = fn(*args, backend="pallas_interpret")
+        for a, b in zip(out_r, out_p):
+            # 1-ulp FMA-fusion tolerance (DESIGN.md §4.4)
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                rtol=1e-5, atol=1e-6,
+            )
+
+    # scatter epilogue: XLA's scatter-add may associate duplicate-offset
+    # accumulation differently from the kernel's worker-major fori
+    vals = jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(9), 0),
+                             (n, nblk, 8))
+    offs = jax.random.randint(jax.random.PRNGKey(10), (n, nblk, 8), 0, B)
+    out_r = epi.scatter_epilogue(vals, offs, g, x, gamma, backend="ref")
+    out_p = epi.scatter_epilogue(vals, offs, g, x, gamma,
+                                 backend="pallas_interpret")
+    for a, b in zip(out_r, out_p):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_epilogue_fused_equals_unfused_composition():
+    """One-sweep epilogue == dequant-mean kernel + the two tree.map passes
+    it replaces, bit for bit on the ref backend (identical accumulation)."""
+    n, nblk, B, g, x, x3d, seeds = _epilogue_fixtures()
+    gamma = 0.03
+    levels, norms = ref.qsgd_block_workers_ref(x3d, seeds, 7)
+    g_new, x_new = epi.qsgd_epilogue(levels, norms, g, x, gamma, 7,
+                                     backend="ref")
+    delta = ref.qsgd_dequant_mean_ref(levels, norms, 7)
+    g_ref = g + delta
+    x_ref = (-gamma) * g_ref + x
+    np.testing.assert_array_equal(np.asarray(g_new), np.asarray(g_ref))
+    np.testing.assert_array_equal(np.asarray(x_new), np.asarray(x_ref))
+
+
+def test_epilogue_preserves_x_dtype():
+    _, _, _, g, x, x3d, _ = _epilogue_fixtures()
+    xb = x.astype(jnp.bfloat16)
+    for backend in ("ref", "pallas_interpret"):
+        g_new, x_new = epi.delta_epilogue(x3d[0], g, xb, 0.01,
+                                          backend=backend)
+        assert g_new.dtype == jnp.float32
+        assert x_new.dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Compressed downlink
+# ---------------------------------------------------------------------------
+
+
+def test_downlink_roundtrip_unbiased():
+    """E[Q_down(δ)] ≈ δ over keys for the qsgd downlink engine (unbiased
+    broadcast — the estimator recursion stays mean-correct)."""
+    eng = _engine()
+    down = make_downlink(eng, sampler="qsgd", s=7)
+    delta = jax.random.normal(jax.random.PRNGKey(4), (D,))
+    trials = 2000
+
+    def rt(key):
+        return down.roundtrip_worker(key, delta)
+
+    keys = jax.random.split(jax.random.PRNGKey(5), trials)
+    mean = jnp.mean(jax.vmap(rt)(keys), axis=0)
+    rel = float(jnp.linalg.norm(mean - delta) / jnp.linalg.norm(delta))
+    # ω(block qsgd, s=7) = min(B/49, √B/7) ≈ 1.6 at B=128
+    assert rel < 3.0 * np.sqrt(1.7 / trials)
+
+
+def test_fused_bidirectional_round_equals_manual_composition(problem):
+    """fused_round(down=...) == aggregate → Q_down roundtrip → g+=δ → x−=γg
+    assembled by hand (ref backend, bit-exact)."""
+    data, grad = problem
+    eng = _engine()
+    down = make_downlink(eng, sampler="qsgd", s=7)
+    lay = eng.layout
+    n = 3
+    diffs = jax.random.normal(jax.random.PRNGKey(6), (n, lay.nblk, lay.block))
+    g2d = jax.random.normal(jax.random.PRNGKey(7), (lay.nblk, lay.block))
+    x2d = jax.random.normal(jax.random.PRNGKey(8), (lay.nblk, lay.block))
+    k_up, k_down = jax.random.split(jax.random.PRNGKey(9))
+
+    g_new, x_new = eng.fused_round(
+        k_up, diffs, n, g2d, x2d, 0.05, down=down, down_key=k_down
+    )
+
+    delta_up = eng.aggregate(k_up, diffs, n)
+    seeds = down.worker_seeds(k_down, 1)
+    levels, norms = ref.qsgd_block_workers_ref(delta_up[None], seeds, 7)
+    levels = ref.nibble_unpack_ref(
+        ref.nibble_pack_ref(levels.reshape(lay.nblk, lay.block)), lay.block
+    ).reshape(1, lay.nblk, lay.block)
+    delta_down = ref.qsgd_dequant_mean_ref(levels, norms, 7)
+    g_ref = g2d + delta_down
+    x_ref = (-0.05) * g_ref + x2d
+    np.testing.assert_array_equal(np.asarray(g_new), np.asarray(g_ref))
+    np.testing.assert_array_equal(np.asarray(x_new), np.asarray(x_ref))
+
+
+def test_downlink_ledger_drift_guard(problem):
+    """StepMetrics.down_bits must equal wire.py for BOTH round types: dense
+    32d on sync rounds, the Q_down payload on compressed rounds — and the
+    uplink column must be untouched by the downlink."""
+    data, grad = problem
+    comp = BlockRandK(kb=8, block=128)
+    eng = _engine()
+    down = make_downlink(eng, sampler="qsgd", s=7)
+    m = Marina(grad, comp, gamma=0.05, p=0.5, engine=eng, carry=True,
+               down_engine=down)
+    st = m.init(jnp.zeros((D,)), data)
+    step = jax.jit(m.step)
+    lay = eng.layout
+    expect_down_q = wire.block_qsgd_bits(lay.nblk, lay.block, 7)
+    expect_up_q = wire.seeded_randk_bits(lay.nblk, 8)
+    seen = set()
+    for k in range(20):
+        st, met = step(st, jax.random.PRNGKey(k), data)
+        if int(met.sync_round):
+            assert float(met.down_bits) == wire.downlink_dense_bits(D)
+            assert float(met.bits_per_worker) == 32.0 * D
+        else:
+            assert float(met.down_bits) == expect_down_q
+            assert float(met.bits_per_worker) == expect_up_q
+        seen.add(int(met.sync_round))
+    assert seen == {0, 1}
+    # the acceptance axis: total up+down of a compressed round drops ≥4×
+    baseline = expect_up_q + wire.downlink_dense_bits(D)
+    assert baseline / (expect_up_q + expect_down_q) >= 4.0
+
+
+def test_fused_carry_rejects_tree_down_compressor(problem):
+    """carry+engine consumes the downlink inside the epilogue kernel, which
+    only speaks flat wire formats: a per-leaf down_compressor there must be
+    refused loudly, not silently skipped while its bits are booked."""
+    from repro.core import QSGD
+
+    _, grad = problem
+    with pytest.raises(ValueError, match="down_engine"):
+        Marina(grad, BlockRandK(kb=8, block=128), gamma=0.05, p=0.3,
+               engine=_engine(), carry=True, down_compressor=QSGD(s=7))
+    with pytest.raises(ValueError, match="down_engine"):
+        VRMarina(grad, grad, BlockRandK(kb=8, block=128), gamma=0.05, p=0.3,
+                 engine=_engine(), carry=True, down_compressor=QSGD(s=7))
+
+
+def test_no_downlink_books_dense_broadcast(problem):
+    """Without a configured downlink, every round still RECEIVES the dense
+    estimator — down_bits = 32d (the cost the seed ledger ignored)."""
+    data, grad = problem
+    m = Marina(grad, BlockRandK(kb=8, block=128), gamma=0.05, p=0.5)
+    st = m.init(jnp.zeros((D,)), data)
+    step = jax.jit(m.step)
+    for k in range(6):
+        st, met = step(st, jax.random.PRNGKey(k), data)
+        assert float(met.down_bits) == 32.0 * D
+
+
+# ---------------------------------------------------------------------------
+# Trainer integration: ledger + checkpoint resume with the carried state
+# ---------------------------------------------------------------------------
+
+
+def _tiny_cfg():
+    from repro.models.config import ModelConfig, dense_stack
+
+    return ModelConfig(
+        name="rs", arch_type="dense", d_model=32, num_heads=2, num_kv_heads=2,
+        d_ff=64, vocab_size=64, segments=dense_stack(1),
+    )
+
+
+def test_trainer_down_ledger_and_carry(tmp_path):
+    from repro.models import init_params
+    from repro.train import TrainConfig, Trainer
+
+    cfg = _tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    base = dict(
+        method="marina", compressor="block_randk",
+        comp_kwargs={"kb": 8, "block": 128}, gamma=0.05, n_workers=3,
+        batch_per_worker=2, steps=10, log_every=5, carry_grads=True,
+        downlink="qsgd", downlink_kwargs={"s": 7},
+    )
+    t = Trainer(cfg, TrainConfig(**base), params)
+    st, hist = t.run()
+    assert st.h is not None  # the carried per-worker gradients
+    assert hist.down_cum[-1] > 0
+    # drift guard at trainer level: down_cum is a sum of per-round wire.py
+    # numbers, so it must decompose into a·dense + b·q_down with a+b = steps
+    d = float(tree_dim_of(params))
+    lay = t.engine.layout
+    q_down = wire.block_qsgd_bits(lay.nblk, lay.block, 7)
+    dense = wire.downlink_dense_bits(int(d))
+    total = hist.down_cum[-1]
+    solutions = [
+        (a, b) for a in range(11) for b in range(11)
+        if a + b == 10 and abs(a * dense + b * q_down - total) < 1.0
+    ]
+    assert solutions, f"down ledger {total} is not a round-count mix"
+
+
+def tree_dim_of(params):
+    from repro.core import tree_dim
+
+    return tree_dim(params)
+
+
+def test_trainer_rejects_downlink_on_non_marina_methods():
+    """A configured downlink must refuse loudly on methods that cannot wire
+    it (otherwise the broadcast stays dense while the user believes it is
+    compressed)."""
+    from repro.models import init_params
+    from repro.train import TrainConfig, Trainer
+
+    cfg = _tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="downlink"):
+        Trainer(cfg, TrainConfig(method="diana", downlink="qsgd"), params)
+
+
+def test_trainer_checkpoint_resume_with_carry(tmp_path):
+    """Interrupt + resume mid-run with carry_grads: the carried h_i^k rides
+    the checkpoint and the continuation is bit-exact vs an uninterrupted
+    run, ledgers included."""
+    from repro.models import init_params
+    from repro.train import TrainConfig, Trainer
+
+    cfg = _tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    base = dict(
+        method="marina", compressor="block_randk",
+        comp_kwargs={"kb": 8, "block": 128}, gamma=0.05, n_workers=3,
+        batch_per_worker=2, steps=10, log_every=5, carry_grads=True,
+        downlink="qsgd", downlink_kwargs={"s": 7},
+    )
+    st_full, h_full = Trainer(cfg, TrainConfig(**base), params).run()
+
+    ck = dict(base, ckpt_dir=str(tmp_path), ckpt_every=5)
+    Trainer(cfg, dataclasses.replace(TrainConfig(**ck), steps=5), params).run()
+    st_res, h_res = Trainer(cfg, TrainConfig(**ck), params).run()
+
+    for a, b in zip(jax.tree.leaves(st_full), jax.tree.leaves(st_res)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert h_res.bits_cum[-1] == h_full.bits_cum[-1]
+    assert h_res.down_cum[-1] == h_full.down_cum[-1]
+    assert h_res.oracle_cum[-1] == h_full.oracle_cum[-1]

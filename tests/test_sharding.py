@@ -157,7 +157,31 @@ _SUBPROCESS_PROG = textwrap.dedent(
     nz4 = sum(int(jnp.sum(jnp.abs(t) > 1e-12)) for t in delta4)
     frac4 = nz4 / tot
     assert frac4 > 2 * frac, f"QSGD support {frac4} not denser than RandK {frac}"
-    print("SUBPROCESS_OK", err, frac, frac3, frac4)
+
+    # grad-carry + compressed downlink (DESIGN.md 4.7): the step carry grows
+    # the per-worker h (worker-sharded like the grads, donated) and the round
+    # runs ONE backprop; the downlink quantizes the aggregated delta. The
+    # sync_step above already exercises the packed flat-psum exchange
+    # (flat_sync is the default).
+    bundle_cd = build_train_steps(
+        arch, mesh, multi_pod=False, global_batch=8, seq_len=64,
+        gamma=0.1, dtype=jnp.float32, grad_carry=True, downlink="qsgd",
+        downlink_s=7,
+    )
+    params5 = init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    g_init5 = jax.tree.map(lambda t: jnp.full_like(t, 0.01), params5)
+    g_keep5 = jax.tree.map(jnp.array, g_init5)
+    h0 = jax.tree.map(lambda t: jnp.zeros((4, *t.shape), t.dtype), params5)
+    with bundle_cd.mesh:
+        fn, _ = bundle_cd.fns["compressed_step"]
+        x5, g5, h5 = fn(params5, g_init5, h0, batch, jax.random.PRNGKey(2))
+    delta5 = [a - b for a, b in zip(jax.tree.leaves(g5), jax.tree.leaves(g_keep5))]
+    assert all(bool(jnp.all(jnp.isfinite(t))) for t in delta5)
+    nz5 = sum(int(jnp.sum(jnp.abs(t) > 1e-12)) for t in delta5)
+    assert nz5 > 0, "carry+downlink round produced an empty delta"
+    for t in jax.tree.leaves(h5):
+        assert t.shape[0] == 4 and bool(jnp.all(jnp.isfinite(t)))
+    print("SUBPROCESS_OK", err, frac, frac3, frac4, nz5 / tot)
     """
 )
 
