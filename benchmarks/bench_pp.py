@@ -1,0 +1,289 @@
+"""Federated PP-MARINA reproduction harness (writes BENCH_pp.json).
+
+Two measurements, rendered into EXPERIMENTS.md §Federated partial
+participation by scripts/update_perf.py:
+
+* **Loss-vs-bits curves** — the paper's Figs. 1–2 comparison shape on the
+  Dirichlet(α) non-IID binclass problem (core/problems.py): PP-MARINA at
+  r ∈ {8, 4} vs full-participation MARINA vs DIANA vs compressed GD (DCGD),
+  all on the same RandK wire, each method's x-axis the FLEET-total uplink
+  bits its ledger booked (wire.py truth). The table reports ‖∇f‖² reached at
+  matched bit budgets across α ∈ {0.1, 1, ∞} heterogeneity.
+* **Round-time rows** — the r/n compute+wire saving on a real mesh: an
+  8-fake-device subprocess times the full-participation compressed round vs
+  the cohort-mapped PP round (only r of n shards backprop, r payload rows on
+  the wire) on the reduced-qwen LM step, and books the per-round wire bits
+  from repro.core.wire.
+
+Run: PYTHONPATH=src python -m benchmarks.bench_pp [--quick]
+(or  PYTHONPATH=src python -m benchmarks.run --only pp [--quick])
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    DCGD,
+    Diana,
+    Marina,
+    PPMarina,
+    RandK,
+    diana_alpha,
+    diana_gamma,
+    marina_gamma,
+    pp_marina_gamma,
+)
+from repro.core import wire
+from repro.core.problems import (
+    BinClassData,
+    binclass_full_grad,
+    binclass_smoothness,
+    make_dirichlet_binclass,
+    nonconvex_binclass_loss,
+)
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+N_CLIENTS, M_LOCAL, DIM = 20, 64, 50
+BUDGETS_MBITS = (1.0, 4.0, 16.0)   # matched fleet-uplink budgets
+
+
+def _gradsq(x, data):
+    flat = BinClassData(a=data.a.reshape(-1, DIM), y=data.y.reshape(-1))
+    return float(jnp.sum(binclass_full_grad(x, flat) ** 2))
+
+
+def _loss(x, data):
+    flat = BinClassData(a=data.a.reshape(-1, DIM), y=data.y.reshape(-1))
+    return float(nonconvex_binclass_loss(x, flat))
+
+
+def _methods(data, L, quick):
+    """(name, method, r) — every entry rides the same Rand3 wire."""
+    comp = RandK(k=3)
+    omega = comp.omega(DIM)
+    grad = jax.grad(nonconvex_binclass_loss)
+    p_full = comp.default_p(DIM)
+    out = [
+        ("marina", Marina(grad, comp, marina_gamma(L, omega, p_full, N_CLIENTS),
+                          p_full), None),
+    ]
+    for r in ((4,) if quick else (8, 4)):
+        p = p_full * r / N_CLIENTS
+        out.append((
+            f"pp_marina_r{r}",
+            PPMarina(grad, comp, pp_marina_gamma(L, omega, p, r), p, r=r,
+                     replace=False),
+            r,
+        ))
+    out.append(("diana", Diana(grad, comp, diana_gamma(L, omega, N_CLIENTS),
+                               diana_alpha(omega), N_CLIENTS), None))
+    out.append(("dcgd", DCGD(grad, comp,
+                             0.3 / (L * (1 + omega / N_CLIENTS)), N_CLIENTS),
+                None))
+    return out
+
+
+def _run_curve(method, name, data, steps, every):
+    if name in ("diana", "dcgd"):
+        state = method.init(jnp.zeros((DIM,)))
+    else:
+        state = method.init(jnp.zeros((DIM,)), data)
+    step = jax.jit(method.step)
+    bits = down = 0.0
+    pts = [{"round": 0, "mbits_up": 0.0, "mbits_down": 0.0,
+            "gradsq": _gradsq(state.params, data),
+            "loss": _loss(state.params, data)}]
+    t0 = time.time()
+    for k in range(steps):
+        state, met = step(state, jax.random.PRNGKey(k), data)
+        bits += float(met.bits_per_worker) * N_CLIENTS   # fleet uplink
+        down += float(met.down_bits) * N_CLIENTS
+        if (k + 1) % every == 0:
+            pts.append({
+                "round": k + 1,
+                "mbits_up": bits / 1e6,
+                "mbits_down": down / 1e6,
+                "gradsq": _gradsq(state.params, data),
+                "loss": _loss(state.params, data),
+            })
+    us = (time.time() - t0) / steps * 1e6
+    return pts, us
+
+
+def bench_pp_curves(quick=False, emit=print):
+    steps = 600 if quick else 4000
+    every = 50 if quick else 100
+    alphas = (0.1, float("inf")) if quick else (0.1, 1.0, float("inf"))
+    curves = []
+    for alpha in alphas:
+        data = make_dirichlet_binclass(
+            jax.random.PRNGKey(7), N_CLIENTS, M_LOCAL, DIM, alpha=alpha
+        )
+        L = binclass_smoothness(data)
+        for name, method, r in _methods(data, L, quick):
+            pts, us = _run_curve(method, name, data, steps, every)
+            curves.append({
+                "alpha": "inf" if np.isinf(alpha) else alpha,
+                "method": name, "r": r, "steps": steps, "points": pts,
+            })
+            emit(f"pp_curve/alpha{curves[-1]['alpha']}/{name}", us,
+                 f"final_gradsq={pts[-1]['gradsq']:.2e};"
+                 f"Mbits={pts[-1]['mbits_up']:.2f}")
+    return curves
+
+
+def budget_table(curves):
+    """‖∇f‖² reached within each matched fleet-uplink budget (best point at
+    or under the budget — methods that never log under it get null)."""
+    rows = []
+    for alpha in sorted({c["alpha"] for c in curves}, key=str):
+        row = {"alpha": alpha, "budgets": {}}
+        for budget in BUDGETS_MBITS:
+            cell = {}
+            for c in (c for c in curves if c["alpha"] == alpha):
+                under = [p["gradsq"] for p in c["points"]
+                         if p["mbits_up"] <= budget]
+                cell[c["method"]] = min(under) if under else None
+            row["budgets"][str(budget)] = cell
+        rows.append(row)
+    return rows
+
+
+_ROUNDTIME_PROG = textwrap.dedent(
+    """
+    import os, json, time
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses
+    import jax, jax.numpy as jnp
+    from repro.configs import get_arch
+    from repro.launch.distributed import build_train_steps, BLOCK, KB
+    from repro.launch.mesh import make_federated_mesh
+    from repro.models import reduced, init_params
+    from repro.core import wire
+
+    REPS = %(reps)d
+    mesh = make_federated_mesh(4, model=2)
+    arch = get_arch("qwen1.5-0.5b")
+    # large enough that the two vmapped backprops dominate the round — the
+    # regime the r/n cohort-compute saving targets (a tiny model measures
+    # gather overhead instead of compute)
+    arch = dataclasses.replace(arch, model=reduced(arch.model, layers=2, d_model=256))
+    cfg = arch.model
+    n, r, b = 4, 2, 4
+
+    def build(part):
+        return build_train_steps(
+            arch, mesh, multi_pod=False, global_batch=n*b, seq_len=64,
+            gamma=0.1, dtype=jnp.float32, replicate_params=True,
+            participation=part, p=0.1,
+        )
+
+    params = init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (n, b, 64), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    sel = jnp.array([1, 2], jnp.int32)
+
+    def timeit(bundle, args):
+        fn, _ = bundle.fns["compressed_step"]
+        with bundle.mesh:
+            p_, g_ = fn(*args)                      # compile + warm
+            best = float("inf")
+            for _ in range(REPS):
+                p_ = jax.tree.map(jnp.array, params)
+                g_ = jax.tree.map(jnp.zeros_like, params)
+                t0 = time.perf_counter()
+                p_, g_ = fn(p_, g_, *args[2:])
+                jax.block_until_ready(jax.tree.leaves(g_)[0])
+                best = min(best, (time.perf_counter() - t0) * 1e6)
+        return best
+
+    full = build(None)
+    key = jax.random.PRNGKey(3)
+    full_us = timeit(full, (jax.tree.map(jnp.array, params),
+                            jax.tree.map(jnp.zeros_like, params), batch, key))
+    pp = build((r, "without"))
+    pp_us = timeit(pp, (jax.tree.map(jnp.array, params),
+                        jax.tree.map(jnp.zeros_like, params), batch, key, sel))
+
+    d = sum(int(jnp.size(t)) for t in jax.tree.leaves(params))
+    nblk = -(-d // BLOCK)
+    zeta = wire.seeded_randk_bits(nblk, KB)
+    print("ROUNDTIME_JSON " + json.dumps({
+        "n": n, "r": r, "d": d,
+        "full_us": full_us, "pp_us": pp_us,
+        "speedup": full_us / pp_us,
+        "wire_bits_full": wire.pp_uplink_total_bits(n, zeta),
+        "wire_bits_pp": wire.pp_uplink_total_bits(r, zeta),
+        "cohort_compute": bool(pp.meta["cohort_compute"]),
+    }))
+    """
+)
+
+
+def bench_pp_roundtime(quick=False, emit=print):
+    prog = _ROUNDTIME_PROG % {"reps": 3 if quick else 10}
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", prog], capture_output=True, text=True,
+        env=env, timeout=900,
+    )
+    if out.returncode != 0:
+        emit("pp_roundtime/FAILED", 0.0, out.stderr.strip()[-200:])
+        return None
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("ROUNDTIME_JSON ")][0]
+    row = json.loads(line[len("ROUNDTIME_JSON "):])
+    emit("pp_roundtime/mesh4x2", row["pp_us"],
+         f"full_us={row['full_us']:.0f};speedup={row['speedup']:.2f}x;"
+         f"wire={row['wire_bits_full']/row['wire_bits_pp']:.1f}x")
+    return row
+
+
+def bench_pp(quick=False, emit=None):
+    """Entry point shared with benchmarks.run (--only pp)."""
+    if emit is None:
+        def emit(name, us, derived):
+            print(f"{name},{us:.2f},{derived}", flush=True)
+    curves = bench_pp_curves(quick=quick, emit=emit)
+    roundtime = bench_pp_roundtime(quick=quick, emit=emit)
+    out = {
+        "quick": bool(quick),
+        "problem": {"n_clients": N_CLIENTS, "m_local": M_LOCAL, "d": DIM,
+                    "compressor": "rand3", "scheme": "without"},
+        "budgets_mbits": list(BUDGETS_MBITS),
+        "curves": curves,
+        "budget_table": budget_table(curves),
+        "roundtime": roundtime,
+    }
+    path = os.path.join(ROOT, "BENCH_pp.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {os.path.normpath(path)}", file=sys.stderr)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    bench_pp(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -38,14 +38,12 @@ from repro.core import (
     DCGD,
     Diana,
     Marina,
-    PPMarina,
     RandK,
     VRMarina,
     diana_alpha,
     diana_gamma,
     make_gd,
     marina_gamma,
-    pp_marina_gamma,
     vr_marina_gamma,
 )
 from repro.core.problems import (
@@ -167,21 +165,12 @@ def bench_vr(quick=False):
 
 
 def bench_pp(quick=False):
-    """PP-MARINA (Table 1 PP rows): total uplink vs participation r."""
-    n, m, d = 20, 64, 50
-    data = make_synthetic_binclass(jax.random.PRNGKey(3), n, m, d)
-    L = binclass_smoothness(data)
-    grad_fn = jax.grad(nonconvex_binclass_loss)
-    comp = RandK(k=3)
-    target = 3e-4
-    steps = 800 if quick else 8000
-    for r in ((4,) if quick else (20, 8, 4)):
-        p = comp.default_p(d) * r / n
-        m_ = PPMarina(grad_fn, comp, pp_marina_gamma(L, comp.omega(d), p, r), p, r)
-        _, bits, it, us = _run_to_target(
-            m_, m_.init(jnp.zeros((d,)), data), data, d, target, steps
-        )
-        emit(f"pp/r{r}", us, f"iters={it};total_Mbits={bits*n/1e6:.3f}")
+    """Federated PP harness (benchmarks/bench_pp.py): loss-vs-bits curves on
+    Dirichlet non-IID clients + the mesh round-time r/n saving. Writes
+    BENCH_pp.json, rendered into EXPERIMENTS.md by update_perf.py."""
+    from benchmarks.bench_pp import bench_pp as run_pp
+
+    run_pp(quick=quick, emit=emit)
 
 
 def bench_lm(quick=False):

@@ -1,0 +1,122 @@
+"""Docs CI: intra-repo markdown links must resolve, and the README
+quickstart must run as-is.
+
+* Link check — every ``[text](target)`` in README/DESIGN/EXPERIMENTS/
+  ROADMAP/PAPERS/CHANGES is resolved relative to the repo root (and the
+  containing file); http(s)/mailto links are skipped; ``#anchor`` fragments
+  are checked against the target file's headings (GitHub slug rules,
+  best-effort).
+* Quickstart check — the FIRST ```python fenced block in README.md is
+  extracted verbatim and executed with PYTHONPATH=src; a non-zero exit
+  fails the job. The snippet the README shows is the snippet that runs.
+
+Run: python scripts/check_docs.py
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+DOCS = ["README.md", "DESIGN.md", "EXPERIMENTS.md", "ROADMAP.md",
+        "PAPERS.md", "CHANGES.md"]
+
+_LINK = re.compile(r"(?<!!)\[[^\]]+\]\(([^)\s]+)\)")
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, strip punctuation, dashes."""
+    s = heading.strip().lower()
+    s = re.sub(r"[`*_]", "", s)
+    s = re.sub(r"[^\w\- ]", "", s, flags=re.UNICODE)
+    return s.replace(" ", "-")
+
+
+def _headings(path: str) -> set:
+    out = set()
+    with open(path) as f:
+        in_code = False
+        for line in f:
+            if line.startswith("```"):
+                in_code = not in_code
+            if not in_code and line.startswith("#"):
+                out.add(_slug(line.lstrip("#")))
+    return out
+
+
+def check_links() -> list:
+    errors = []
+    for doc in DOCS:
+        path = os.path.join(ROOT, doc)
+        if not os.path.exists(path):
+            errors.append(f"{doc}: file missing")
+            continue
+        text = open(path).read()
+        # strip fenced code blocks — links inside code are not navigation
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for target in _LINK.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            frag = None
+            if "#" in target:
+                target, frag = target.split("#", 1)
+            if target:
+                cand = os.path.normpath(os.path.join(ROOT, target))
+                if not os.path.exists(cand):
+                    cand = os.path.normpath(
+                        os.path.join(os.path.dirname(path), target)
+                    )
+                if not os.path.exists(cand):
+                    errors.append(f"{doc}: broken link -> {target}")
+                    continue
+            else:
+                cand = path
+            if frag and cand.endswith(".md"):
+                if _slug(frag) not in {_slug(h) for h in _headings(cand)}:
+                    errors.append(f"{doc}: broken anchor -> {target}#{frag}")
+    return errors
+
+
+def check_quickstart() -> list:
+    readme = open(os.path.join(ROOT, "README.md")).read()
+    m = re.search(r"```python\n(.*?)```", readme, re.S)
+    if not m:
+        return ["README.md: no ```python quickstart block found"]
+    with tempfile.NamedTemporaryFile(
+        "w", suffix="_quickstart.py", delete=False
+    ) as f:
+        f.write(m.group(1))
+        snippet = f.name
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    out = subprocess.run(
+        [sys.executable, snippet], capture_output=True, text=True, env=env,
+        timeout=600,
+    )
+    os.unlink(snippet)
+    if out.returncode != 0:
+        return [f"README quickstart failed:\n{out.stderr[-2000:]}"]
+    last = (out.stdout.strip().splitlines() or ["<no output>"])[-1]
+    print(f"quickstart ran: {last}")
+    return []
+
+
+def main():
+    errors = check_links()
+    errors += check_quickstart()
+    if errors:
+        print("DOCS CHECK FAILED:", file=sys.stderr)
+        for e in errors:
+            print(f"  - {e}", file=sys.stderr)
+        sys.exit(1)
+    print(f"docs check OK ({len(DOCS)} files, links + quickstart)")
+
+
+if __name__ == "__main__":
+    main()

@@ -760,6 +760,8 @@ def tree_omega(comp: Compressor, tree: PyTree) -> float:
 
 
 def tree_payload_bits(comp: Compressor, tree: PyTree) -> float:
+    """Per-worker wire bits of one compressed round under per-leaf lifting:
+    Σ_leaf payload_bits(d_leaf) — the ζ_Q the ledgers book (wire.py)."""
     return sum(comp.payload_bits(int(np.prod(l.shape))) for l in jax.tree.leaves(tree))
 
 
@@ -774,6 +776,7 @@ def tree_ab_constants(comp: Compressor, tree: PyTree, n: int) -> tuple:
 
 
 def tree_dim(tree: PyTree) -> int:
+    """Total dimension d = Σ leaf sizes (the paper's problem dimension)."""
     return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
 
 
@@ -782,6 +785,8 @@ def tree_dim(tree: PyTree) -> int:
 # ---------------------------------------------------------------------------
 
 def make_compressor(name: str, **kw) -> Compressor:
+    """Registry: compressor by name ("randk", "permk", "block_qsgd", …) —
+    the Def-1.1 quantizers the trainer/config layer selects from."""
     name = name.lower()
     if name in ("identity", "none"):
         return Identity()

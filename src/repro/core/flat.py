@@ -390,6 +390,14 @@ class FlatEngine:
     backend: str = "auto"
     sampler: str = "randk"  # "randk" | "permk" | "qsgd" | "natural" | "randk_qsgd"
     s: int = 7              # quantization levels for the qsgd-family samplers
+    #: optional NamedSharding pinned onto the derived per-worker seeds. On a
+    #: GSPMD mesh the partitioner may otherwise re-partition the
+    #: split→bits threefry chain of :meth:`worker_seeds` and produce
+    #: DIFFERENT seed values than the same key yields on one device
+    #: (observed on the CPU SPMD partitioner; an optimization barrier does
+    #: not prevent it), silently breaking core↔mesh trajectory equality.
+    #: Single-device engines leave it None — a no-op.
+    seed_constraint: Any = None
 
     SAMPLERS = ("randk", "permk", "qsgd", "natural", "randk_qsgd")
 
@@ -404,7 +412,18 @@ class FlatEngine:
 
     def worker_seeds(self, key: jax.Array, n: int) -> jax.Array:
         """(n,) uint32 seeds, mirroring the tree path's per-worker key split."""
-        return jax.vmap(key_to_seed)(jax.random.split(key, n))
+        seeds = jax.vmap(key_to_seed)(jax.random.split(key, n))
+        if self.seed_constraint is not None:
+            seeds = jax.lax.with_sharding_constraint(seeds, self.seed_constraint)
+        return seeds
+
+    def _shared_seed(self, key: jax.Array) -> jax.Array:
+        """ONE uint32 seed for the correlated (PermK) sampler, with the same
+        partitioner pin as :meth:`worker_seeds`."""
+        seed = key_to_seed(key)
+        if self.seed_constraint is not None:
+            seed = jax.lax.with_sharding_constraint(seed, self.seed_constraint)
+        return seed
 
     @property
     def scale(self) -> float:
@@ -482,7 +501,7 @@ class FlatEngine:
         exposed so the downlink can re-compress the aggregate before it ever
         leaves flat form — DESIGN.md §4.7)."""
         if self.sampler == "permk":
-            seed = key_to_seed(key)  # shared: all workers, same permutation
+            seed = self._shared_seed(key)  # shared: all workers, same perm
             vals, _ = block_permk_workers(bufs, seed, self.backend)
             dense = permk_concat_mean(
                 vals, seed, self.layout.block, self.backend
@@ -563,7 +582,7 @@ class FlatEngine:
 
         backend = self.backend
         if self.sampler == "permk":
-            seed = key_to_seed(key)
+            seed = self._shared_seed(key)
             vals, _ = block_permk_workers(diff_bufs, seed, backend)
             delta = permk_concat_mean(vals, seed, self.layout.block, backend)
             return epi.delta_epilogue(delta, g2d, x2d, gamma, backend=backend)

@@ -50,6 +50,12 @@ Beyond-paper round engineering (DESIGN.md §4.7)
   ``StepMetrics.down_bits`` books the per-worker received bits every round —
   the dense 32d broadcast that the seed ledger silently ignored is now
   counted even when no downlink compressor is configured.
+* ``PPMarina`` (Alg. 4) additionally carries the federated scenario dials
+  (DESIGN.md §4.8): without-replacement cohorts, arbitrary client weights,
+  and an opt-in *server-side carry table* (h per client, refreshed only for
+  sampled clients) that lets PP rounds run one backprop per sampled client
+  and end in the fused epilogue; its ledger books the fleet totals n·32d /
+  r·ζ_Q from :mod:`repro.core.wire`.
 """
 
 from __future__ import annotations
@@ -621,12 +627,69 @@ class VRMarina:
 # ---------------------------------------------------------------------------
 
 
+def pp_sample_cohort(
+    k_sel: jax.Array, n: int, r: int, replace: bool
+) -> jax.Array:
+    """Draw PP-MARINA's cohort I'_k (Alg. 4 line 5): r i.i.d. uniform client
+    ids (``replace=True``, the analyzed variant) or r distinct ids
+    (``replace=False``, the experiments' variant). THE single sampling
+    definition — ``PPMarina`` and the mesh prefetch
+    (``launch.distributed.pp_cohort_schedule``) both call it, so a schedule
+    can never drift from the algorithm."""
+    if replace:
+        return jax.random.randint(k_sel, (r,), 0, n)
+    return jax.random.permutation(k_sel, n)[:r]
+
+
+def _weighted_mean_axis0(trees: PyTree, weights: "jax.Array | None") -> PyTree:
+    """Σ_i w_i t_i over the leading client axis (plain mean when w is None)."""
+    if weights is None:
+        return tree_mean_axis0(trees)
+    return jax.tree.map(
+        lambda t: jnp.tensordot(weights.astype(t.dtype), t, axes=1), trees
+    )
+
+
+def _scale_rows(trees: PyTree, row_scale: jax.Array) -> PyTree:
+    """Scale each leading-axis row of every leaf by ``row_scale`` (r,)."""
+    return jax.tree.map(
+        lambda t: t * row_scale.reshape((-1,) + (1,) * (t.ndim - 1)).astype(
+            t.dtype
+        ),
+        trees,
+    )
+
+
 @dataclasses.dataclass
 class PPMarina:
-    """Algorithm 4: on compressed rounds only r i.i.d.-sampled clients upload;
-    the server averages the r quantized differences (line 11, 1/r scaling).
-    No carry mode: the sampled client set changes every round, so h_i cannot
-    be maintained from the rounds a client sat out. The compressed downlink
+    """Algorithm 4 plus the federated-scenario extensions (DESIGN.md §4.8):
+
+    * ``replace`` — Alg. 4 line 5 samples the cohort I'_k as r i.i.d. uniform
+      clients (``replace=True``, the analyzed variant); ``replace=False``
+      samples r *distinct* clients (the variant the paper's experiments run).
+      Both keep the 1/r server scaling: each client lands in the cohort with
+      the same marginal, so (1/r)·Σ_{i∈I'} Q(Δ_i) stays an unbiased estimate
+      of the mean difference — without replacement only lowers its variance.
+    * ``weights`` — arbitrary client weights w_i for unbalanced local
+      datasets (raw sample counts are fine — normalized to Σw_i = 1 at
+      construction): f(x) = Σ_i w_i f_i(x). Sync rounds average gradients
+      with w; compressed rounds pre-scale the sampled differences by n·w_i
+      before compression, so (1/r)·Σ Q(n·w_i·Δ_i) is unbiased for Σ w_i Δ_i
+      under uniform sampling and the wire/engine path is unchanged.
+    * ``carry`` — the *server-side carry table*: the server stores
+      h_i = ∇f_i(x) from the last round client i participated in (all n rows
+      refresh on sync rounds, only the sampled rows on compressed rounds), so
+      a compressed round runs ONE backprop per sampled client — against the
+      table instead of recomputing at x^k — and with an engine ends in the
+      fused epilogue kernel (the PR-4 path). Beyond-paper and opt-in: for
+      clients that sat rounds out the anchor is stale (a lazy-anchor
+      estimator à la DIANA shifts); with r = n, replace=False it coincides
+      with the recompute estimator step for step (tested). Carry states are
+      lookahead, exactly like :class:`Marina` ``carry=True``.
+
+    Bits: the ledger books the fleet totals from :mod:`repro.core.wire` —
+    n·32d on sync rounds, exactly r·ζ_Q on compressed rounds — divided by n
+    for the per-client ``bits_per_worker`` average. The compressed downlink
     applies unchanged (the broadcast reaches all n clients)."""
 
     grad_fn: GradFn
@@ -637,12 +700,47 @@ class PPMarina:
     engine: FlatEngine | None = None
     down_compressor: Compressor | None = None
     down_engine: FlatEngine | None = None
+    replace: bool = True
+    weights: "jax.Array | None" = None
+    carry: bool = False
+
+    def __post_init__(self):
+        _check_downlink_config(self)
+        if self.weights is not None:
+            # accept raw sample counts: normalize to Σw_i = 1 so the
+            # weighted objective is a convex combination of the f_i
+            w = jnp.asarray(self.weights, jnp.float32)
+            self.weights = w / jnp.sum(w)
+
+    def _cohort(self, k_sel: jax.Array, n: int) -> jax.Array:
+        """I'_k via the shared sampler (:func:`pp_sample_cohort`)."""
+        return pp_sample_cohort(k_sel, n, self.r, self.replace)
+
+    def _cohort_diff_scale(self, sel: jax.Array, n: int) -> "jax.Array | None":
+        """Pre-compression row scaling making the 1/r cohort mean unbiased
+        for the w-weighted full mean: n·w_i (None when weights are uniform —
+        n·(1/n) = 1 and the scaling is the identity)."""
+        if self.weights is None:
+            return None
+        return n * self.weights[sel]
 
     def init(self, params: PyTree, batches: PyTree) -> MarinaState:
-        g0 = tree_mean_axis0(_per_worker_grads(self.grad_fn, params, batches))
-        return MarinaState(params=params, g=g0, step=jnp.zeros((), jnp.int32))
+        grads = _per_worker_grads(self.grad_fn, params, batches)
+        g0 = _weighted_mean_axis0(grads, self.weights)
+        if not self.carry:
+            return MarinaState(params=params, g=g0, step=jnp.zeros((), jnp.int32))
+        # lookahead carry state: the server seeds the full carry table with
+        # every client's ∇f_i(x^0) (the one round where all n backprop).
+        x1 = tree_axpy(-self.gamma, g0, params)
+        if self.engine is not None:
+            return MarinaState(
+                params=x1, g=pack(self.engine.layout, g0),
+                step=jnp.zeros((), jnp.int32), h=grads,
+            )
+        return MarinaState(params=x1, g=g0, step=jnp.zeros((), jnp.int32), h=grads)
 
-    def step(self, state: MarinaState, key: jax.Array, batches: PyTree):
+    # -- seed-shaped rounds (two backprops per sampled client) --------------
+    def _step_recompute(self, state: MarinaState, key: jax.Array, batches: PyTree):
         n = jax.tree.leaves(batches)[0].shape[0]
         k_bern, k_sel, k_q = jax.random.split(key, 3)
         c_k = jax.random.bernoulli(k_bern, self.p)
@@ -652,19 +750,20 @@ class PPMarina:
 
         def sync_branch(_):
             grads = _per_worker_grads(self.grad_fn, x_new, batches)
-            if self.engine is not None:
+            if self.engine is not None and self.weights is None:
                 return _flat_sync_mean(self.engine, grads)
-            return tree_mean_axis0(grads)
+            return _weighted_mean_axis0(grads, self.weights)
 
         def compressed_branch(_):
-            # I'_k: r i.i.d. uniform samples over {1..n} (with replacement, as in
-            # Alg. 4 line 5).
-            sel = jax.random.randint(k_sel, (self.r,), 0, n)
+            sel = self._cohort(k_sel, n)
             take = lambda t: t[sel]
             sel_batches = jax.tree.map(take, batches)
             g_new = _per_worker_grads(self.grad_fn, x_new, sel_batches)
             g_prev = _per_worker_grads(self.grad_fn, x_old, sel_batches)
             diffs = tree_sub(g_new, g_prev)
+            ws = self._cohort_diff_scale(sel, n)
+            if ws is not None:
+                diffs = _scale_rows(diffs, ws)
             delta = _compressed_delta(
                 self.compressor, self.engine, k_q, diffs, state.params, self.r
             )
@@ -675,26 +774,135 @@ class PPMarina:
             return jax.tree.map(jnp.add, state.g, delta)
 
         g_next = jax.lax.cond(c_k, sync_branch, compressed_branch, None)
+        new_state = MarinaState(params=x_new, g=g_next, step=state.step + 1)
+        metrics = self._metrics(
+            c_k, tree_norm(g_next), state.params, n, oracle_factor=2.0
+        )
+        return new_state, metrics
 
-        d = tree_dim(state.params)
-        # Total (all-worker) uplink this round: n·32d dense vs r·bits(Q).
+    # -- carry rounds: ONE backprop per sampled client vs the server table --
+    def _step_carry(self, state: MarinaState, key: jax.Array, batches: PyTree):
+        n = jax.tree.leaves(batches)[0].shape[0]
+        k_bern, k_sel, k_q = jax.random.split(key, 3)
+        c_k = jax.random.bernoulli(k_bern, self.p)
+        k_down = jax.random.fold_in(key, _DOWN_FOLD)
+
+        if self.engine is not None:
+            lay = self.engine.layout
+            x2d = pack(lay, state.params)
+
+            def sync_branch(_):
+                grads = _per_worker_grads(self.grad_fn, state.params, batches)
+                if self.weights is None:
+                    g2d, x_new2d = self.engine.fused_sync(
+                        pack_stacked(lay, grads), x2d, self.gamma
+                    )
+                else:
+                    g_new = _weighted_mean_axis0(grads, self.weights)
+                    g2d = pack(lay, g_new)
+                    x_new2d = x2d - self.gamma * g2d
+                return g2d, x_new2d, grads
+
+            def compressed_branch(_):
+                sel = self._cohort(k_sel, n)
+                sel_batches = jax.tree.map(lambda t: t[sel], batches)
+                grads_sel = _per_worker_grads(
+                    self.grad_fn, state.params, sel_batches
+                )
+                h_sel = jax.tree.map(lambda t: t[sel], state.h)
+                diffs = tree_sub(grads_sel, h_sel)
+                ws = self._cohort_diff_scale(sel, n)
+                if ws is not None:
+                    diffs = _scale_rows(diffs, ws)
+                # the table keeps the RAW client gradients (weights apply at
+                # aggregation): refresh only the sampled rows.
+                h_new = jax.tree.map(
+                    lambda ht, gt: ht.at[sel].set(gt.astype(ht.dtype)),
+                    state.h, grads_sel,
+                )
+                g2d, x_new2d = self.engine.fused_round(
+                    k_q, pack_stacked(lay, diffs), self.r, state.g, x2d,
+                    self.gamma, down=self.down_engine, down_key=k_down,
+                )
+                return g2d, x_new2d, h_new
+
+            g2d, x_new2d, h_new = jax.lax.cond(
+                c_k, sync_branch, compressed_branch, None
+            )
+            new_state = MarinaState(
+                params=unpack(lay, x_new2d), g=g2d, step=state.step + 1,
+                h=h_new,
+            )
+            gnorm = tree_norm(g2d)
+        else:
+            def sync_branch(_):
+                grads = _per_worker_grads(self.grad_fn, state.params, batches)
+                return _weighted_mean_axis0(grads, self.weights), grads
+
+            def compressed_branch(_):
+                sel = self._cohort(k_sel, n)
+                sel_batches = jax.tree.map(lambda t: t[sel], batches)
+                grads_sel = _per_worker_grads(
+                    self.grad_fn, state.params, sel_batches
+                )
+                h_sel = jax.tree.map(lambda t: t[sel], state.h)
+                diffs = tree_sub(grads_sel, h_sel)
+                ws = self._cohort_diff_scale(sel, n)
+                if ws is not None:
+                    diffs = _scale_rows(diffs, ws)
+                h_new = jax.tree.map(
+                    lambda ht, gt: ht.at[sel].set(gt.astype(ht.dtype)),
+                    state.h, grads_sel,
+                )
+                delta = _compressed_delta(
+                    self.compressor, None, k_q, diffs, state.params, self.r
+                )
+                delta = _down_roundtrip(
+                    self.down_compressor, self.down_engine, k_down, delta,
+                    state.params,
+                )
+                return jax.tree.map(jnp.add, state.g, delta), h_new
+
+            (g_next, h_new) = jax.lax.cond(
+                c_k, sync_branch, compressed_branch, None
+            )
+            x_next = tree_axpy(-self.gamma, g_next, state.params)
+            new_state = MarinaState(
+                params=x_next, g=g_next, step=state.step + 1, h=h_new
+            )
+            gnorm = tree_norm(g_next)
+
+        metrics = self._metrics(c_k, gnorm, state.params, n, oracle_factor=1.0)
+        return new_state, metrics
+
+    def _metrics(self, c_k, gnorm, like, n, oracle_factor):
+        """Fleet-total uplink from the wire helpers, divided by n: sync
+        rounds cost n·32d, compressed rounds exactly r·ζ_Q (wire.py)."""
+        from . import wire
+
+        d = tree_dim(like)
         bits_total = jnp.where(
             c_k,
-            jnp.asarray(32.0 * d * n),
-            _round_bits(self.compressor, self.engine, state.params, self.r)
-            * self.r,
+            jnp.asarray(wire.pp_sync_total_bits(n, d)),
+            wire.pp_uplink_total_bits(
+                self.r, _round_bits(self.compressor, self.engine, like, self.r)
+            ),
         )
         down_q = _down_round_bits(
-            self.down_compressor, self.down_engine, state.params, d
+            self.down_compressor, self.down_engine, like, d
         )
-        metrics = StepMetrics(
-            grad_est_norm=tree_norm(g_next),
+        return StepMetrics(
+            grad_est_norm=gnorm,
             bits_per_worker=bits_total / n,
             sync_round=c_k.astype(jnp.int32),
-            oracle_calls=jnp.where(c_k, 1.0, 2.0 * self.r / n),
+            oracle_calls=jnp.where(c_k, 1.0, oracle_factor * self.r / n),
             down_bits=jnp.where(c_k, jnp.asarray(32.0 * d), down_q),
         )
-        return MarinaState(params=x_new, g=g_next, step=state.step + 1), metrics
+
+    def step(self, state: MarinaState, key: jax.Array, batches: PyTree):
+        if self.carry:
+            return self._step_carry(state, key, batches)
+        return self._step_recompute(state, key, batches)
 
 
 def make_gd(grad_fn: GradFn, gamma: float) -> Marina:

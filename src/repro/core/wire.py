@@ -101,6 +101,41 @@ def correlated_q_bits(d: int, s: int) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Partial-participation accounting (PP-MARINA, Alg. 4 — DESIGN.md §4.8)
+#
+# In the federated regime only the sampled cohort uploads: a compressed round
+# costs exactly r·ζ_Q bits fleet-wide (r payloads, each the compressor's
+# per-worker wire), a sync round costs n·32d (every client ships its dense
+# local gradient). The ledgers book the PER-ROUND totals from these helpers
+# and divide by n for the per-client average — so the loss-vs-bits x-axis
+# (Figs. 1–2 shape) reflects the r/n uplink saving exactly, never an
+# approximation smuggled in at the call site.
+# ---------------------------------------------------------------------------
+
+
+def pp_uplink_total_bits(r: int, zeta_bits):
+    """Fleet-total uplink of one PP compressed round: r sampled clients ×
+    one compressed payload each (Alg. 4 line 9 — the r·ζ_Q term of the
+    Thm 4.1 communication complexity). ``zeta_bits`` is the per-worker
+    payload from the per-format helpers above."""
+    return r * zeta_bits
+
+
+def pp_sync_total_bits(n: int, d: int) -> float:
+    """Fleet-total uplink of one PP sync round: all n clients ship the dense
+    f32 local gradient (Alg. 4 line 7)."""
+    return n * dense_f32_bits(d)
+
+
+def pp_expected_round_bits(p: float, n: int, r: int, d: int, zeta_bits):
+    """Expected fleet-total uplink per PP round: p·n·32d + (1−p)·r·ζ_Q —
+    the quantity Thm 4.1 trades against the iteration count."""
+    return p * pp_sync_total_bits(n, d) + (1.0 - p) * pp_uplink_total_bits(
+        r, zeta_bits
+    )
+
+
+# ---------------------------------------------------------------------------
 # Downlink accounting (DESIGN.md §4.7)
 #
 # The server→worker direction was historically invisible to the ledger: every

@@ -1,5 +1,10 @@
+"""repro.data — deterministic synthetic heterogeneous data pipelines."""
+
 from .pipeline import (
     HeterogeneousLMData,
+    client_weights_from_counts,
+    dirichlet_partition,
+    dirichlet_proportions,
     lm_batch_iterator,
     make_lm_data,
     make_prefix_embeddings,
@@ -8,6 +13,9 @@ from .pipeline import (
 
 __all__ = [
     "HeterogeneousLMData",
+    "client_weights_from_counts",
+    "dirichlet_partition",
+    "dirichlet_proportions",
     "lm_batch_iterator",
     "make_lm_data",
     "make_prefix_embeddings",

@@ -23,7 +23,15 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class HeterogeneousLMData:
-    """Spec for per-worker synthetic token distributions."""
+    """Spec for per-worker synthetic token distributions.
+
+    Two heterogeneity dials (DESIGN.md §6): the legacy ``heterogeneity``
+    scalar shifts each worker's preferred vocabulary region smoothly, and
+    ``alpha`` switches to the federated Dirichlet protocol — each worker's
+    mixture over ``n_regions`` vocabulary regions is drawn ~ Dir(α) from the
+    seed (α → ∞ iid, α = 0.1 near-single-region clients), matching how
+    federated benchmarks skew label distributions (Hsu et al. 2019).
+    """
 
     n_workers: int
     vocab_size: int
@@ -31,6 +39,8 @@ class HeterogeneousLMData:
     seed: int = 0
     heterogeneity: float = 1.0  # 0 → iid workers
     order: int = 8              # markov-ish context hash width
+    alpha: Optional[float] = None  # Dirichlet non-IID dial (None → legacy)
+    n_regions: int = 8             # vocab regions the Dirichlet mixes over
 
 
 def make_lm_data(
@@ -39,14 +49,74 @@ def make_lm_data(
     seq_len: int,
     seed: int = 0,
     heterogeneity: float = 1.0,
+    alpha: Optional[float] = None,
 ) -> HeterogeneousLMData:
+    """Build a :class:`HeterogeneousLMData` spec (see its docstring for the
+    heterogeneity vs Dirichlet-α dials)."""
     return HeterogeneousLMData(
         n_workers=n_workers,
         vocab_size=vocab_size,
         seq_len=seq_len,
         seed=seed,
         heterogeneity=heterogeneity,
+        alpha=alpha,
     )
+
+
+# ---------------------------------------------------------------------------
+# Dirichlet(α) non-IID partitioning (the standard federated protocol)
+# ---------------------------------------------------------------------------
+
+
+def dirichlet_proportions(
+    key: jax.Array, n_clients: int, n_classes: int, alpha: float
+) -> jax.Array:
+    """(n_clients, n_classes) class mixtures, one Dir(α) row per client.
+
+    α → ∞ (or any non-finite value) degrades to the uniform mixture — iid
+    clients; small α concentrates each client on few classes.
+    """
+    if alpha is None or not np.isfinite(alpha):
+        return jnp.full((n_clients, n_classes), 1.0 / n_classes)
+    return jax.random.dirichlet(
+        key, jnp.full((n_classes,), float(alpha)), (n_clients,)
+    )
+
+
+def dirichlet_partition(
+    key: jax.Array, labels: np.ndarray, n_clients: int, alpha: float
+) -> list:
+    """Partition sample indices across clients by Dirichlet label skew.
+
+    Host-side (numpy): for each class, the class's sample indices are split
+    across clients proportionally to the clients' Dir(α) mixture column.
+    Returns a list of ``n_clients`` disjoint int arrays covering all
+    indices — the standard federated non-IID split (Hsu et al. 2019).
+    """
+    labels = np.asarray(labels)
+    classes = np.unique(labels)
+    props = np.asarray(
+        dirichlet_proportions(key, n_clients, len(classes), alpha)
+    )
+    rng = np.random.default_rng(int(np.asarray(jax.random.bits(key))))
+    shards = [[] for _ in range(n_clients)]
+    for c_idx, c in enumerate(classes):
+        idx = np.flatnonzero(labels == c)
+        rng.shuffle(idx)
+        # split this class across clients ∝ their mixture weight on it
+        w = props[:, c_idx]
+        w = w / max(w.sum(), 1e-12)
+        cuts = (np.cumsum(w)[:-1] * len(idx)).astype(int)
+        for client, part in enumerate(np.split(idx, cuts)):
+            shards[client].append(part)
+    return [np.concatenate(s) if s else np.empty((0,), int) for s in shards]
+
+
+def client_weights_from_counts(counts) -> jax.Array:
+    """Normalized client weights w_i = m_i / Σm_j from per-client sample
+    counts — the weights PPMarina uses for unbalanced local datasets."""
+    c = jnp.asarray(counts, jnp.float32)
+    return c / jnp.sum(c)
 
 
 def _worker_tokens(
@@ -66,15 +136,32 @@ def _worker_tokens(
     center = V / 2.0 + het * offset
     width = V * (1.0 - 0.7 * het) + 1.0
 
+    if data.alpha is not None:
+        # federated Dirichlet skew: this worker's mixture over n_regions
+        # vocab regions is a pure function of (seed, worker) — every step
+        # draws tokens from the same per-client distribution.
+        C = data.n_regions
+        k_pi = jax.random.fold_in(jax.random.PRNGKey(data.seed + 101), worker)
+        pi = dirichlet_proportions(k_pi, 1, C, data.alpha)[0]
+        region_w = V // C
+
     start = jax.random.randint(k_start, (batch,), 0, V)
 
     def step(tok, k):
         k1, k2 = jax.random.split(k)
         # deterministic component: affine hash of current token
         nxt = (tok * 31 + 7) % V
-        # worker-biased stochastic component
-        noise = jax.random.normal(k1, tok.shape) * width * 0.1
-        biased = jnp.clip(center + noise, 0, V - 1).astype(jnp.int32)
+        if data.alpha is not None:
+            # stochastic component: region ~ Dir(α) mixture, uniform within
+            kr, ku = jax.random.split(k1)
+            region = jax.random.choice(kr, C, tok.shape, p=pi)
+            within = jax.random.randint(ku, tok.shape, 0, region_w)
+            biased = jnp.clip(region * region_w + within, 0, V - 1)
+            biased = biased.astype(jnp.int32)
+        else:
+            # worker-biased stochastic component
+            noise = jax.random.normal(k1, tok.shape) * width * 0.1
+            biased = jnp.clip(center + noise, 0, V - 1).astype(jnp.int32)
         use_hash = jax.random.bernoulli(k2, 0.7, tok.shape)
         return jnp.where(use_hash, nxt, biased), None
 
@@ -103,6 +190,8 @@ def worker_batches(
 def lm_batch_iterator(
     data: HeterogeneousLMData, batch_per_worker: int, start_step: int = 0
 ) -> Iterator[jax.Array]:
+    """Endless (n_workers, batch, seq_len) token stream, one jitted batch
+    per optimizer step — a host-side convenience over worker_batches."""
     step = start_step
     fn = jax.jit(lambda s: worker_batches(data, s, batch_per_worker))
     while True:

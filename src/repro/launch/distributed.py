@@ -47,6 +47,12 @@ Round-pipeline overrides (DESIGN.md §4.7):
   norms, int8 — or 4-bit nibbles with ``packed_payload`` — and every worker
   decompress-accumulates; "randk" broadcasts a seeded K-subsample). The
   recursion runs on the broadcast estimator, so worker replicas stay exact.
+* ``participation=(r, scheme)`` — federated PP-MARINA (Alg. 4, DESIGN.md
+  §4.8): compressed rounds take a cohort row from ``pp_cohort_schedule``,
+  respread the r sampled clients' batch rows over all n worker shards (each
+  shard backprops r/n of its full-round tokens) and put exactly r payload
+  rows on the wire; with ``grad_carry`` the carried h becomes the
+  server-side per-client table, refreshed only for sampled clients.
 
 The inner gather/scatter run through the backend-switched block primitives in
 repro.core.flat (``block_gather`` / ``block_scatter_mean``): the pure-jnp ref
@@ -70,7 +76,7 @@ from repro.core import flat as flat_engine
 from repro.kernels import ref as kref
 from repro.models import init_cache, init_params, lm_loss, decode_step as model_decode, prefill as model_prefill
 from repro.launch import sharding as shd
-from repro.launch.mesh import num_workers, worker_axis_names
+from repro.launch.mesh import cohort_group_size, num_workers, worker_axis_names
 
 PyTree = Any
 
@@ -87,6 +93,8 @@ class StepBundle:
     param_shapes: PyTree
     param_shardings: PyTree
     fns: dict  # name -> (jitted fn, example abstract args)
+    meta: dict = dataclasses.field(default_factory=dict)  # builder decisions
+    # (participation mode, cohort-compute vs masked fallback, flat-PP path)
 
 
 # ---------------------------------------------------------------------------
@@ -357,6 +365,32 @@ def _downlink_roundtrip(
     return jax.tree.unflatten(treedef, outs)
 
 
+def pp_cohort_schedule(
+    base_key: jax.Array, n_steps: int, n: int, r: int,
+    scheme: str = "without",
+) -> jax.Array:
+    """Precompute the (n_steps, r) PP cohort table — the prefetch side of the
+    participation wire (DESIGN.md §4.8).
+
+    Row k is EXACTLY the cohort the core ``PPMarina`` step draws from the
+    step key ``fold_in(base_key, k)`` (the same 3-way ``(bern, sel, q)``
+    split), so a precomputed schedule keeps distributed rounds
+    trajectory-equal to the single-process reference while hoisting the
+    sampling off the round's critical path: the k+1 batch-row gather can be
+    issued while round k's epilogue is still in flight.
+    """
+    from repro.core.marina import pp_sample_cohort
+
+    assert scheme in ("with", "without"), scheme
+
+    def one(step):
+        k = jax.random.fold_in(base_key, step)
+        _, k_sel, _ = jax.random.split(k, 3)
+        return pp_sample_cohort(k_sel, n, r, replace=(scheme == "with"))
+
+    return jax.vmap(one)(jnp.arange(n_steps, dtype=jnp.int32))
+
+
 # ---------------------------------------------------------------------------
 # step builders
 # ---------------------------------------------------------------------------
@@ -384,6 +418,7 @@ def build_train_steps(
     flat_sync: "bool | None" = None,
     downlink: str = "none",
     downlink_s: int = 7,
+    participation: "tuple[int, str] | None" = None,
 ):
     """Returns (fns, abstract_args) for sync_step / compressed_step / train_step.
 
@@ -415,6 +450,23 @@ def build_train_steps(
     * downlink         — "none" (dense estimator broadcast) or "qsgd"/"randk":
       broadcast Q_down(g^{k+1} − g^k) and decompress-accumulate worker-side
       (downlink_s levels; packed_payload packs the downlink nibbles too)
+    * participation    — (r, "with"|"without"): PP-MARINA on the mesh
+      (DESIGN.md §4.8). Compressed rounds sample a cohort of r clients from
+      the schedule (``pp_cohort_schedule``; steps gain a trailing (r,) int32
+      ``sel`` argument) and map it onto the worker axis: the r clients'
+      batch rows are respread over ALL n shards (each backprops r/n of its
+      full-round tokens — the genuine r/n compute saving) and the wire
+      carries exactly r payload rows through the configured compression
+      (permk re-keys its partition to the cohort, tiling d/r). When r does
+      not divide n·per_worker evenly the builder falls back to masked dense
+      compute (all n backprop, only r rows compressed — wire saving kept,
+      compute saving lost; recorded in ``bundle.meta``). With ``grad_carry``
+      the step's h becomes the server-side carry table: only sampled rows
+      refresh. Composes with randk/permk/qsgd but not shared_mask. On
+      packing-legal meshes PP rounds are trajectory-equal to core
+      ``PPMarina`` for ``downlink="none"``; with a downlink the key
+      discipline follows the mesh convention (split from k_q), not core's
+      step-key fold — see DESIGN.md §4.8.
     """
     cfg = dataclasses.replace(arch.model, remat=remat)
     waxes = worker_axis_names(multi_pod, arch.worker_axes)
@@ -562,6 +614,144 @@ def build_train_steps(
                 None,
             )
 
+    if participation is not None:
+        # -- PP-MARINA on the mesh (DESIGN.md §4.8) -------------------------
+        # sync rounds are unchanged (all n clients ship dense gradients —
+        # the sync_step above); compressed rounds take the cohort row `sel`
+        # from pp_cohort_schedule and override compressed/train below.
+        r_part, scheme = participation
+        assert scheme in ("with", "without"), scheme
+        assert 1 <= r_part <= n, f"cohort r={r_part} vs n={n} workers"
+        assert not shared_mask, (
+            "participation composes with randk/permk/qsgd, not shared_mask "
+            "(a shared mask already correlates the whole fleet)"
+        )
+        # cohort-mapped compute needs the r clients' rows to respread evenly
+        # over the n worker shards in whole tokens-per-shard units
+        grp = cohort_group_size(n, r_part)
+        cohort_compute = grp is not None and (per_worker * r_part) % n == 0
+        # flat-PP: where packing cannot force a reshard (same predicate as
+        # flat_sync auto), the r-row payload pipeline IS the core engine —
+        # pack → sampler → aggregate with the identical key/seed derivation,
+        # which is what makes mesh rounds trajectory-equal to core PPMarina.
+        flat_pp = replicate_params or not inner
+        pp_eng = None
+        if flat_pp and compression in ("randk", "permk", "qsgd"):
+            if compression == "permk" and BLOCK % r_part != 0:
+                flat_pp = False
+            else:
+                # seed_constraint pins the threefry seed derivation
+                # replicated: the SPMD partitioner otherwise re-partitions
+                # the split→bits chain and yields different seed VALUES
+                # than one device — the silent killer of core↔mesh
+                # trajectory equality (core/flat.py).
+                pp_eng = flat_engine.make_engine(
+                    param_shapes, kb=KB, block=BLOCK,
+                    backend=compression_backend, sampler=compression,
+                    s=qsgd_s,
+                )
+                pp_eng = dataclasses.replace(
+                    pp_eng, seed_constraint=shd.replicated(mesh)
+                )
+        else:
+            flat_pp = False
+
+        def cohort_grads(x, batch, sel):
+            """Per-client gradients of the r sampled clients.
+
+            Cohort-mapped: gather the r clients' batch rows, respread them
+            over all n shards (each shard backprops per_worker·r/n tokens —
+            compute is r/n of a full round), then group-mean the n shard
+            grads back to r client grads (equal sub-batch sizes make the
+            mean of means exact). Masked fallback: every shard backprops its
+            own full batch and only the r sampled rows are kept."""
+            if cohort_compute:
+                sub = (per_worker * r_part) // n
+                sel_b = jax.tree.map(
+                    lambda t: t[sel].reshape(n, sub, *t.shape[2:]), batch
+                )
+                sel_b = jax.tree.map(
+                    jax.lax.with_sharding_constraint, sel_b, batch_shard
+                )
+                wg = worker_grads(x, sel_b)
+                return jax.tree.map(
+                    lambda t: jnp.mean(
+                        t.reshape(r_part, grp, *t.shape[1:]), axis=1
+                    ),
+                    wg,
+                )
+            wg = worker_grads(x, batch)
+            return jax.tree.map(lambda t: t[sel], wg)
+
+        def pp_delta(key, diffs):
+            """(1/r)·Σ Q(Δ_i) over the r cohort payload rows + downlink."""
+            k_up, k_down = jax.random.split(key)
+            k_up = k_up if downlink != "none" else key
+            if flat_pp:
+                bufs = flat_engine.pack_stacked(pp_eng.layout, diffs)
+                delta = flat_engine.unpack(
+                    pp_eng.layout, pp_eng.aggregate(k_up, bufs, r_part)
+                )
+                delta = jax.tree.map(
+                    jax.lax.with_sharding_constraint, delta, p_shard
+                )
+            else:
+                # sharded fallback: the per-leaf staged wire on the r-row
+                # payload stack (cohort rows replicate — r·ζ, not n·ζ)
+                delta = _compress_decompress_mean(
+                    k_up, diffs, r_part, mesh, (), False,
+                    packed_payload, False,
+                    out_shardings=p_shard, backend=compression_backend,
+                    compression=compression, qsgd_s=qsgd_s,
+                )
+            return _downlink_roundtrip(
+                k_down, delta, downlink, downlink_s, packed_payload
+            )
+
+        if grad_carry:
+            # h is the SERVER-SIDE CARRY TABLE: all n rows live on the mesh,
+            # compressed rounds refresh only the sampled ones.
+            def compressed_step(params, g, h, batch, key, sel):
+                x_new = descend(params, g)
+                cg = cohort_grads(x_new, batch, sel)
+                h_sel = jax.tree.map(lambda t: t[sel], h)
+                diffs = jax.tree.map(jnp.subtract, cg, h_sel)
+                g_new = jax.tree.map(jnp.add, g, pp_delta(key, diffs))
+                h_new = jax.tree.map(
+                    lambda ht, ct: ht.at[sel].set(ct.astype(ht.dtype)), h, cg
+                )
+                return x_new, g_new, h_new
+
+            def train_step(params, g, h, batch, key, sel):
+                k_b, _, k_q = jax.random.split(key, 3)
+                c_k = jax.random.bernoulli(k_b, p)
+                return jax.lax.cond(
+                    c_k,
+                    lambda _: sync_step(params, g, h, batch),
+                    lambda _: compressed_step(params, g, h, batch, k_q, sel),
+                    None,
+                )
+        else:
+            def compressed_step(params, g, batch, key, sel):
+                x_new = descend(params, g)
+                g_plus = cohort_grads(x_new, batch, sel)
+                g_minus = cohort_grads(params, batch, sel)
+                diffs = jax.tree.map(jnp.subtract, g_plus, g_minus)
+                g_new = jax.tree.map(jnp.add, g, pp_delta(key, diffs))
+                return x_new, g_new
+
+            def train_step(params, g, batch, key, sel):
+                # the core PPMarina key discipline: (bern, sel, q) 3-way
+                # split; the sel slot is consumed by pp_cohort_schedule.
+                k_b, _, k_q = jax.random.split(key, 3)
+                c_k = jax.random.bernoulli(k_b, p)
+                return jax.lax.cond(
+                    c_k,
+                    lambda _: sync_step(params, g, batch),
+                    lambda _: compressed_step(params, g, batch, k_q, sel),
+                    None,
+                )
+
     g_shard = p_shard  # estimator g^k lives like the params
     key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
     repl = shd.replicated(mesh)
@@ -582,23 +772,32 @@ def build_train_steps(
     state_out = (p_shard, g_shard, *h_in)
     donate = tuple(range(2 + len(h_in)))
 
-    def entry(fn, needs_key):
+    pp = participation is not None
+    sel_spec = (
+        jax.ShapeDtypeStruct((participation[0],), jnp.int32) if pp else None
+    )
+
+    def entry(fn, needs_key, needs_sel=False):
         key_in = (repl,) if needs_key else ()
         key_arg = (key_spec,) if needs_key else ()
+        sel_in = (repl,) if needs_sel else ()
+        sel_arg = (sel_spec,) if needs_sel else ()
         return (
             jax.jit(
                 fn,
-                in_shardings=(p_shard, g_shard, *h_in, batch_shard, *key_in),
+                in_shardings=(
+                    p_shard, g_shard, *h_in, batch_shard, *key_in, *sel_in
+                ),
                 out_shardings=state_out,
                 donate_argnums=donate,
             ),
-            (param_shapes, param_shapes, *h_args, batch, *key_arg),
+            (param_shapes, param_shapes, *h_args, batch, *key_arg, *sel_arg),
         )
 
     fns = {
         "sync_step": entry(sync_step, needs_key=False),
-        "compressed_step": entry(compressed_step, needs_key=True),
-        "train_step": entry(train_step, needs_key=True),
+        "compressed_step": entry(compressed_step, needs_key=True, needs_sel=pp),
+        "train_step": entry(train_step, needs_key=True, needs_sel=pp),
     }
     return StepBundle(
         mesh=mesh,
@@ -606,6 +805,15 @@ def build_train_steps(
         param_shapes=param_shapes,
         param_shardings=p_shard,
         fns=fns,
+        meta=(
+            {
+                "participation": participation,
+                "cohort_compute": cohort_compute,
+                "flat_pp": flat_pp,
+            }
+            if pp
+            else {}
+        ),
     )
 
 
@@ -620,6 +828,9 @@ def build_serve_steps(
     dtype=jnp.bfloat16,
     last_logits: bool = False,
 ):
+    """Jitted serving steps for MARINA-trained checkpoints: "prefill" (full
+    attention over the prompt, cache build) or "decode" (one token, donated
+    cache) under the arch's GSPMD shardings — see launch/serve.py."""
     cfg = arch.model
     param_shapes = jax.eval_shape(
         lambda k: init_params(k, cfg, dtype), jax.random.PRNGKey(0)

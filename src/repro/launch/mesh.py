@@ -31,7 +31,26 @@ def worker_axis_names(multi_pod: bool, worker_axes: str) -> tuple[str, ...]:
 
 
 def num_workers(mesh, multi_pod: bool, worker_axes: str) -> int:
+    """Worker-fleet size n: product of the worker mesh axes' extents."""
     n = 1
     for ax in worker_axis_names(multi_pod, worker_axes):
         n *= mesh.shape[ax]
     return n
+
+
+def make_federated_mesh(clients: int, model: int = 1):
+    """Mesh for the federated PP scenario: the worker ("data") axis is the
+    client fleet, the model axis carries within-client parallelism (1 for
+    cross-device clients). Requires ≥ clients·model host devices — pair
+    with XLA_FLAGS=--xla_force_host_platform_device_count for CPU tests."""
+    return jax.make_mesh((clients, model), ("data", "model"))
+
+
+def cohort_group_size(n: int, r: int) -> "int | None":
+    """Mesh slots per sampled client when a PP cohort of r is respread over
+    all n worker shards (DESIGN.md §4.8): n/r when r divides n, else None.
+    None means cohort-mapped compute is impossible and the builder falls
+    back to masked dense compute; a non-None group is necessary but not
+    sufficient — build_train_steps additionally requires the per-worker
+    batch to split evenly ((per_worker·r) % n == 0)."""
+    return n // r if (r > 0 and n % r == 0) else None

@@ -68,7 +68,20 @@ class TrainConfig:
     n_workers: int = 4
     batch_per_worker: int = 8          # b  (sync rounds / full batches)
     mb_per_worker: int = 2             # b' (compressed rounds)
-    r_participating: int = 2           # PP-MARINA
+    r_participating: int = 2           # PP-MARINA cohort size r
+    # PP-MARINA federated dials (DESIGN.md §4.8): cohort scheme (Alg. 4
+    # samples with replacement; False = the experiments' distinct-client
+    # variant) and optional client weights for unbalanced local datasets
+    # (array-like of length n_workers; raw sample counts are fine —
+    # PPMarina normalizes to Σw_i = 1 at construction).
+    pp_replace: bool = True
+    pp_weights: Optional[Any] = None
+    # Dirichlet non-IID dial for the LM data (None → legacy heterogeneity
+    # scalar): alpha=0.1 gives near-single-region clients, np.inf iid —
+    # so any config can run the federated scenario, e.g.
+    # TrainConfig(method="pp_marina", n_workers=64, r_participating=8,
+    # alpha=0.1).
+    alpha: Optional[float] = None
     steps: int = 100
     seed: int = 0
     log_every: int = 10
@@ -115,6 +128,7 @@ class Trainer:
             vocab_size=model_cfg.vocab_size,
             seq_len=128 if model_cfg.num_layers <= 4 else 256,
             seed=train_cfg.seed,
+            alpha=train_cfg.alpha,
         )
         self._prefix_key = jax.random.PRNGKey(train_cfg.seed + 7)
 
@@ -183,8 +197,10 @@ class Trainer:
                 self.down_comp = make_compressor(train_cfg.downlink, **dkw)
 
         m = train_cfg.method
-        if train_cfg.carry_grads and m not in ("marina", "vr_marina"):
-            raise ValueError(f"carry_grads is a marina/vr_marina mode, not {m!r}")
+        if train_cfg.carry_grads and m not in (
+            "marina", "vr_marina", "pp_marina"
+        ):
+            raise ValueError(f"carry_grads is a marina-family mode, not {m!r}")
         if train_cfg.downlink is not None and m not in (
             "marina", "vr_marina", "pp_marina"
         ):
@@ -214,6 +230,12 @@ class Trainer:
                 grad_fn, comp, train_cfg.gamma, p, train_cfg.r_participating,
                 self.engine,
                 down_compressor=self.down_comp, down_engine=self.down_engine,
+                replace=train_cfg.pp_replace,
+                weights=(
+                    None if train_cfg.pp_weights is None
+                    else jnp.asarray(train_cfg.pp_weights, jnp.float32)
+                ),
+                carry=train_cfg.carry_grads,
             )
         elif m == "diana":
             alpha = train_cfg.diana_alpha

@@ -181,7 +181,39 @@ _SUBPROCESS_PROG = textwrap.dedent(
     assert nz5 > 0, "carry+downlink round produced an empty delta"
     for t in jax.tree.leaves(h5):
         assert t.shape[0] == 4 and bool(jnp.all(jnp.isfinite(t)))
-    print("SUBPROCESS_OK", err, frac, frac3, frac4, nz5 / tot)
+
+    # PP-MARINA round on the model-sharded mesh (DESIGN.md 4.8): tensor
+    # parallelism disqualifies the flat-PP pipeline, so this exercises the
+    # per-leaf cohort fallback. With grad_carry the h slot is the
+    # server-side carry table: exactly the sampled rows refresh.
+    bundle_pp = build_train_steps(
+        arch, mesh, multi_pod=False, global_batch=8, seq_len=64,
+        gamma=0.1, dtype=jnp.float32, grad_carry=True,
+        participation=(2, "without"),
+    )
+    assert bundle_pp.meta["participation"] == (2, "without")
+    assert not bundle_pp.meta["flat_pp"]          # model axis is sharded
+    assert bundle_pp.meta["cohort_compute"]       # 2·2 batch rows over 4 shards
+    params6 = init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    g_init6 = jax.tree.map(lambda t: jnp.full_like(t, 0.01), params6)
+    g_keep6 = jax.tree.map(jnp.array, g_init6)
+    h06 = jax.tree.map(lambda t: jnp.zeros((4, *t.shape), t.dtype), params6)
+    sel = jnp.array([1, 3], jnp.int32)
+    with bundle_pp.mesh:
+        fn, _ = bundle_pp.fns["compressed_step"]
+        x6, g6, h6 = fn(params6, g_init6, h06, batch, jax.random.PRNGKey(2), sel)
+    delta6 = [a - b for a, b in zip(jax.tree.leaves(g6), jax.tree.leaves(g_keep6))]
+    assert all(bool(jnp.all(jnp.isfinite(t))) for t in delta6)
+    nz6 = sum(int(jnp.sum(jnp.abs(t) > 1e-12)) for t in delta6)
+    assert nz6 > 0, "PP round produced an empty delta"
+    # the carry table refreshed EXACTLY the sampled rows
+    for t in jax.tree.leaves(h6):
+        row_nz = jnp.array([bool(jnp.any(jnp.abs(t[i]) > 0)) for i in range(4)])
+        assert bool(row_nz[1]) and bool(row_nz[3]), "sampled rows not refreshed"
+        assert not bool(row_nz[0]) and not bool(row_nz[2]), (
+            "unsampled carry rows must stay stale"
+        )
+    print("SUBPROCESS_OK", err, frac, frac3, frac4, nz5 / tot, nz6 / tot)
     """
 )
 
