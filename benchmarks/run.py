@@ -15,6 +15,9 @@
                sync vs compressed, two-backprop vs grad-carry + fused
                epilogue, dense vs compressed downlink; writes
                BENCH_roundstep.json — the CI regression gate)
+    §4.9     → bench_robust            (Byzantine adversarial grid: attack ×
+               GAR × faulty fraction on PP-MARINA + robust round-time rows;
+               merges into BENCH_pp.json — gated by scripts/check_robust.py)
 
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call = step wall time;
 derived = the figure-of-merit for that table).
@@ -171,6 +174,15 @@ def bench_pp(quick=False):
     from benchmarks.bench_pp import bench_pp as run_pp
 
     run_pp(quick=quick, emit=emit)
+
+
+def bench_robust(quick=False):
+    """Byzantine-robust harness (benchmarks/bench_pp.py --only robust): the
+    attack × GAR × fraction grid + robust round-time rows. Merges the
+    ``robust`` section into BENCH_pp.json; scripts/check_robust.py gates."""
+    from benchmarks.bench_pp import bench_robust as run_robust
+
+    run_robust(quick=quick, emit=emit)
 
 
 def bench_lm(quick=False):
@@ -615,6 +627,7 @@ def main():
         "binclass": bench_binclass,
         "vr": bench_vr,
         "pp": bench_pp,
+        "robust": bench_robust,
         "lm": bench_lm,
         "kernels": bench_kernels,
         "compression": bench_compression,

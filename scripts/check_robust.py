@@ -1,0 +1,113 @@
+"""CI gate for the Byzantine-robust aggregation path (DESIGN.md §4.9).
+
+Reads the ``robust`` section of BENCH_pp.json (written by
+`python -m benchmarks.run --only robust --quick` on the CI runner) and
+fails the job when either claim of the robustness PR stops holding:
+
+1. **Round-time** — the robust fused round must stay within the threshold
+   of the fused mean round: ``round_{trimmed,median}_over_mean <= 1.25``.
+   The ratio is within-run (both sides measured interleaved in one
+   process), so machine speed divides out, exactly like the roundstep
+   gate. The *isolated* sync-epilogue ratio is recorded in the JSON but
+   deliberately NOT gated: on the CPU ref backend the mean epilogue is one
+   memory-bound pass while the trimmed rule is a compute-bound O(n²/2)
+   compare-exchange network, so their ratio measures the container's
+   FLOP/byte balance, not a regression (the ~1.2× epilogue claim is the
+   TPU Pallas kernel's, where the extra compares ride in-register on the
+   same HBM traffic).
+
+2. **Semantics** — at the largest attacked fraction in the grid, every
+   coordinate-wise GAR must beat the plain mean on final honest loss under
+   both payload attacks (sign_flip, mean_shift), and every cell must be
+   finite. If a refactor breaks the trim window, the fault masking, or the
+   carry substitution, this is the check that notices before EXPERIMENTS.md
+   advertises stale numbers.
+
+Usage: python scripts/check_robust.py [BENCH_pp.json ...]
+(multiple files: per-metric MINIMUM for the timing gate — load noise only
+ever slows a run — and every file checked for semantics.)
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+ROUND_THRESHOLD = 1.25
+ROBUST_GARS = ("trimmed_mean", "coordinate_median")
+PAYLOAD_ATTACKS = ("sign_flip", "mean_shift")
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_roundtime(robusts):
+    failures = []
+    for metric in ("round_trimmed_over_mean", "round_median_over_mean"):
+        ratio = min(r["roundtime"][metric] for r in robusts)
+        status = "OK" if ratio <= ROUND_THRESHOLD else "REGRESSED"
+        print(f"roundtime {metric}: {ratio:.2f}x (limit "
+              f"{ROUND_THRESHOLD}) {status}")
+        if ratio > ROUND_THRESHOLD:
+            failures.append(metric)
+    return failures
+
+
+def check_grid(robust):
+    failures = []
+    cells = robust["cells"]
+    for c in cells:
+        if not math.isfinite(c["final_loss"]):
+            failures.append(f"non-finite loss in cell {c['attack']}/"
+                            f"{c['gar']}@{c['frac']}")
+    by = {(c["attack"], c["frac"], c["gar"]): c for c in cells}
+    top = max(c["frac"] for c in cells if c["attack"] in PAYLOAD_ATTACKS)
+    for attack in PAYLOAD_ATTACKS:
+        mean_cell = by.get((attack, top, "mean"))
+        if mean_cell is None:
+            failures.append(f"missing mean cell for {attack}@{top}")
+            continue
+        for gar in ROBUST_GARS:
+            cell = by.get((attack, top, gar))
+            if cell is None:
+                failures.append(f"missing {gar} cell for {attack}@{top}")
+                continue
+            ok = cell["final_loss"] < mean_cell["final_loss"]
+            print(f"grid {attack}@{top} {gar}: loss {cell['final_loss']:.4f} "
+                  f"vs mean {mean_cell['final_loss']:.4f} "
+                  f"{'OK' if ok else 'NOT ROBUST'}")
+            if not ok:
+                failures.append(f"{gar} no better than mean under "
+                                f"{attack}@{top}")
+    return failures
+
+
+def main():
+    paths = sys.argv[1:] or [os.path.join(ROOT, "BENCH_pp.json")]
+    robusts = []
+    for p in paths:
+        r = load(p).get("robust")
+        if r is None:
+            print(f"ERROR: {p} has no 'robust' section — run "
+                  "`python -m benchmarks.run --only robust`", file=sys.stderr)
+            return 2
+        robusts.append(r)
+
+    failures = check_roundtime(robusts)
+    for r in robusts:
+        failures += check_grid(r)
+
+    if failures:
+        print("FAIL: " + "; ".join(failures), file=sys.stderr)
+        return 1
+    print("robust gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -360,6 +360,89 @@ def render_pp_bench():
     return "\n".join(lines)
 
 
+def render_robust_bench():
+    """BENCH_pp.json ``robust`` section → markdown: the attack × GAR ×
+    fraction loss grid + the robust round-time row (DESIGN.md §4.9)."""
+    path = os.path.join(ROOT, "BENCH_pp.json")
+    if not os.path.exists(path):
+        return ("(no robust benchmark recorded — run "
+                "`python -m benchmarks.run --only robust`)")
+    r = load(path).get("robust")
+    if r is None:
+        return ("(no robust benchmark recorded — run "
+                "`python -m benchmarks.run --only robust`)")
+    quick = " — ⚠ QUICK MODE (noisy, re-run without --quick)" if r.get("quick") else ""
+    cells = r["cells"]
+    gars = []
+    for c in cells:
+        if c["gar"] not in gars:
+            gars.append(c["gar"])
+    lines = [
+        f"PP-MARINA under client attacks: n = {r['n']} clients, cohorts "
+        f"r = {r['r']}, dense 4-bit QSGD wire ({r['compressor']}), "
+        f"γ = {r['gamma']}, p = {r['p']}, heterogeneity = "
+        f"{r['heterogeneity']}, attack scale = {r['scale']}, "
+        f"{r['steps']} rounds{quick}. Cells are the final loss on the HONEST "
+        "objective, with the ratio to the attack-free mean baseline "
+        f"(free loss = {r['free_loss']:.4f}) — every payload cell books "
+        "identical fleet uplink bits (matched budgets by construction; the "
+        "`drop` row books fewer — the carry-substitution ledger counts only "
+        "actual uploads). MARINA's recursion never forgets an accepted "
+        "corruption, so the plain mean drifts persistently while the "
+        "coordinate-wise GARs stay within the honest-spread trim bias.",
+        "",
+        "| attack | faulty frac | " + " | ".join(gars) + " | Mbits |",
+        "|---|---|" + "---|" * (len(gars) + 1),
+    ]
+    seen = []
+    for c in cells:
+        k = (c["attack"], c["frac"])
+        if k not in seen:
+            seen.append(k)
+    by = {(c["attack"], c["frac"], c["gar"]): c for c in cells}
+    for attack, frac in seen:
+        vals, mbits = [], None
+        row_cells = [by.get((attack, frac, g)) for g in gars]
+        finite = [c["final_loss"] for c in row_cells if c]
+        best = min(finite) if finite else None
+        for c in row_cells:
+            if c is None:
+                vals.append("—")
+                continue
+            mbits = c["mbits_up"]
+            s = f"{c['final_loss']:.3f} ({c['loss_vs_free']:.2f}×)"
+            vals.append(f"**{s}**" if c["final_loss"] == best and
+                        len(finite) > 1 else s)
+        lines.append(f"| {attack} | {frac:g} | " + " | ".join(vals) +
+                     f" | {mbits:.2f} |")
+    rt = r.get("roundtime")
+    if rt:
+        lines += [
+            "",
+            f"**Robust round time** (n = {rt['n']} worker rows, "
+            f"d = {rt['d']:,}, backend = {rt['backend']}): fused robust "
+            f"round {rt['round_trimmed']/1e3:.1f} ms (trimmed) / "
+            f"{rt['round_median']/1e3:.1f} ms (median) vs fused mean round "
+            f"{rt['round_mean']/1e3:.1f} ms — "
+            f"**{rt['round_trimmed_over_mean']:.2f}× / "
+            f"{rt['round_median_over_mean']:.2f}×** (CI gates ≤ 1.25×, "
+            "scripts/check_robust.py). The isolated sync epilogue is "
+            f"{rt['sync_trimmed_over_mean']:.2f}× the mean epilogue on this "
+            "backend — recorded, not gated: the CPU ref pays a compute-bound "
+            "compare-exchange network against a single memory-bound mean "
+            "pass, whereas the TPU Pallas kernel's extra compares ride "
+            "in-register on the same HBM traffic (the ~1.2× epilogue "
+            "regime).",
+        ]
+    lines += [
+        "",
+        "Per-cell gradsq/bits live in `BENCH_pp.json` (`robust` section); "
+        "fault semantics and GAR/wire compatibility are specified in "
+        "DESIGN.md §4.9 and regression-tested in tests/test_robust.py.",
+    ]
+    return "\n".join(lines)
+
+
 def _splice(text, marker, body):
     pattern = re.compile(re.escape(marker) + r".*?(?=\n## |\Z)", re.DOTALL)
     return pattern.sub(
@@ -429,14 +512,17 @@ def main():
         text += "\n## Round pipeline\n\n<!-- ROUNDSTEP_BENCH -->\n"
     if "<!-- PP_BENCH -->" not in text:
         text += "\n## Federated partial participation\n\n<!-- PP_BENCH -->\n"
+    if "<!-- ROBUST_BENCH -->" not in text:
+        text += "\n## Byzantine robustness\n\n<!-- ROBUST_BENCH -->\n"
     text = _splice(text, "<!-- PERF_LOG -->", body)
     text = _splice(text, "<!-- COMPRESSION_BENCH -->", render_compression_bench())
     text = _splice(text, "<!-- ROUNDSTEP_BENCH -->", render_roundstep_bench())
     text = _splice(text, "<!-- PP_BENCH -->", render_pp_bench())
+    text = _splice(text, "<!-- ROBUST_BENCH -->", render_robust_bench())
     with open(EXP, "w") as f:
         f.write(text)
     print(f"rendered {len(entries)} perf entries + compression + roundstep "
-          "+ federated-pp bench")
+          "+ federated-pp + robust bench")
 
 
 if __name__ == "__main__":

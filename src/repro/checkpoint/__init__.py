@@ -1,3 +1,13 @@
-from .store import load_checkpoint, save_checkpoint, latest_step
+from .store import (
+    CheckpointCorruptionError,
+    latest_step,
+    load_checkpoint,
+    save_checkpoint,
+)
 
-__all__ = ["load_checkpoint", "save_checkpoint", "latest_step"]
+__all__ = [
+    "CheckpointCorruptionError",
+    "load_checkpoint",
+    "save_checkpoint",
+    "latest_step",
+]

@@ -3,6 +3,13 @@
 Trees are flattened with '/'-joined key paths; dataclass states (MarinaState
 etc.) round-trip through their registered pytree flatten. Atomic via
 write-to-temp + rename. Exact restore is covered by tests/test_checkpoint.py.
+
+Every checkpoint carries a content checksum (CRC-32 over the sorted
+(key, dtype, shape, bytes) stream, stored under the reserved ``__checksum__``
+entry) that :func:`load_checkpoint` verifies before restoring: a truncated or
+bit-flipped file raises :class:`CheckpointCorruptionError` instead of silently
+resuming a half-written state. Pre-checksum checkpoints (no ``__checksum__``
+entry) still load — the digest is only enforced when present.
 """
 
 from __future__ import annotations
@@ -10,6 +17,8 @@ from __future__ import annotations
 import os
 import re
 import tempfile
+import zipfile
+import zlib
 from typing import Any
 
 import jax
@@ -19,6 +28,33 @@ import numpy as np
 PyTree = Any
 
 _SEP = "//"
+
+_CHECKSUM_KEY = "__checksum__"
+
+
+class CheckpointCorruptionError(RuntimeError):
+    """The checkpoint file is corrupt (bad archive, or digest mismatch).
+
+    Deliberately NOT a :class:`KeyError`/:class:`ValueError`: the trainer's
+    format-compatibility fallbacks catch those to try older checkpoint
+    layouts, and a corrupt file must fail loudly rather than degrade into a
+    "pre-ledger checkpoint" guess.
+    """
+
+
+def _digest(arrays: dict) -> int:
+    """CRC-32 over the sorted (key, dtype, shape, bytes) stream of the
+    *encoded* arrays (bf16 et al. digest as their stored bit-views, so the
+    digest is computable on load without decoding)."""
+    crc = 0
+    for key in sorted(arrays):
+        if key == _CHECKSUM_KEY:
+            continue
+        arr = np.ascontiguousarray(arrays[key])
+        for part in (key, arr.dtype.str, str(arr.shape)):
+            crc = zlib.crc32(part.encode(), crc)
+        crc = zlib.crc32(arr.tobytes(), crc)
+    return crc
 
 
 def _path_str(path) -> str:
@@ -54,6 +90,7 @@ def save_checkpoint(directory: str, step: int, tree: PyTree) -> str:
         arr, tag = _encode(np.asarray(leaf))
         key = _path_str(path) + (f"::{tag}" if tag else "")
         arrays[key] = arr
+    arrays[_CHECKSUM_KEY] = np.uint32(_digest(arrays))
     final = os.path.join(directory, f"ckpt_{step:08d}.npz")
     fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
     with os.fdopen(fd, "wb") as f:
@@ -78,24 +115,41 @@ def load_checkpoint(directory: str, step: int, like: PyTree) -> PyTree:
     import ml_dtypes
 
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    with np.load(path) as data:
-        tagged = {}
-        for k in data.files:
-            base, _, tag = k.partition("::")
-            tagged[base] = (k, tag)
-        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
-        leaves = []
-        for p, leaf in flat:
-            key = _path_str(p)
-            if key not in tagged:
-                raise KeyError(f"checkpoint missing leaf {key!r}")
-            fkey, tag = tagged[key]
-            arr = data[fkey]
-            if tag:
-                arr = arr.view(np.dtype(getattr(ml_dtypes, tag)))
-            if arr.shape != leaf.shape:
-                raise ValueError(
-                    f"{key}: checkpoint shape {arr.shape} != expected {leaf.shape}"
-                )
-            leaves.append(jnp.asarray(arr).astype(leaf.dtype))
+    try:
+        with np.load(path) as data:
+            raw = {k: data[k] for k in data.files}
+    except FileNotFoundError:
+        raise  # absent is absent, not corrupt
+    except (zipfile.BadZipFile, zlib.error, ValueError, EOFError, OSError) as e:
+        raise CheckpointCorruptionError(
+            f"checkpoint {path} is corrupt (unreadable archive: {e})"
+        ) from e
+    if _CHECKSUM_KEY in raw:
+        stored = int(raw[_CHECKSUM_KEY])
+        actual = _digest(raw)
+        if stored != actual:
+            raise CheckpointCorruptionError(
+                f"checkpoint {path} is corrupt: content checksum mismatch "
+                f"(stored {stored:#010x}, computed {actual:#010x})"
+            )
+        del raw[_CHECKSUM_KEY]
+    tagged = {}
+    for k in raw:
+        base, _, tag = k.partition("::")
+        tagged[base] = (k, tag)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in flat:
+        key = _path_str(p)
+        if key not in tagged:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        fkey, tag = tagged[key]
+        arr = raw[fkey]
+        if tag:
+            arr = arr.view(np.dtype(getattr(ml_dtypes, tag)))
+        if arr.shape != leaf.shape:
+            raise ValueError(
+                f"{key}: checkpoint shape {arr.shape} != expected {leaf.shape}"
+            )
+        leaves.append(jnp.asarray(arr).astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -36,6 +36,8 @@ from .flat import (
 )
 from .marina import Marina, MarinaState, PPMarina, StepMetrics, VRMarina, make_gd
 from .baselines import DCGD, Diana, ECSGD, VRDiana
+from .aggregators import ServerAggregator
+from .faults import FaultSpec, flip_binclass_labels
 from .stepsize import (
     ab_from_omega,
     diana_alpha,
@@ -48,6 +50,9 @@ from .stepsize import (
     marina_iteration_bound,
     permk_default_p,
     pp_marina_gamma,
+    robust_marina_gamma,
+    robust_n_eff,
+    robust_pp_marina_gamma,
     vr_marina_gamma,
 )
 
@@ -63,8 +68,10 @@ __all__ = [
     "tree_decompress", "tree_dim", "tree_omega", "tree_payload_bits",
     "tree_roundtrip", "Marina", "MarinaState", "PPMarina", "StepMetrics",
     "VRMarina", "make_gd", "DCGD", "Diana", "ECSGD", "VRDiana",
+    "ServerAggregator", "FaultSpec", "flip_binclass_labels",
     "ab_from_omega", "diana_alpha", "diana_gamma", "marina_comm_per_worker",
     "marina_gamma", "marina_gamma_ab", "marina_gamma_permk",
     "marina_gamma_pl", "marina_iteration_bound", "permk_default_p",
-    "pp_marina_gamma", "vr_marina_gamma",
+    "pp_marina_gamma", "robust_marina_gamma", "robust_n_eff",
+    "robust_pp_marina_gamma", "vr_marina_gamma",
 ]

@@ -1,0 +1,213 @@
+"""Byzantine-robust server aggregation rules (GARs) — DESIGN.md §4.9.
+
+MARINA's server update ``g^{k+1} = g^k + mean_i Q(Δ_i)`` trusts every
+uploaded compressed difference; a single corrupted Δ̂_i poisons the estimator
+*persistently* (the recursion never forgets a round), which is qualitatively
+worse than one bad gradient in SGD. :class:`ServerAggregator` swaps the mean
+for a gradient aggregation rule (GAR) at the one place all three optimizers
+and the fused engine aggregate:
+
+* ``mean``               — the paper's aggregation (the default; no change).
+* ``trimmed_mean``       — coordinate-wise f-trimmed mean: per coordinate,
+                           drop the f smallest and f largest worker values
+                           and average the rest (needs n > 2f).
+* ``coordinate_median``  — coordinate-wise median (the trim-bound special
+                           case of the same kernel; breakdown point ~n/2).
+* ``krum``               — select the single row minimizing the sum of its
+                           n−f−2 smallest squared distances to the other
+                           rows (Blanchard et al. 2017; needs n ≥ f+3).
+* ``norm_clip``          — clip every row's global ℓ2 norm to τ (the median
+                           row norm when ``clip_tau`` is None), then mean.
+
+The coordinate-wise rules run on the fused wire as Pallas kernels
+(``kernels/epilogue.py: trimmed_*_epilogue`` — sort-free rank selection over
+the (n, nblk, B) payload rows); Krum/norm-clip are row-*score* reductions
+(one scalar per worker) feeding the ordinary dense-δ epilogue.
+
+Wire compatibility (DESIGN.md §4.9): coordinate-wise rules need the worker
+payloads to be comparable per coordinate — dense quantizers (QSGD, natural)
+or shared-support sparsifiers qualify; *independent* RandK supports make the
+per-coordinate sample mostly structural zeros (the trim window then measures
+the sparsity pattern, not the values), and PermK partitions coordinates
+across workers (exactly one worker per coordinate — nothing to aggregate
+robustly), so the optimizers refuse robust rules on correlated/partition
+compressors outright.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+RULES = ("mean", "trimmed_mean", "coordinate_median", "krum", "norm_clip")
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerAggregator:
+    """A gradient aggregation rule for the server side of a round.
+
+    ``rule`` is one of :data:`RULES`; ``f`` is the assumed Byzantine count
+    (the trim width of ``trimmed_mean`` and Krum's f — ignored by the median
+    and norm-clip, whose breakdown is structural); ``clip_tau`` overrides the
+    norm-clip threshold (default: the median row norm, self-tuning).
+
+    Static config (hashable, frozen): safe to close over in jitted steps.
+    The same instance drives the tree paths (:meth:`combine_stacked`), the
+    flat engine (:meth:`combine_rows` + the trimmed Pallas epilogues via
+    :meth:`trim_bounds`) and the γ bookkeeping (:meth:`n_eff`).
+    """
+
+    rule: str = "mean"
+    f: int = 0
+    clip_tau: Optional[float] = None
+
+    def __post_init__(self):
+        if self.rule not in RULES:
+            raise ValueError(f"unknown rule {self.rule!r}, expected {RULES}")
+        if self.f < 0:
+            raise ValueError("Byzantine count f must be >= 0")
+
+    # -- static metadata ----------------------------------------------------
+    @property
+    def robust(self) -> bool:
+        """True when the rule differs from the paper's plain mean."""
+        return self.rule != "mean"
+
+    @property
+    def coordinatewise(self) -> bool:
+        """True for the rules with a fused Pallas epilogue (trim/median)."""
+        return self.rule in ("trimmed_mean", "coordinate_median")
+
+    def trim_bounds(self, n: int) -> tuple:
+        """Rank keep-window [lo, hi) of the coordinate-wise rules for n
+        workers. Trimmed mean: (f, n−f). Median: ((n−1)//2, (n−1)//2+1) odd /
+        (n//2−1, n//2+1) even (mean of the two middle values) — the median IS
+        a trim-bound setting, so one kernel covers both."""
+        if self.rule == "coordinate_median":
+            if n % 2:
+                m = (n - 1) // 2
+                return m, m + 1
+            return n // 2 - 1, n // 2 + 1
+        lo, hi = self.f, n - self.f
+        if not lo < hi:
+            raise ValueError(
+                f"trimmed_mean needs n > 2f (n={n}, f={self.f})"
+            )
+        return lo, hi
+
+    def n_eff(self, n: int) -> int:
+        """Effective averaging count of the rule (how many worker values the
+        aggregate still averages over) — the robust-γ heuristic of
+        :func:`repro.core.stepsize.robust_n_eff` substitutes it for n."""
+        from . import stepsize
+
+        return stepsize.robust_n_eff(self.rule, n, self.f)
+
+    # -- single-array combine (flat engine / mesh rows) ---------------------
+    def combine_rows(self, rows: jax.Array) -> jax.Array:
+        """Aggregate a worker-stacked array: (n, ...) → (...).
+
+        The jnp reference form of every rule; the fused engine routes the
+        coordinate-wise rules to the Pallas epilogues instead (same rank
+        semantics — ``kernels/ref.py: trimmed_mean_rows_ref`` is the shared
+        oracle) and uses this only for Krum/norm-clip row scoring."""
+        from repro.kernels import ref as kref
+
+        n = rows.shape[0]
+        if self.rule == "mean":
+            return jnp.mean(rows.astype(jnp.float32), axis=0)
+        if self.coordinatewise:
+            lo, hi = self.trim_bounds(n)
+            return kref.trimmed_mean_rows_ref(rows, lo, hi)
+        flat = rows.reshape(n, -1).astype(jnp.float32)
+        if self.rule == "krum":
+            win = _krum_select(_pairwise_sq_dists(flat), n, self.f)
+            return rows[win].astype(jnp.float32)
+        # norm_clip — select-out non-finite rows before scaling (0·NaN = NaN)
+        norms = jnp.sqrt(jnp.sum(flat * flat, axis=1))
+        scale = _clip_scales(norms, self.clip_tau)
+        clean = jnp.where(jnp.isfinite(flat), flat, 0.0)
+        return jnp.mean(
+            clean * scale[:, None], axis=0
+        ).reshape(rows.shape[1:])
+
+    # -- pytree combine (tree optimizer paths / mesh) -----------------------
+    def combine_stacked(self, trees: PyTree) -> PyTree:
+        """Aggregate a worker-stacked pytree (leading axis n on every leaf).
+
+        Coordinate-wise rules apply leaf by leaf (a coordinate is a
+        coordinate). Krum and norm-clip score rows *globally*: the pairwise
+        distances / row norms sum across all leaves before the selection or
+        clip scale, so a Byzantine client cannot hide a large leaf behind an
+        honest-looking one."""
+        leaves = jax.tree.leaves(trees)
+        n = leaves[0].shape[0]
+        if self.rule == "mean":
+            return jax.tree.map(
+                lambda t: jnp.mean(t.astype(jnp.float32), 0).astype(t.dtype),
+                trees,
+            )
+        if self.coordinatewise:
+            return jax.tree.map(
+                lambda t: self.combine_rows(t).astype(t.dtype), trees
+            )
+        flats = [l.reshape(n, -1).astype(jnp.float32) for l in leaves]
+        if self.rule == "krum":
+            dists = sum(_pairwise_sq_dists(fl) for fl in flats)
+            win = _krum_select(dists, n, self.f)
+            return jax.tree.map(lambda t: t[win], trees)
+        norms = jnp.sqrt(sum(jnp.sum(fl * fl, axis=1) for fl in flats))
+        scale = _clip_scales(norms, self.clip_tau)
+
+        def clip_mean(t):
+            tf = t.astype(jnp.float32)
+            clean = jnp.where(jnp.isfinite(tf), tf, 0.0)
+            return jnp.mean(
+                clean * scale.reshape((n,) + (1,) * (t.ndim - 1)), axis=0
+            ).astype(t.dtype)
+
+        return jax.tree.map(clip_mean, trees)
+
+
+def _pairwise_sq_dists(flat: jax.Array) -> jax.Array:
+    """(n, d) rows → (n, n) squared euclidean distances (Gram expansion)."""
+    sq = jnp.sum(flat * flat, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (flat @ flat.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def _krum_select(dists: jax.Array, n: int, f: int) -> jax.Array:
+    """Krum winner index from the (n, n) pairwise distance matrix: score_i =
+    sum of the n−f−2 smallest distances to OTHER rows, pick the argmin.
+    Non-finite scores (NaN/garbage payloads poison their own row's distances)
+    are demoted to +inf — a NaN must never win the argmin."""
+    m = n - f - 2
+    if m < 1:
+        raise ValueError(f"krum needs n >= f + 3 (n={n}, f={f})")
+    masked = dists + jnp.diag(jnp.full((n,), jnp.inf, dists.dtype))
+    scores = jnp.sum(jnp.sort(masked, axis=1)[:, :m], axis=1)
+    scores = jnp.where(jnp.isfinite(scores), scores, jnp.inf)
+    return jnp.argmin(scores)
+
+
+def _clip_scales(norms: jax.Array, clip_tau: Optional[float]) -> jax.Array:
+    """Per-row clip factors min(1, τ/‖row‖); τ defaults to the median norm
+    (self-tuning: with f < n/2 attackers the median norm is honest-sized).
+    Rows with a non-finite norm (NaN/inf payloads no clip can repair) get
+    scale 0 — the standard server-side sanity filter."""
+    finite = jnp.isfinite(norms)
+    safe = jnp.where(finite, norms, 0.0)
+    tau = (
+        jnp.median(jnp.where(finite, norms, jnp.inf))
+        if clip_tau is None
+        else jnp.asarray(clip_tau, jnp.float32)
+    )
+    scale = jnp.minimum(1.0, tau / jnp.maximum(safe, _EPS))
+    return jnp.where(finite, scale, 0.0)

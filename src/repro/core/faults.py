@@ -1,0 +1,167 @@
+"""Client fault injection for the federated round pipeline (DESIGN.md §4.9).
+
+The harness that turns "honest lab conditions" into "real federated clients":
+:class:`FaultSpec` is a static dial on the MARINA-family optimizers (and on
+``launch.distributed.build_train_steps``) that rewrites the worker-stacked
+uplink *payloads* each round. Faulty clients are the fixed id prefix
+``{0, …, f−1}`` with ``f = ⌊frac·n⌋`` — a deterministic adversary, so every
+trajectory is reproducible and tests can assert exact semantics.
+
+Attacks (what the server receives from a faulty client):
+
+* ``sign_flip``  — the negated, ``scale``-amplified honest payload
+                   (−scale·Δ_i): the classic estimator-reversal attack.
+* ``mean_shift`` — the *omniscient* attack: every Byzantine row is
+                   −scale·mean(honest rows), steering the plain mean to
+                   ``(h − f·scale·h)/n`` — sign-reversed for scale large
+                   enough — while staying perfectly coordinated.
+* ``nan``        — NaN payloads: one round poisons a mean-aggregated
+                   estimator forever (the robustness motivation, and the
+                   trainer's non-finite-guard regression input).
+* ``garbage``    — i.i.d. Gaussian noise of standard deviation ``scale``.
+* ``drop``       — stragglers: the client computed but never uploaded.
+                   Requires ``carry=True``: the server substitutes the
+                   carry-table row h_i, which on the difference wire is just
+                   Δ̂_i = 0 (zero rows — :func:`zero_rows`), skips the row's
+                   h refresh (the anchor must stay what the server last saw)
+                   and books uplink bits only for the clients that uploaded.
+* ``none``       — identity (the f=0 grid baseline).
+
+Label-flipping — a *data* poisoning attack, not a payload one — is provided
+as :func:`flip_binclass_labels` for the benchmark problems: the faulty
+clients honestly follow the protocol on maliciously mislabeled local data.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+ATTACKS = ("none", "sign_flip", "mean_shift", "nan", "garbage", "drop")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Static description of the per-round client faults.
+
+    ``attack`` is one of :data:`ATTACKS`; ``frac`` the faulty fraction of
+    the fleet (ids ``< ⌊frac·n⌋`` are faulty — fixed, so partial
+    participation naturally samples cohorts with a varying Byzantine count);
+    ``scale`` the attack amplitude (sign_flip/mean_shift multiplier,
+    garbage standard deviation). Frozen/hashable: safe as jit-static config.
+    """
+
+    attack: str = "sign_flip"
+    frac: float = 0.25
+    scale: float = 1.0
+
+    def __post_init__(self):
+        if self.attack not in ATTACKS:
+            raise ValueError(
+                f"unknown attack {self.attack!r}, expected {ATTACKS}"
+            )
+        if not 0.0 <= self.frac <= 1.0:
+            raise ValueError("faulty fraction must be in [0, 1]")
+
+    def n_faulty(self, n: int) -> int:
+        """Faulty client count f = ⌊frac·n⌋ of an n-client fleet."""
+        return int(self.frac * n)
+
+    def byz_mask(self, ids: jax.Array, n: int) -> jax.Array:
+        """Boolean fault mask for the given client-id rows (ids < f). ``ids``
+        may be traced (a PP cohort) — the threshold is static."""
+        return ids < self.n_faulty(n)
+
+
+def _row_mask(mask: jax.Array, leaf: jax.Array) -> jax.Array:
+    """(rows,) bool → broadcastable (rows, 1, …, 1) for the leaf."""
+    return mask.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+
+def zero_rows(trees: PyTree, mask: jax.Array) -> PyTree:
+    """Zero the masked leading-axis rows of every leaf — the dropped-client
+    substitution: Δ̂_i = 0 is exactly "the server reuses carry row h_i"."""
+    return jax.tree.map(
+        lambda t: jnp.where(_row_mask(mask, t), jnp.zeros((), t.dtype), t),
+        trees,
+    )
+
+
+def inject(
+    spec: "FaultSpec | None",
+    key: jax.Array,
+    trees: PyTree,
+    ids: jax.Array,
+    n: int,
+) -> PyTree:
+    """Rewrite the faulty rows of a worker-stacked payload tree.
+
+    ``trees`` carries the per-client uplink quantity on its leading axis
+    (gradients on sync rounds, differences on compressed rounds); ``ids``
+    are the client ids of those rows (``arange(n)`` for a full fleet, the
+    cohort ``sel`` under partial participation). ``drop``/``none`` are
+    identities here — dropping is a *transport* fault, handled by the
+    optimizer via :func:`zero_rows` + carry bookkeeping, and it must NOT
+    corrupt sync rounds (the dense rendezvous all clients attend)."""
+    if spec is None or spec.attack in ("none", "drop"):
+        return trees
+    if spec.n_faulty(n) == 0:
+        return trees
+    mask = spec.byz_mask(ids, n)
+
+    if spec.attack == "sign_flip":
+        return jax.tree.map(
+            lambda t: jnp.where(
+                _row_mask(mask, t), (-spec.scale * t).astype(t.dtype), t
+            ),
+            trees,
+        )
+    if spec.attack == "mean_shift":
+        honest = jnp.maximum(
+            jnp.sum((~mask).astype(jnp.float32)), 1.0
+        )
+
+        def shift(t):
+            hmean = (
+                jnp.sum(
+                    t.astype(jnp.float32) * _row_mask(~mask, t), axis=0
+                )
+                / honest
+            )
+            byz = (-spec.scale * hmean).astype(t.dtype)
+            return jnp.where(_row_mask(mask, t), byz[None], t)
+
+        return jax.tree.map(shift, trees)
+    if spec.attack == "nan":
+        return jax.tree.map(
+            lambda t: jnp.where(
+                _row_mask(mask, t), jnp.asarray(jnp.nan, t.dtype), t
+            ),
+            trees,
+        )
+    # garbage
+    leaves, treedef = jax.tree.flatten(trees)
+    keys = jax.random.split(key, len(leaves))
+    noisy = [
+        jnp.where(
+            _row_mask(mask, t),
+            (spec.scale * jax.random.normal(k, t.shape)).astype(t.dtype),
+            t,
+        )
+        for k, t in zip(keys, leaves)
+    ]
+    return jax.tree.unflatten(treedef, noisy)
+
+
+def flip_binclass_labels(data, n_byz: int):
+    """Label-flip data poisoning for the binary-classification problems:
+    negate the ±1 labels of the first ``n_byz`` clients (the faulty prefix)
+    and leave the features alone. The poisoned clients then run the honest
+    protocol on bad data — a fault no payload-level defense can see, only a
+    GAR can bound. Works on any NamedTuple dataset with a (n, m) ``y``."""
+    return data._replace(y=data.y.at[:n_byz].multiply(-1))

@@ -482,24 +482,74 @@ class FlatEngine:
         """(n, nblk, kb) payloads → (nblk, B) dense mean over workers."""
         return block_scatter_mean(vals, offs, self.layout.block, self.backend)
 
+    # -- per-worker dense decode (robust GARs — DESIGN.md §4.9) -------------
+    def worker_dense(self, key: jax.Array, bufs: jax.Array, n: int) -> jax.Array:
+        """Decode each worker's payload densely: (n, nblk, B) diffs →
+        (n, nblk, B) f32 rows Q_i(Δ_i). The robust aggregation rules need the
+        individual worker values — a scatter-*mean* is exactly what they must
+        not compute. Same seeds/payloads as :meth:`aggregate` (the server
+        combination is the only thing that changes). PermK refuses: its
+        workers partition the coordinates (exactly one worker per coordinate
+        — there is no per-coordinate sample to trim or median)."""
+        from repro.kernels import ref as kref
+        from . import wire
+
+        if self.sampler == "permk":
+            raise ValueError(
+                "PermK partitions coordinates across workers; robust "
+                "aggregation is undefined on its payloads (DESIGN.md §4.9)"
+            )
+        if self.sampler == "qsgd":
+            seeds = self.worker_seeds(key, n)
+            levels, norms = block_qsgd_workers(bufs, seeds, self.s, self.backend)
+            if self.s <= wire.NIBBLE_MAX_S:
+                levels = nibble_roundtrip(levels, self.layout.block, self.backend)
+            return levels.astype(jnp.float32) * (norms / self.s)[..., None]
+        if self.sampler == "natural":
+            seeds = self.worker_seeds(key, n)
+            codes, scales = block_natural_workers(bufs, seeds, self.backend)
+            return jax.vmap(kref.natural_decode_ref)(codes, scales)
+        if self.sampler == "randk_qsgd":
+            seeds = self.worker_seeds(key, n)
+            vals, offs = self.compress_stacked(seeds, bufs)
+            levels, norms = kref.qsgd_sampled_quantize_ref(vals, seeds, self.s)
+            vals = kref.randk_qsgd_dequant_ref(levels, norms, self.s)
+        else:  # randk
+            vals, offs = self.compress_stacked(self.worker_seeds(key, n), bufs)
+        # per-worker scatter (n = 1 per row: the scatter-mean divides by 1)
+        return jax.vmap(
+            lambda v, o: block_scatter_mean(
+                v[None], o[None], self.layout.block, self.backend
+            )
+        )(vals, offs)
+
     # -- the hot path -------------------------------------------------------
-    def fused_delta(self, key: jax.Array, diffs: PyTree, n: int) -> PyTree:
+    def fused_delta(
+        self, key: jax.Array, diffs: PyTree, n: int, aggregator=None
+    ) -> PyTree:
         """Compressed-round aggregate: worker-stacked diff tree → mean Q tree.
 
         Equivalent to decompressing every worker payload and averaging, but
         the per-worker dense (d,) trees are never built. The PermK sampler
         shares ONE seed across workers (the correlation IS the algorithm) and
         aggregates scatter-free: the disjoint chunks concatenate through the
-        inverse permutation.
+        inverse permutation. A robust ``aggregator`` (DESIGN.md §4.9) swaps
+        the mean for its GAR over the per-worker decoded rows.
         """
         bufs = pack_stacked(self.layout, diffs)
-        return unpack(self.layout, self.aggregate(key, bufs, n))
+        return unpack(self.layout, self.aggregate(key, bufs, n, aggregator))
 
-    def aggregate(self, key: jax.Array, bufs: jax.Array, n: int) -> jax.Array:
+    def aggregate(
+        self, key: jax.Array, bufs: jax.Array, n: int, aggregator=None
+    ) -> jax.Array:
         """Server-side aggregate over packed diffs: (n, nblk, B) → the dense
         (nblk, B) round delta (the buffer-level body of :meth:`fused_delta`,
         exposed so the downlink can re-compress the aggregate before it ever
-        leaves flat form — DESIGN.md §4.7)."""
+        leaves flat form — DESIGN.md §4.7). With a robust ``aggregator``
+        (a :class:`repro.core.aggregators.ServerAggregator` whose rule is not
+        the mean) the combination runs the GAR over :meth:`worker_dense`."""
+        if aggregator is not None and aggregator.robust:
+            return aggregator.combine_rows(self.worker_dense(key, bufs, n))
         if self.sampler == "permk":
             seed = self._shared_seed(key)  # shared: all workers, same perm
             vals, _ = block_permk_workers(bufs, seed, self.backend)
@@ -553,6 +603,7 @@ class FlatEngine:
         gamma: float,
         down: "FlatEngine | None" = None,
         down_key: "jax.Array | None" = None,
+        aggregator=None,
     ):
         """Finish a compressed round in ONE (nblk, B)-tile sweep: sample the
         uplink payloads from the packed diffs, then run the fused epilogue
@@ -570,7 +621,7 @@ class FlatEngine:
         from repro.kernels import ref as kref
 
         if down is not None:
-            delta = self.aggregate(key, diff_bufs, n)
+            delta = self.aggregate(key, diff_bufs, n, aggregator)
             assert down.layout.block == self.layout.block and (
                 down.layout.nblk == self.layout.nblk
             ), "downlink engine must share the uplink layout"
@@ -578,9 +629,19 @@ class FlatEngine:
                 "PermK is a partition across n receivers; a broadcast "
                 "downlink has one payload — use randk/qsgd/natural"
             )
+            # the downlink's single server payload is past the GAR already
             return down.fused_round(down_key, delta[None], 1, g2d, x2d, gamma)
 
         backend = self.backend
+        if aggregator is not None and aggregator.robust:
+            rows = self.worker_dense(key, diff_bufs, n)
+            if aggregator.coordinatewise:
+                lo, hi = aggregator.trim_bounds(n)
+                return epi.trimmed_delta_epilogue(
+                    rows, g2d, x2d, gamma, lo, hi, backend=backend
+                )
+            delta = aggregator.combine_rows(rows)
+            return epi.delta_epilogue(delta, g2d, x2d, gamma, backend=backend)
         if self.sampler == "permk":
             seed = self._shared_seed(key)
             vals, _ = block_permk_workers(diff_bufs, seed, backend)
@@ -615,12 +676,27 @@ class FlatEngine:
         vals, offs = self.compress_stacked(self.worker_seeds(key, n), diff_bufs)
         return epi.scatter_epilogue(vals, offs, g2d, x2d, gamma, backend=backend)
 
-    def fused_sync(self, grad_bufs: jax.Array, x2d: jax.Array, gamma: float):
+    def fused_sync(self, grad_bufs: jax.Array, x2d: jax.Array, gamma: float,
+                   aggregator=None):
         """Sync-round epilogue: worker-mean over the ONE packed gradient
         buffer (the fused psum replacing the per-leaf tree exchange) fused
-        with the iterate update. Returns (g_new, x_new) like fused_round."""
+        with the iterate update. Returns (g_new, x_new) like fused_round.
+        A robust ``aggregator`` replaces the mean with its GAR: the
+        coordinate-wise rules run the trimmed sync kernel; Krum/norm-clip
+        reduce the rows first and reuse the dense-δ epilogue (g = GAR)."""
         from repro.kernels import epilogue as epi
 
+        if aggregator is not None and aggregator.robust:
+            n = grad_bufs.shape[0]
+            if aggregator.coordinatewise:
+                lo, hi = aggregator.trim_bounds(n)
+                return epi.trimmed_sync_epilogue(
+                    grad_bufs, x2d, gamma, lo, hi, backend=self.backend
+                )
+            g_agg = aggregator.combine_rows(grad_bufs)
+            return epi.delta_epilogue(
+                g_agg, jnp.zeros_like(g_agg), x2d, gamma, backend=self.backend
+            )
         return epi.mean_epilogue(grad_bufs, x2d, gamma, backend=self.backend)
 
     # -- test/validation helpers -------------------------------------------

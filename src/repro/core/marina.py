@@ -78,6 +78,7 @@ from .compressors import (
     tree_dim,
     tree_payload_bits,
 )
+from . import faults as fault_lib
 from .flat import FlatEngine, pack, pack_stacked, unpack
 from .tree_util import (
     tree_axpy,
@@ -94,6 +95,12 @@ GradFn = Callable[[PyTree, PyTree], PyTree]  # (params, batch) -> grad tree
 #: perturbing the (k_bern, k_q) split — carry/downlink rounds must draw the
 #: same uplink randomness as the seed estimator for bit-exact trajectories.
 _DOWN_FOLD = 0x0D0C
+
+#: fold_in constant deriving the fault-injection key (garbage payload noise)
+#: from the step key — like _DOWN_FOLD, it must not perturb the
+#: (k_bern, k_sel, k_q) split so faulted and honest runs share their
+#: Bernoulli/cohort/compressor randomness (only the payloads differ).
+_FAULT_FOLD = 0xFA17
 
 class StepMetrics(NamedTuple):
     grad_est_norm: jax.Array      # ‖g^k‖ (the estimator driving the step)
@@ -167,6 +174,7 @@ def _compressed_delta(
     diffs: PyTree,
     like: PyTree,
     n: int,
+    aggregator=None,
 ) -> PyTree:
     """One compressed uplink round: (1/n) Σ_i Q(Δ_i).
 
@@ -175,10 +183,15 @@ def _compressed_delta(
     RandK / PermK with scatter- or concat-mean, or the packed quantization
     wire (blockwise QSGD / natural / RandK∘QSGD, DESIGN.md §4.6) whose
     aggregation is the fused dequantize-and-mean at int8 input bandwidth.
-    Without: the per-leaf tree path (reference semantics, cost ∝ n·d)."""
+    Without: the per-leaf tree path (reference semantics, cost ∝ n·d).
+    A robust ``aggregator`` (DESIGN.md §4.9) replaces the mean with its GAR
+    over the per-worker decompressed payloads on either path."""
     if engine is not None:
-        return engine.fused_delta(key, diffs, n)
+        return engine.fused_delta(key, diffs, n, aggregator=aggregator)
     payloads = _compress_workers(comp, key, diffs, n)
+    if _robust(aggregator):
+        dense = jax.vmap(lambda p: tree_decompress(comp, p, like))(payloads)
+        return aggregator.combine_stacked(dense)
     return _decompress_mean(comp, payloads, like, n)
 
 
@@ -254,6 +267,112 @@ def _flat_sync_mean(engine: FlatEngine, grads: PyTree) -> PyTree:
 
 
 # ---------------------------------------------------------------------------
+# Robust aggregation + fault injection plumbing (DESIGN.md §4.9)
+# ---------------------------------------------------------------------------
+
+
+def _robust(aggregator) -> bool:
+    """True when a ServerAggregator with a non-mean rule is configured."""
+    return aggregator is not None and aggregator.robust
+
+
+def _check_robust_config(m) -> None:
+    """Refuse GAR/wire/fault combinations whose semantics are undefined.
+
+    Coordinate-wise (and row-score) GARs need per-worker payloads that are
+    comparable coordinate by coordinate: correlated partition compressors
+    (PermK et al.) give each coordinate to exactly ONE worker, so there is
+    nothing to trim, median, score or clip — refuse rather than silently
+    aggregate structure. Dropped clients are only recoverable when the
+    server holds an anchor to substitute (``carry=True``'s h table: Δ̂_i = 0
+    ⇔ reuse h_i); without a carry the recompute round would silently treat
+    the drop as a zero *gradient*, which is a different (wrong) estimator.
+    Client weights are a mean-specific concept (robust rules select/trim,
+    they don't form convex combinations) — reject the pairing."""
+    agg = getattr(m, "aggregator", None)
+    if _robust(agg):
+        if isinstance(m.compressor, CorrelatedCompressor):
+            raise ValueError(
+                f"robust rule {agg.rule!r} is undefined on the correlated "
+                f"partition compressor {m.compressor.name}: each coordinate "
+                "reaches the server from exactly one worker (DESIGN.md §4.9)"
+            )
+        if m.engine is not None and m.engine.sampler == "permk":
+            raise ValueError(
+                f"robust rule {agg.rule!r} is undefined on the permk engine "
+                "wire: the workers partition the coordinates (DESIGN.md §4.9)"
+            )
+        if getattr(m, "weights", None) is not None:
+            raise ValueError(
+                "client weights only make sense for mean aggregation; "
+                "robust GARs select/trim rows instead of weighting them"
+            )
+    flt = getattr(m, "faults", None)
+    if flt is not None and flt.attack == "drop" and not m.carry:
+        raise ValueError(
+            "faults='drop' substitutes the server-side carry row h_i for "
+            "the missing upload — carry=True is required (DESIGN.md §4.9)"
+        )
+
+
+def _sync_aggregate(engine, aggregator, grads, weights=None):
+    """Sync-round server aggregation over the worker-stacked gradient tree:
+    the GAR when a robust aggregator is configured, else the (flat-buffer)
+    mean — weighted when client weights are set (mean only)."""
+    if _robust(aggregator):
+        return aggregator.combine_stacked(grads)
+    if engine is not None and weights is None:
+        return _flat_sync_mean(engine, grads)
+    return _weighted_mean_axis0(grads, weights)
+
+
+def _uplink_faults(faults, key, trees, ids, n):
+    """Compressed-round payload faults on the worker-stacked diff tree:
+    Byzantine attacks rewrite their rows; dropped rows zero (Δ̂_i = 0 is the
+    carry-row substitution — the server's anchor h_i stands in)."""
+    if faults is None:
+        return trees
+    if faults.attack == "drop":
+        return fault_lib.zero_rows(trees, faults.byz_mask(ids, n))
+    return fault_lib.inject(faults, key, trees, ids, n)
+
+
+def _sync_faults(faults, key, trees, ids, n):
+    """Sync-round payload faults: Byzantine attacks apply (liars lie on
+    dense rounds too); ``drop`` does not — the sync round is the rendezvous
+    every client attends (DESIGN.md §4.9 ledger rules)."""
+    if faults is None:
+        return trees
+    return fault_lib.inject(faults, key, trees, ids, n)
+
+
+def _uplink_bits_scale(faults, n) -> float:
+    """Fraction of the fleet whose compressed upload actually arrived: the
+    ledger books only real uploads, so drop rounds cost (n−f)/n of ζ_Q."""
+    if faults is not None and faults.attack == "drop":
+        return (n - faults.n_faulty(n)) / n
+    return 1.0
+
+
+def _carry_refresh(h_old, grads, faults, c_k, n):
+    """Next-round carry h: this round's local gradients — except dropped
+    rows on compressed rounds, whose upload the server never consumed: their
+    anchor must stay the last value both sides agree on (sync rounds are the
+    rendezvous where everyone refreshes)."""
+    if faults is None or faults.attack != "drop" or faults.n_faulty(n) == 0:
+        return grads
+    dm = faults.byz_mask(jnp.arange(n), n)
+    keep_old = jnp.logical_and(jnp.logical_not(c_k), dm)
+    return jax.tree.map(
+        lambda ho, gn: jnp.where(
+            keep_old.reshape((n,) + (1,) * (gn.ndim - 1)),
+            ho.astype(gn.dtype), gn,
+        ),
+        h_old, grads,
+    )
+
+
+# ---------------------------------------------------------------------------
 # MARINA — Algorithm 1
 # ---------------------------------------------------------------------------
 
@@ -265,7 +384,11 @@ class Marina:
     online LM setting, the round's large batch, matching Alg. 3 line 8 c_k=1).
 
     ``carry=True`` enables single-backprop lookahead rounds; ``down_*`` add
-    the compressed downlink — see the module docstring for both contracts."""
+    the compressed downlink — see the module docstring for both contracts.
+    ``aggregator`` swaps the server mean for a Byzantine-robust GAR
+    (:class:`repro.core.aggregators.ServerAggregator`); ``faults`` injects
+    per-round client faults (:class:`repro.core.faults.FaultSpec`) — both
+    default off and leave every honest path untouched (DESIGN.md §4.9)."""
 
     grad_fn: GradFn
     compressor: Compressor
@@ -275,9 +398,12 @@ class Marina:
     carry: bool = False
     down_compressor: Compressor | None = None
     down_engine: FlatEngine | None = None
+    aggregator: Any = None  # ServerAggregator | None (DESIGN.md §4.9)
+    faults: Any = None      # FaultSpec | None
 
     def __post_init__(self):
         _check_downlink_config(self)
+        _check_robust_config(self)
 
     def init(self, params: PyTree, batches: PyTree) -> MarinaState:
         grads = _per_worker_grads(self.grad_fn, params, batches)
@@ -299,22 +425,25 @@ class Marina:
         n = jax.tree.leaves(batches)[0].shape[0]
         k_bern, k_q = jax.random.split(key)
         c_k = jax.random.bernoulli(k_bern, self.p)
+        k_f = jax.random.fold_in(key, _FAULT_FOLD)
+        ids = jnp.arange(n)
 
         x_old = state.params
         x_new = tree_axpy(-self.gamma, state.g, x_old)  # Alg.1 line 7
 
         def sync_branch(_):
             grads = _per_worker_grads(self.grad_fn, x_new, batches)
-            if self.engine is not None:
-                return _flat_sync_mean(self.engine, grads)
-            return tree_mean_axis0(grads)
+            grads = _sync_faults(self.faults, k_f, grads, ids, n)
+            return _sync_aggregate(self.engine, self.aggregator, grads)
 
         def compressed_branch(_):
             g_new = _per_worker_grads(self.grad_fn, x_new, batches)
             g_prev = _per_worker_grads(self.grad_fn, x_old, batches)
             diffs = tree_sub(g_new, g_prev)
+            diffs = _uplink_faults(self.faults, k_f, diffs, ids, n)
             delta = _compressed_delta(
-                self.compressor, self.engine, k_q, diffs, state.params, n
+                self.compressor, self.engine, k_q, diffs, state.params, n,
+                self.aggregator,
             )
             delta = _down_roundtrip(
                 self.down_compressor, self.down_engine,
@@ -327,6 +456,9 @@ class Marina:
         d = tree_dim(state.params)
         bits_dense = jnp.asarray(32.0 * d)
         bits_q = _round_bits(self.compressor, self.engine, state.params, n)
+        up_scale = _uplink_bits_scale(self.faults, n)
+        if up_scale != 1.0:
+            bits_q = bits_q * up_scale
         down_q = _down_round_bits(
             self.down_compressor, self.down_engine, state.params, d
         )
@@ -345,45 +477,60 @@ class Marina:
         k_bern, k_q = jax.random.split(key)
         c_k = jax.random.bernoulli(k_bern, self.p)
         k_down = jax.random.fold_in(key, _DOWN_FOLD)
+        k_f = jax.random.fold_in(key, _FAULT_FOLD)
+        ids = jnp.arange(n)
         d = tree_dim(state.params)
 
         # the ONE backprop of the round, shared by both branches: state.params
         # is already the evaluation point x^{k+1} (lookahead state).
         grads = _per_worker_grads(self.grad_fn, state.params, batches)
+        # h keeps the HONEST local gradients (a Byzantine client lies on the
+        # wire, not to itself; a dropped client's row is pinned by
+        # _carry_refresh) — only the uplinked payloads are faulted.
+        h_new = _carry_refresh(state.h, grads, self.faults, c_k, n)
 
         if self.engine is not None:
             lay = self.engine.layout
             x2d = pack(lay, state.params)
 
             def sync_branch(_):
+                g_up = _sync_faults(self.faults, k_f, grads, ids, n)
                 return self.engine.fused_sync(
-                    pack_stacked(lay, grads), x2d, self.gamma
+                    pack_stacked(lay, g_up), x2d, self.gamma,
+                    aggregator=self.aggregator,
                 )
 
             def compressed_branch(_):
                 # subtract-and-pack stays in tree form until here so XLA can
                 # fuse it into the sampler's ζ-sized gather (a packed h would
                 # force an (n, nblk, B) materialization every round)
-                diffs = pack_stacked(lay, tree_sub(grads, state.h))
+                diffs = _uplink_faults(
+                    self.faults, k_f, tree_sub(grads, state.h), ids, n
+                )
                 return self.engine.fused_round(
-                    k_q, diffs, n, state.g, x2d, self.gamma,
+                    k_q, pack_stacked(lay, diffs), n, state.g, x2d, self.gamma,
                     down=self.down_engine, down_key=k_down,
+                    aggregator=self.aggregator,
                 )
 
             g2d, x_new2d = jax.lax.cond(c_k, sync_branch, compressed_branch, None)
             new_state = MarinaState(
                 params=unpack(lay, x_new2d), g=g2d, step=state.step + 1,
-                h=grads,
+                h=h_new,
             )
             gnorm = tree_norm(g2d)
         else:
             def sync_branch(_):
-                return tree_mean_axis0(grads)
+                g_up = _sync_faults(self.faults, k_f, grads, ids, n)
+                return _sync_aggregate(None, self.aggregator, g_up)
 
             def compressed_branch(_):
-                diffs = tree_sub(grads, state.h)
+                diffs = _uplink_faults(
+                    self.faults, k_f, tree_sub(grads, state.h), ids, n
+                )
                 delta = _compressed_delta(
-                    self.compressor, None, k_q, diffs, state.params, n
+                    self.compressor, None, k_q, diffs, state.params, n,
+                    self.aggregator,
                 )
                 delta = _down_roundtrip(
                     self.down_compressor, self.down_engine, k_down, delta,
@@ -394,12 +541,15 @@ class Marina:
             g_next = jax.lax.cond(c_k, sync_branch, compressed_branch, None)
             x_next = tree_axpy(-self.gamma, g_next, state.params)
             new_state = MarinaState(
-                params=x_next, g=g_next, step=state.step + 1, h=grads
+                params=x_next, g=g_next, step=state.step + 1, h=h_new
             )
             gnorm = tree_norm(g_next)
 
         bits_dense = jnp.asarray(32.0 * d)
         bits_q = _round_bits(self.compressor, self.engine, state.params, n)
+        up_scale = _uplink_bits_scale(self.faults, n)
+        if up_scale != 1.0:
+            bits_q = bits_q * up_scale
         down_q = _down_round_bits(
             self.down_compressor, self.down_engine, state.params, d
         )
@@ -453,9 +603,12 @@ class VRMarina:
     carry: bool = False
     down_compressor: Compressor | None = None
     down_engine: FlatEngine | None = None
+    aggregator: Any = None  # ServerAggregator | None (DESIGN.md §4.9)
+    faults: Any = None      # FaultSpec | None
 
     def __post_init__(self):
         _check_downlink_config(self)
+        _check_robust_config(self)
 
     def init(self, params: PyTree, full_batches: PyTree) -> MarinaState:
         grads = _per_worker_grads(self.full_grad_fn, params, full_batches)
@@ -475,23 +628,26 @@ class VRMarina:
         n = jax.tree.leaves(full_batches)[0].shape[0]
         k_bern, k_q = jax.random.split(key)
         c_k = jax.random.bernoulli(k_bern, self.p)
+        k_f = jax.random.fold_in(key, _FAULT_FOLD)
+        ids = jnp.arange(n)
 
         x_old = state.params
         x_new = tree_axpy(-self.gamma, state.g, x_old)
 
         def sync_branch(_):
             grads = _per_worker_grads(self.full_grad_fn, x_new, full_batches)
-            if self.engine is not None:
-                return _flat_sync_mean(self.engine, grads)
-            return tree_mean_axis0(grads)
+            grads = _sync_faults(self.faults, k_f, grads, ids, n)
+            return _sync_aggregate(self.engine, self.aggregator, grads)
 
         def compressed_branch(_):
             # Alg. 2 line 8: same minibatch at x^{k+1} and x^k.
             g_new = _per_worker_grads(self.mb_grad_fn, x_new, mb_batches)
             g_prev = _per_worker_grads(self.mb_grad_fn, x_old, mb_batches)
             diffs = tree_sub(g_new, g_prev)
+            diffs = _uplink_faults(self.faults, k_f, diffs, ids, n)
             delta = _compressed_delta(
-                self.compressor, self.engine, k_q, diffs, state.params, n
+                self.compressor, self.engine, k_q, diffs, state.params, n,
+                self.aggregator,
             )
             delta = _down_roundtrip(
                 self.down_compressor, self.down_engine,
@@ -504,6 +660,10 @@ class VRMarina:
         d = tree_dim(state.params)
         m_full = jax.tree.leaves(full_batches)[0].shape[1]
         b_prime = jax.tree.leaves(mb_batches)[0].shape[1]
+        bits_q = _round_bits(self.compressor, self.engine, state.params, n)
+        up_scale = _uplink_bits_scale(self.faults, n)
+        if up_scale != 1.0:
+            bits_q = bits_q * up_scale
         down_q = _down_round_bits(
             self.down_compressor, self.down_engine, state.params, d
         )
@@ -512,7 +672,7 @@ class VRMarina:
             bits_per_worker=jnp.where(
                 c_k,
                 jnp.asarray(32.0 * d),
-                _round_bits(self.compressor, self.engine, state.params, n),
+                bits_q,
             ),
             sync_round=c_k.astype(jnp.int32),
             oracle_calls=jnp.where(c_k, float(m_full), 2.0 * b_prime),
@@ -525,6 +685,8 @@ class VRMarina:
         k_bern, k_q = jax.random.split(key)
         c_k = jax.random.bernoulli(k_bern, self.p)
         k_down = jax.random.fold_in(key, _DOWN_FOLD)
+        k_f = jax.random.fold_in(key, _FAULT_FOLD)
+        ids = jnp.arange(n)
         d = tree_dim(state.params)
 
         if self.engine is not None:
@@ -538,8 +700,10 @@ class VRMarina:
                 grads = _per_worker_grads(
                     self.full_grad_fn, state.params, full_batches
                 )
+                g_up = _sync_faults(self.faults, k_f, grads, ids, n)
                 g2d, x_new2d = self.engine.fused_sync(
-                    pack_stacked(lay, grads), x2d, self.gamma
+                    pack_stacked(lay, g_up), x2d, self.gamma,
+                    aggregator=self.aggregator,
                 )
                 return g2d, x_new2d, grads
 
@@ -547,10 +711,13 @@ class VRMarina:
                 grads = _per_worker_grads(
                     self.mb_grad_fn, state.params, mb_batches
                 )
-                diffs = pack_stacked(lay, tree_sub(grads, state.h))
+                diffs = _uplink_faults(
+                    self.faults, k_f, tree_sub(grads, state.h), ids, n
+                )
                 g2d, x_new2d = self.engine.fused_round(
-                    k_q, diffs, n, state.g, x2d, self.gamma,
+                    k_q, pack_stacked(lay, diffs), n, state.g, x2d, self.gamma,
                     down=self.down_engine, down_key=k_down,
+                    aggregator=self.aggregator,
                 )
                 return g2d, x_new2d, grads
 
@@ -559,7 +726,7 @@ class VRMarina:
             )
             new_state = MarinaState(
                 params=unpack(lay, x_new2d), g=g2d, step=state.step + 1,
-                h=h_new,
+                h=_carry_refresh(state.h, h_new, self.faults, c_k, n),
             )
             gnorm = tree_norm(g2d)
         else:
@@ -567,15 +734,19 @@ class VRMarina:
                 grads = _per_worker_grads(
                     self.full_grad_fn, state.params, full_batches
                 )
-                return tree_mean_axis0(grads), grads
+                g_up = _sync_faults(self.faults, k_f, grads, ids, n)
+                return _sync_aggregate(None, self.aggregator, g_up), grads
 
             def compressed_branch(_):
                 grads = _per_worker_grads(
                     self.mb_grad_fn, state.params, mb_batches
                 )
-                diffs = tree_sub(grads, state.h)
+                diffs = _uplink_faults(
+                    self.faults, k_f, tree_sub(grads, state.h), ids, n
+                )
                 delta = _compressed_delta(
-                    self.compressor, None, k_q, diffs, state.params, n
+                    self.compressor, None, k_q, diffs, state.params, n,
+                    self.aggregator,
                 )
                 delta = _down_roundtrip(
                     self.down_compressor, self.down_engine, k_down, delta,
@@ -588,12 +759,18 @@ class VRMarina:
             )
             x_next = tree_axpy(-self.gamma, g_next, state.params)
             new_state = MarinaState(
-                params=x_next, g=g_next, step=state.step + 1, h=h_new
+                params=x_next, g=g_next,
+                step=state.step + 1,
+                h=_carry_refresh(state.h, h_new, self.faults, c_k, n),
             )
             gnorm = tree_norm(g_next)
 
         m_full = jax.tree.leaves(full_batches)[0].shape[1]
         b_prime = jax.tree.leaves(mb_batches)[0].shape[1]
+        bits_q = _round_bits(self.compressor, self.engine, state.params, n)
+        up_scale = _uplink_bits_scale(self.faults, n)
+        if up_scale != 1.0:
+            bits_q = bits_q * up_scale
         down_q = _down_round_bits(
             self.down_compressor, self.down_engine, state.params, d
         )
@@ -602,7 +779,7 @@ class VRMarina:
             bits_per_worker=jnp.where(
                 c_k,
                 jnp.asarray(32.0 * d),
-                _round_bits(self.compressor, self.engine, state.params, n),
+                bits_q,
             ),
             sync_round=c_k.astype(jnp.int32),
             oracle_calls=jnp.where(c_k, float(m_full), 1.0 * b_prime),
@@ -660,6 +837,26 @@ def _scale_rows(trees: PyTree, row_scale: jax.Array) -> PyTree:
     )
 
 
+def _pp_carry_refresh(h_old, sel, grads_sel, faults, n):
+    """PP server carry-table refresh: h.at[sel] ← ∇f_i for the sampled rows —
+    except dropped clients, whose row the server never received, so their
+    anchor h_i stays what the server last saw (matching the Δ̂_i = 0 uplink
+    substitution of :func:`repro.core.faults.zero_rows`)."""
+    if faults is None or faults.attack != "drop" or faults.n_faulty(n) == 0:
+        return jax.tree.map(
+            lambda ht, gt: ht.at[sel].set(gt.astype(ht.dtype)),
+            h_old, grads_sel,
+        )
+    keep_old = faults.byz_mask(sel, n)
+
+    def refresh(ht, gt):
+        mask = keep_old.reshape((-1,) + (1,) * (gt.ndim - 1))
+        vals = jnp.where(mask, ht[sel].astype(ht.dtype), gt.astype(ht.dtype))
+        return ht.at[sel].set(vals)
+
+    return jax.tree.map(refresh, h_old, grads_sel)
+
+
 @dataclasses.dataclass
 class PPMarina:
     """Algorithm 4 plus the federated-scenario extensions (DESIGN.md §4.8):
@@ -703,9 +900,12 @@ class PPMarina:
     replace: bool = True
     weights: "jax.Array | None" = None
     carry: bool = False
+    aggregator: Any = None  # ServerAggregator | None (DESIGN.md §4.9)
+    faults: Any = None      # FaultSpec | None
 
     def __post_init__(self):
         _check_downlink_config(self)
+        _check_robust_config(self)
         if self.weights is not None:
             # accept raw sample counts: normalize to Σw_i = 1 so the
             # weighted objective is a convex combination of the f_i
@@ -744,15 +944,17 @@ class PPMarina:
         n = jax.tree.leaves(batches)[0].shape[0]
         k_bern, k_sel, k_q = jax.random.split(key, 3)
         c_k = jax.random.bernoulli(k_bern, self.p)
+        k_f = jax.random.fold_in(key, _FAULT_FOLD)
 
         x_old = state.params
         x_new = tree_axpy(-self.gamma, state.g, x_old)
 
         def sync_branch(_):
             grads = _per_worker_grads(self.grad_fn, x_new, batches)
-            if self.engine is not None and self.weights is None:
-                return _flat_sync_mean(self.engine, grads)
-            return _weighted_mean_axis0(grads, self.weights)
+            grads = _sync_faults(self.faults, k_f, grads, jnp.arange(n), n)
+            return _sync_aggregate(
+                self.engine, self.aggregator, grads, self.weights
+            )
 
         def compressed_branch(_):
             sel = self._cohort(k_sel, n)
@@ -764,8 +966,10 @@ class PPMarina:
             ws = self._cohort_diff_scale(sel, n)
             if ws is not None:
                 diffs = _scale_rows(diffs, ws)
+            diffs = _uplink_faults(self.faults, k_f, diffs, sel, n)
             delta = _compressed_delta(
-                self.compressor, self.engine, k_q, diffs, state.params, self.r
+                self.compressor, self.engine, k_q, diffs, state.params, self.r,
+                self.aggregator,
             )
             delta = _down_roundtrip(
                 self.down_compressor, self.down_engine,
@@ -786,6 +990,16 @@ class PPMarina:
         k_bern, k_sel, k_q = jax.random.split(key, 3)
         c_k = jax.random.bernoulli(k_bern, self.p)
         k_down = jax.random.fold_in(key, _DOWN_FOLD)
+        k_f = jax.random.fold_in(key, _FAULT_FOLD)
+
+        # the cohort is hoisted out of the cond so the ledger can count the
+        # uploads that actually happened (dropped sampled clients don't bill)
+        sel = self._cohort(k_sel, n)
+        uploaded = None
+        if self.faults is not None and self.faults.attack == "drop":
+            uploaded = self.r - jnp.sum(
+                self.faults.byz_mask(sel, n).astype(jnp.int32)
+            )
 
         if self.engine is not None:
             lay = self.engine.layout
@@ -793,18 +1007,21 @@ class PPMarina:
 
             def sync_branch(_):
                 grads = _per_worker_grads(self.grad_fn, state.params, batches)
+                g_up = _sync_faults(self.faults, k_f, grads, jnp.arange(n), n)
                 if self.weights is None:
                     g2d, x_new2d = self.engine.fused_sync(
-                        pack_stacked(lay, grads), x2d, self.gamma
+                        pack_stacked(lay, g_up), x2d, self.gamma,
+                        aggregator=self.aggregator,
                     )
                 else:
-                    g_new = _weighted_mean_axis0(grads, self.weights)
+                    g_new = _weighted_mean_axis0(g_up, self.weights)
                     g2d = pack(lay, g_new)
                     x_new2d = x2d - self.gamma * g2d
+                # the table keeps the HONEST gradients — liars lie on the
+                # wire, the simulated clients still know their own state
                 return g2d, x_new2d, grads
 
             def compressed_branch(_):
-                sel = self._cohort(k_sel, n)
                 sel_batches = jax.tree.map(lambda t: t[sel], batches)
                 grads_sel = _per_worker_grads(
                     self.grad_fn, state.params, sel_batches
@@ -814,15 +1031,16 @@ class PPMarina:
                 ws = self._cohort_diff_scale(sel, n)
                 if ws is not None:
                     diffs = _scale_rows(diffs, ws)
+                diffs = _uplink_faults(self.faults, k_f, diffs, sel, n)
                 # the table keeps the RAW client gradients (weights apply at
-                # aggregation): refresh only the sampled rows.
-                h_new = jax.tree.map(
-                    lambda ht, gt: ht.at[sel].set(gt.astype(ht.dtype)),
-                    state.h, grads_sel,
+                # aggregation): refresh only the sampled rows — minus drops.
+                h_new = _pp_carry_refresh(
+                    state.h, sel, grads_sel, self.faults, n
                 )
                 g2d, x_new2d = self.engine.fused_round(
                     k_q, pack_stacked(lay, diffs), self.r, state.g, x2d,
                     self.gamma, down=self.down_engine, down_key=k_down,
+                    aggregator=self.aggregator,
                 )
                 return g2d, x_new2d, h_new
 
@@ -837,10 +1055,13 @@ class PPMarina:
         else:
             def sync_branch(_):
                 grads = _per_worker_grads(self.grad_fn, state.params, batches)
-                return _weighted_mean_axis0(grads, self.weights), grads
+                g_up = _sync_faults(self.faults, k_f, grads, jnp.arange(n), n)
+                return (
+                    _sync_aggregate(None, self.aggregator, g_up, self.weights),
+                    grads,
+                )
 
             def compressed_branch(_):
-                sel = self._cohort(k_sel, n)
                 sel_batches = jax.tree.map(lambda t: t[sel], batches)
                 grads_sel = _per_worker_grads(
                     self.grad_fn, state.params, sel_batches
@@ -850,12 +1071,13 @@ class PPMarina:
                 ws = self._cohort_diff_scale(sel, n)
                 if ws is not None:
                     diffs = _scale_rows(diffs, ws)
-                h_new = jax.tree.map(
-                    lambda ht, gt: ht.at[sel].set(gt.astype(ht.dtype)),
-                    state.h, grads_sel,
+                diffs = _uplink_faults(self.faults, k_f, diffs, sel, n)
+                h_new = _pp_carry_refresh(
+                    state.h, sel, grads_sel, self.faults, n
                 )
                 delta = _compressed_delta(
-                    self.compressor, None, k_q, diffs, state.params, self.r
+                    self.compressor, None, k_q, diffs, state.params, self.r,
+                    self.aggregator,
                 )
                 delta = _down_roundtrip(
                     self.down_compressor, self.down_engine, k_down, delta,
@@ -872,20 +1094,24 @@ class PPMarina:
             )
             gnorm = tree_norm(g_next)
 
-        metrics = self._metrics(c_k, gnorm, state.params, n, oracle_factor=1.0)
+        metrics = self._metrics(
+            c_k, gnorm, state.params, n, oracle_factor=1.0, uploaded=uploaded
+        )
         return new_state, metrics
 
-    def _metrics(self, c_k, gnorm, like, n, oracle_factor):
+    def _metrics(self, c_k, gnorm, like, n, oracle_factor, uploaded=None):
         """Fleet-total uplink from the wire helpers, divided by n: sync
-        rounds cost n·32d, compressed rounds exactly r·ζ_Q (wire.py)."""
+        rounds cost n·32d, compressed rounds exactly r·ζ_Q (wire.py) — or
+        uploaded·ζ_Q when dropped cohort members never delivered theirs."""
         from . import wire
 
         d = tree_dim(like)
+        up = self.r if uploaded is None else uploaded
         bits_total = jnp.where(
             c_k,
             jnp.asarray(wire.pp_sync_total_bits(n, d)),
             wire.pp_uplink_total_bits(
-                self.r, _round_bits(self.compressor, self.engine, like, self.r)
+                up, _round_bits(self.compressor, self.engine, like, self.r)
             ),
         )
         down_q = _down_round_bits(

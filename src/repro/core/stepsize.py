@@ -112,6 +112,59 @@ def diana_gamma(L: float, omega: float, n: int) -> float:
     return 1.0 / (L * (1.0 + 2.0 * (1.0 + omega) * math.sqrt(omega / n) + 2.0 * omega / n))
 
 
+# ---------------------------------------------------------------------------
+# Robust-aggregation γ degradation (DESIGN.md §4.9)
+#
+# Swapping the server mean for a GAR costs variance averaging: the 1/n factor
+# in Thm 2.1's drift term came from averaging n independent compressor
+# noises, and a robust rule only averages over the values it keeps. The
+# standard heuristic (e.g. El-Mhamdi et al.'s (f, λ)-resilient-averaging
+# view) is to substitute the rule's *effective averaging count* n_eff for n:
+# trimmed mean keeps n − 2f values per coordinate, the median one (odd n) or
+# two (even n), Krum forwards a single row, norm-clip still averages all n
+# (clipping only shrinks rows). This is a conservative bookkeeping device,
+# not a theorem from the paper — MARINA's analysis leaves Byzantine rates to
+# future work — so the helpers are explicitly labeled heuristic.
+# ---------------------------------------------------------------------------
+
+
+def robust_n_eff(rule: str, n: int, f: int = 0) -> int:
+    """Effective averaging count n_eff of a GAR over n workers.
+
+    mean/norm_clip: n (all rows enter the average); trimmed_mean: n − 2f
+    (needs n > 2f); coordinate_median: 1 for odd n, 2 for even (the kept
+    middle values); krum: 1 (a single selected row)."""
+    if rule in ("mean", "norm_clip"):
+        return n
+    if rule == "trimmed_mean":
+        if n <= 2 * f:
+            raise ValueError(f"trimmed_mean needs n > 2f (n={n}, f={f})")
+        return n - 2 * f
+    if rule == "coordinate_median":
+        return 2 if n % 2 == 0 else 1
+    if rule == "krum":
+        return 1
+    raise ValueError(f"unknown GAR rule {rule!r}")
+
+
+def robust_marina_gamma(
+    L: float, omega: float, p: float, n: int, rule: str, f: int = 0
+) -> float:
+    """Thm 2.1 γ with the GAR's n_eff substituted for n — the robust-rate
+    degradation: γ_robust = 1/(L(1 + sqrt((1−p)ω/(p·n_eff)))). Heuristic
+    (see the section comment); equals :func:`marina_gamma` for the mean."""
+    return marina_gamma(L, omega, p, robust_n_eff(rule, n, f))
+
+
+def robust_pp_marina_gamma(
+    L: float, omega: float, p: float, r: int, rule: str, f: int = 0
+) -> float:
+    """Thm 4.1 γ with n_eff(r) substituted for the cohort size r — the
+    PP-MARINA robust degradation (the GAR acts on the r uploaded rows).
+    Heuristic; equals :func:`pp_marina_gamma` for the mean."""
+    return pp_marina_gamma(L, omega, p, robust_n_eff(rule, r, f))
+
+
 def marina_iteration_bound(
     delta0: float, L: float, omega: float, p: float, n: int, eps: float
 ) -> float:

@@ -21,6 +21,9 @@ Variants (one per wire family, mirroring the PR-3 kernel suite):
 * ``qsgd_epilogue``    — packed block-QSGD payloads: worker-indexed int8
                          dequant accumulation (input bandwidth stays int8).
 * ``natural_epilogue`` — natural-compression payloads.
+* ``trimmed_delta_epilogue`` / ``trimmed_sync_epilogue`` — Byzantine-robust
+  rounds (DESIGN.md §4.9): coordinate-wise trimmed mean / median over the n
+  worker rows via a sort-free rank selection, fused with the same update.
 
 Every entry point takes ``backend="auto"`` and routes through
 ``repro.core.flat.resolve_backend``; the pure-jnp oracles live in
@@ -128,6 +131,128 @@ def mean_epilogue(gbufs, x2d, gamma: float, *, backend: str = "auto"):
         ],
         interpret=(backend == "pallas_interpret"),
     )(gbufs, x2d)
+
+
+# ---------------------------------------------------------------------------
+# Robust (GAR) epilogues: coordinate-wise trimmed mean / median over the n
+# worker rows, fused with the g/x update (DESIGN.md §4.9). Sort-free k-th
+# statistic: stable ranks (rank_i = #{v_j < v_i} + index tie-break) are a
+# permutation of 0..n−1 per coordinate, so "keep ranks in [lo, hi)" selects
+# exactly hi−lo values — O(n²·B) compares per tile, no data movement.
+# ---------------------------------------------------------------------------
+
+
+def _trimmed_rows(vals, n, lo, hi):
+    """In-kernel trimmed mean of (n, 1, B) worker values → (1, B) f32.
+    Accumulation order matches ``trimmed_mean_rows_ref`` loop for loop."""
+    x = vals.astype(jnp.float32)
+    iota = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
+
+    def rank_body(j, acc):
+        vj = jax.lax.dynamic_index_in_dim(x, j, 0, keepdims=True)
+        lt = (vj < x).astype(jnp.int32)
+        tie = (vj == x).astype(jnp.int32) * (iota > j).astype(jnp.int32)
+        return acc + lt + tie
+
+    ranks = jax.lax.fori_loop(
+        0, n, rank_body, jnp.zeros(x.shape, jnp.int32)
+    )
+    keep = (ranks >= lo) & (ranks < hi)
+
+    def sum_body(j, acc):
+        # select, don't multiply: 0·NaN is NaN and trimming must drop
+        # non-finite payload rows (they rank 0 — see the ref docstring)
+        vj = jax.lax.dynamic_index_in_dim(x, j, 0, keepdims=False)
+        kj = jax.lax.dynamic_index_in_dim(keep, j, 0, keepdims=False)
+        return acc + jnp.where(kj, vj, 0.0)
+
+    acc = jax.lax.fori_loop(
+        0, n, sum_body, jnp.zeros(x.shape[1:], jnp.float32)
+    )
+    return acc / (hi - lo)
+
+
+def _trimmed_delta_kernel(
+    b_ref, g_ref, x_ref, gout_ref, xout_ref, *, n, lo, hi, gamma
+):
+    g_new = g_ref[...].astype(jnp.float32) + _trimmed_rows(
+        b_ref[...], n, lo, hi
+    )
+    gout_ref[...] = g_new
+    xout_ref[...] = _apply(g_new, x_ref[...], gamma).astype(xout_ref.dtype)
+
+
+def trimmed_delta_epilogue(bufs, g2d, x2d, gamma: float, lo: int, hi: int, *,
+                           backend: str = "auto"):
+    """Robust compressed-round epilogue: per-worker dense payload rows
+    (n, nblk, B) + g + x → (g' = g + trimmed mean, x' = x − γ·g') in one
+    sweep. ``(lo, hi)`` is the rank keep-window: (f, n−f) for the f-trimmed
+    mean; the median bounds make the same kernel the coordinate-wise median."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        return _ref.trimmed_delta_epilogue_ref(bufs, g2d, x2d, float(gamma),
+                                               lo, hi)
+    n, nblk, B = bufs.shape
+    return pl.pallas_call(
+        functools.partial(
+            _trimmed_delta_kernel, n=n, lo=int(lo), hi=int(hi),
+            gamma=float(gamma),
+        ),
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((n, 1, B), lambda i: (0, i, 0)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblk, B), jnp.float32),
+            jax.ShapeDtypeStruct((nblk, B), x2d.dtype),
+        ],
+        interpret=(backend == "pallas_interpret"),
+    )(bufs, g2d, x2d)
+
+
+def _trimmed_sync_kernel(
+    b_ref, x_ref, gout_ref, xout_ref, *, n, lo, hi, gamma
+):
+    g_new = _trimmed_rows(b_ref[...], n, lo, hi)
+    gout_ref[...] = g_new
+    xout_ref[...] = _apply(g_new, x_ref[...], gamma).astype(xout_ref.dtype)
+
+
+def trimmed_sync_epilogue(bufs, x2d, gamma: float, lo: int, hi: int, *,
+                          backend: str = "auto"):
+    """Robust sync-round epilogue: (n, nblk, B) packed worker gradients + x →
+    (g' = trimmed mean over workers, x' = x − γ·g') — ``mean_epilogue`` with
+    the worker mean replaced by the rank-window trimmed mean."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        return _ref.trimmed_sync_epilogue_ref(bufs, x2d, float(gamma), lo, hi)
+    n, nblk, B = bufs.shape
+    return pl.pallas_call(
+        functools.partial(
+            _trimmed_sync_kernel, n=n, lo=int(lo), hi=int(hi),
+            gamma=float(gamma),
+        ),
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((n, 1, B), lambda i: (0, i, 0)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblk, B), jnp.float32),
+            jax.ShapeDtypeStruct((nblk, B), x2d.dtype),
+        ],
+        interpret=(backend == "pallas_interpret"),
+    )(bufs, x2d)
 
 
 # ---------------------------------------------------------------------------

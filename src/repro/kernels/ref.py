@@ -400,6 +400,92 @@ def natural_epilogue_ref(codes, scales, g2d, x2d, gamma: float):
     return delta_epilogue_ref(delta, g2d, x2d, gamma)
 
 
+def row_ranks_ref(rows: jax.Array) -> jax.Array:
+    """Stable coordinate-wise ranks over the worker axis (sort-free).
+
+    rows: (n, ...) — returns int32 ranks of the same shape where
+    ``rank_i = #{j: v_j < v_i} + #{j < i: v_j == v_i}``. Ties break by worker
+    index, so per coordinate the ranks are always a permutation of 0..n−1 —
+    the k-th order statistic is the row with rank k, no sort needed. O(n²)
+    compares per coordinate, accumulated worker by worker (fori_loop) in the
+    exact order of the Pallas kernel; integer sums are order-free, so the
+    ranks are bit-identical across backends."""
+    n = rows.shape[0]
+    x = rows.astype(jnp.float32)
+    tail = (1,) * (x.ndim - 1)
+    after_j = lambda j: (
+        jnp.arange(n, dtype=jnp.int32) > j
+    ).astype(jnp.int32).reshape((n,) + tail)
+
+    def body(j, acc):
+        vj = jax.lax.dynamic_index_in_dim(x, j, 0, keepdims=True)   # (1, ...)
+        lt = (vj < x).astype(jnp.int32)
+        tie = (vj == x).astype(jnp.int32) * after_j(j)
+        return acc + lt + tie
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros(x.shape, jnp.int32))
+
+
+def trimmed_mean_rows_ref(rows: jax.Array, lo: int, hi: int) -> jax.Array:
+    """Coordinate-wise trimmed mean over the worker axis.
+
+    rows: (n, ...) → (...) f32: per coordinate, sort the n worker values and
+    average the window ``[lo, hi)``. ``lo = f, hi = n−f`` is the f-trimmed
+    mean; the coordinate-wise median is the trim-bound special case
+    ``((n−1)//2, (n−1)//2+1)`` for odd n and ``(n//2−1, n//2+1)`` (mean of
+    the two middle values) for even n.
+
+    Implemented as an odd-even transposition sorting network over the
+    (small) worker axis — ~n²/2 vectorized compare-exchanges, kept as a
+    flat min/max DAG over per-row slices so XLA fuses it without buffer
+    copies. That beats both the O(n²) sequential rank sweep of the Pallas
+    kernel's formulation (``epilogue._trimmed_rows``) and ``jnp.sort``
+    (whose CPU lowering is pathologically slow on a tiny sort axis with
+    millions of batch columns) by an order of magnitude, and is
+    *value-identical* to the kernel: the stable ranks are a permutation
+    per coordinate, so the kept multiset is exactly the sorted window.
+    NaN payloads are substituted with +inf before the network (min/max
+    would propagate a NaN into BOTH lanes of a compare-exchange), sending
+    them to the END, while under the rank semantics they rank 0 (every
+    NaN comparison is false) — both land OUTSIDE every real trim window
+    (``trim_bounds`` only emits lo ≥ 1 whenever hi < n), so the NaN
+    exclusion matches; with f NaN rows the survivors are the honest
+    values minus their f smallest. (More NaN rows than the trim width
+    exceeds the rule's breakdown point — only the failure shape differs
+    between the two formulations there.) Float sums may differ from the
+    kernel by accumulation order — cross-backend tests compare with
+    allclose, as for every other epilogue."""
+    n = rows.shape[0]
+    assert 0 <= lo < hi <= n, f"trim window [{lo}, {hi}) invalid for n={n}"
+    x = rows.astype(jnp.float32)
+    x = jnp.where(jnp.isnan(x), jnp.inf, x)
+    r = [x[i] for i in range(n)]
+    for stage in range(n):
+        for i in range(stage % 2, n - 1, 2):
+            a, b = r[i], r[i + 1]
+            r[i] = jnp.minimum(a, b)
+            r[i + 1] = jnp.maximum(a, b)
+    acc = r[lo]
+    for i in range(lo + 1, hi):
+        acc = acc + r[i]
+    return acc / (hi - lo)
+
+
+def trimmed_delta_epilogue_ref(bufs, g2d, x2d, gamma: float, lo: int, hi: int):
+    """Robust compressed-round epilogue: g' = g + trimmed_mean(worker rows),
+    x' = x − γ·g'. bufs: (n, nblk, B) per-worker dense payload rows."""
+    delta = trimmed_mean_rows_ref(bufs, lo, hi)
+    return delta_epilogue_ref(delta, g2d, x2d, gamma)
+
+
+def trimmed_sync_epilogue_ref(bufs, x2d, gamma: float, lo: int, hi: int):
+    """Robust sync-round epilogue: g' = trimmed_mean of the packed worker
+    gradient buffers (replacing the worker mean), x' = x − γ·g'."""
+    g_new = trimmed_mean_rows_ref(bufs, lo, hi)
+    x_new = (-gamma) * g_new + x2d.astype(jnp.float32)
+    return g_new, x_new.astype(x2d.dtype)
+
+
 def randk_qsgd_workers_ref(
     x3d: jax.Array, seeds: jax.Array, kb: int, scale: float, s: int
 ):

@@ -73,6 +73,13 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ArchConfig
 from repro.core import flat as flat_engine
+from repro.core.marina import (
+    _FAULT_FOLD,
+    _carry_refresh,
+    _pp_carry_refresh,
+    _sync_faults,
+    _uplink_faults,
+)
 from repro.kernels import ref as kref
 from repro.models import init_cache, init_params, lm_loss, decode_step as model_decode, prefill as model_prefill
 from repro.launch import sharding as shd
@@ -318,6 +325,54 @@ def _compress_decompress_mean(
     return jax.tree.unflatten(treedef, outs)
 
 
+def _decompress_worker_rows(
+    key: jax.Array,
+    diffs: PyTree,
+    n: int,
+    packed_payload: bool = False,
+    backend: str = "auto",
+    compression: str = "randk",
+    qsgd_s: int = 15,
+) -> PyTree:
+    """Per-worker DENSE payload rows — what the server actually received
+    from each client, before any aggregation (DESIGN.md §4.9).
+
+    Robust GARs cannot ride the fused dequantize-and-mean of
+    :func:`_compress_decompress_mean` (trim/median/Krum/clip don't commute
+    with the mean), so the robust wire decodes every worker's payload to a
+    dense (n, *leaf) row stack and hands it to
+    ``ServerAggregator.combine_stacked``. Key discipline is IDENTICAL to the
+    mean path (one split per leaf, same per-leaf draw shapes), so the honest
+    rows carry exactly the values the fused path would have averaged. The
+    dense row stack costs the fused path's memory saving — the price of
+    robustness, recorded in DESIGN.md §4.9. ``permk`` is refused upstream
+    (coordinates partition across workers; nothing to aggregate robustly)."""
+    leaves, treedef = jax.tree.flatten(diffs)
+    keys = jax.random.split(key, len(leaves))
+    rows = []
+    for lk, leaf in zip(keys, leaves):
+        shape = leaf.shape[1:]
+        L = int(shape[-1])
+        R = int(np.prod(shape[:-1])) if len(shape) > 1 else 1
+        kb = max(1, L // 128)
+        scale = L / kb
+        x = leaf.reshape(n, R, L)
+        if compression == "qsgd":
+            q, norm = _qsgd_quantize_rows(lk, x, int(qsgd_s))
+            s = int(qsgd_s)
+            if packed_payload and s <= 7 and L % 8 == 0:
+                q = _nibble_roundtrip_rows(q)
+            dense = q.astype(jnp.float32) * (norm / s)
+        else:  # independent Block-RandK masks
+            idx = jax.random.randint(lk, (n, R, kb), 0, L, jnp.int32)
+            vals = _gather_along_last(x, idx, scale, backend)
+            dense = jax.vmap(
+                lambda v, i: _scatter_mean_last(v[None], i[None], L, backend)
+            )(vals, idx)
+        rows.append(dense.reshape((n,) + tuple(shape)))
+    return jax.tree.unflatten(treedef, rows)
+
+
 def _downlink_roundtrip(
     key: jax.Array,
     delta: PyTree,
@@ -419,6 +474,8 @@ def build_train_steps(
     downlink: str = "none",
     downlink_s: int = 7,
     participation: "tuple[int, str] | None" = None,
+    aggregator: "Any | None" = None,
+    faults: "Any | None" = None,
 ):
     """Returns (fns, abstract_args) for sync_step / compressed_step / train_step.
 
@@ -467,8 +524,39 @@ def build_train_steps(
       ``PPMarina`` for ``downlink="none"``; with a downlink the key
       discipline follows the mesh convention (split from k_q), not core's
       step-key fold — see DESIGN.md §4.8.
+    * aggregator       — a ``repro.core.ServerAggregator``: swap the server
+      mean for a robust GAR (DESIGN.md §4.9). Sync rounds aggregate the
+      worker gradient stack with ``combine_stacked``; compressed rounds
+      decode per-worker dense payload rows (``_decompress_worker_rows``, or
+      the flat engine's ``worker_dense`` on the flat-PP path) and aggregate
+      those. Refused with compression="permk" and with shared_mask (the
+      payloads aren't per-coordinate comparable across workers).
+    * faults           — a ``repro.core.FaultSpec``: per-round client fault
+      injection on the uplinked payloads (sign_flip / mean_shift / nan /
+      garbage / drop — see repro.core.faults). ``drop`` requires
+      ``grad_carry`` (the carried h row substitutes the missing upload, and
+      dropped rows skip their h refresh). Sync-round garbage noise draws
+      from a fixed key (the mesh sync steps are keyless by design).
     """
     cfg = dataclasses.replace(arch.model, remat=remat)
+    robust = aggregator is not None and aggregator.robust
+    if robust:
+        if compression == "permk":
+            raise ValueError(
+                f"robust rule {aggregator.rule!r} is undefined on the permk "
+                "wire: workers partition the coordinates (DESIGN.md §4.9)"
+            )
+        if shared_mask:
+            raise ValueError(
+                f"robust rule {aggregator.rule!r} is undefined with "
+                "shared_mask: one correlated mask spans the whole fleet "
+                "(DESIGN.md §4.9)"
+            )
+    if faults is not None and faults.attack == "drop" and not grad_carry:
+        raise ValueError(
+            "faults='drop' substitutes the carried h row for the missing "
+            "upload — grad_carry=True is required (DESIGN.md §4.9)"
+        )
     waxes = worker_axis_names(multi_pod, arch.worker_axes)
     fsdp = arch.fsdp and not any(a in waxes for a in ("data",))
     n = num_workers(mesh, multi_pod, arch.worker_axes)
@@ -548,19 +636,54 @@ def build_train_steps(
             return flat_worker_mean(grads)
         return jax.tree.map(lambda t: jnp.mean(t, axis=0), grads)
 
+    def worker_aggregate(grads):
+        """Sync-round server aggregation: the GAR on the worker gradient
+        stack when a robust aggregator is configured, else the mean."""
+        if robust:
+            g_new = aggregator.combine_stacked(grads)
+            return jax.tree.map(
+                jax.lax.with_sharding_constraint, g_new, p_shard
+            )
+        return worker_mean(grads)
+
+    # mesh sync steps are keyless by design, so the (rare) sync-round
+    # garbage noise draws from a fixed key — every other attack is
+    # deterministic and unaffected
+    sync_fault_key = jax.random.PRNGKey(_FAULT_FOLD)
+
+    def sync_uplink(grads):
+        return _sync_faults(faults, sync_fault_key, grads, jnp.arange(n), n)
+
     def descend(params, g):
         return jax.tree.map(
             lambda w, gg: w - gamma * gg.astype(w.dtype), params, g
         )
 
+    def robust_delta(key, diffs, rows_n):
+        """Robust compressed-round delta: per-worker dense payload rows →
+        GAR → parameter-sharding pins (replaces the fused mean)."""
+        rows = _decompress_worker_rows(
+            key, diffs, rows_n, packed_payload=packed_payload,
+            backend=compression_backend, compression=compression,
+            qsgd_s=qsgd_s,
+        )
+        delta = aggregator.combine_stacked(rows)
+        return jax.tree.map(
+            jax.lax.with_sharding_constraint, delta, p_shard
+        )
+
     def compressed_delta(key, diffs):
         k_up, k_down = jax.random.split(key)
-        delta = _compress_decompress_mean(
-            k_up if downlink != "none" else key, diffs, n, mesh, waxes,
-            shared_mask, packed_payload, staged_payload,
-            out_shardings=p_shard, backend=compression_backend,
-            compression=compression, qsgd_s=qsgd_s,
-        )
+        k_up = k_up if downlink != "none" else key
+        if robust:
+            delta = robust_delta(k_up, diffs, n)
+        else:
+            delta = _compress_decompress_mean(
+                k_up, diffs, n, mesh, waxes,
+                shared_mask, packed_payload, staged_payload,
+                out_shardings=p_shard, backend=compression_backend,
+                compression=compression, qsgd_s=qsgd_s,
+            )
         return _downlink_roundtrip(
             k_down, delta, downlink, downlink_s, packed_payload
         )
@@ -572,14 +695,23 @@ def build_train_steps(
         def sync_step(params, g, h, batch):
             x_new = descend(params, g)
             grads = worker_grads(x_new, batch)
-            return x_new, worker_mean(grads), grads
+            # h keeps the HONEST gradients: liars lie on the wire, the
+            # simulated clients still know their own state
+            return x_new, worker_aggregate(sync_uplink(grads)), grads
 
         def compressed_step(params, g, h, batch, key):
             x_new = descend(params, g)
             g_plus = worker_grads(x_new, batch)
             diffs = jax.tree.map(jnp.subtract, g_plus, h)
+            diffs = _uplink_faults(
+                faults, jax.random.fold_in(key, _FAULT_FOLD), diffs,
+                jnp.arange(n), n,
+            )
             g_new = jax.tree.map(jnp.add, g, compressed_delta(key, diffs))
-            return x_new, g_new, g_plus
+            # dropped rows keep their old h (the server never heard from
+            # them); c_k=False — this IS the compressed branch
+            h_new = _carry_refresh(h, g_plus, faults, jnp.asarray(False), n)
+            return x_new, g_new, h_new
 
         def train_step(params, g, h, batch, key):
             k_b, k_q = jax.random.split(key)
@@ -594,13 +726,17 @@ def build_train_steps(
         def sync_step(params, g, batch):
             x_new = descend(params, g)
             grads = worker_grads(x_new, batch)
-            return x_new, worker_mean(grads)
+            return x_new, worker_aggregate(sync_uplink(grads))
 
         def compressed_step(params, g, batch, key):
             x_new = descend(params, g)
             g_plus = worker_grads(x_new, batch)
             g_minus = worker_grads(params, batch)
             diffs = jax.tree.map(jnp.subtract, g_plus, g_minus)
+            diffs = _uplink_faults(
+                faults, jax.random.fold_in(key, _FAULT_FOLD), diffs,
+                jnp.arange(n), n,
+            )
             g_new = jax.tree.map(jnp.add, g, compressed_delta(key, diffs))
             return x_new, g_new
 
@@ -684,17 +820,21 @@ def build_train_steps(
             return jax.tree.map(lambda t: t[sel], wg)
 
         def pp_delta(key, diffs):
-            """(1/r)·Σ Q(Δ_i) over the r cohort payload rows + downlink."""
+            """(1/r)·Σ Q(Δ_i) over the r cohort payload rows (the GAR over
+            the cohort's decoded rows when robust) + downlink."""
             k_up, k_down = jax.random.split(key)
             k_up = k_up if downlink != "none" else key
             if flat_pp:
                 bufs = flat_engine.pack_stacked(pp_eng.layout, diffs)
                 delta = flat_engine.unpack(
-                    pp_eng.layout, pp_eng.aggregate(k_up, bufs, r_part)
+                    pp_eng.layout,
+                    pp_eng.aggregate(k_up, bufs, r_part, aggregator),
                 )
                 delta = jax.tree.map(
                     jax.lax.with_sharding_constraint, delta, p_shard
                 )
+            elif robust:
+                delta = robust_delta(k_up, diffs, r_part)
             else:
                 # sharded fallback: the per-leaf staged wire on the r-row
                 # payload stack (cohort rows replicate — r·ζ, not n·ζ)
@@ -716,10 +856,14 @@ def build_train_steps(
                 cg = cohort_grads(x_new, batch, sel)
                 h_sel = jax.tree.map(lambda t: t[sel], h)
                 diffs = jax.tree.map(jnp.subtract, cg, h_sel)
-                g_new = jax.tree.map(jnp.add, g, pp_delta(key, diffs))
-                h_new = jax.tree.map(
-                    lambda ht, ct: ht.at[sel].set(ct.astype(ht.dtype)), h, cg
+                diffs = _uplink_faults(
+                    faults, jax.random.fold_in(key, _FAULT_FOLD), diffs,
+                    sel, n,
                 )
+                g_new = jax.tree.map(jnp.add, g, pp_delta(key, diffs))
+                # sampled rows refresh — except dropped clients, whose row
+                # the server never received (core _pp_carry_refresh)
+                h_new = _pp_carry_refresh(h, sel, cg, faults, n)
                 return x_new, g_new, h_new
 
             def train_step(params, g, h, batch, key, sel):
@@ -737,6 +881,10 @@ def build_train_steps(
                 g_plus = cohort_grads(x_new, batch, sel)
                 g_minus = cohort_grads(params, batch, sel)
                 diffs = jax.tree.map(jnp.subtract, g_plus, g_minus)
+                diffs = _uplink_faults(
+                    faults, jax.random.fold_in(key, _FAULT_FOLD), diffs,
+                    sel, n,
+                )
                 g_new = jax.tree.map(jnp.add, g, pp_delta(key, diffs))
                 return x_new, g_new
 
@@ -805,15 +953,19 @@ def build_train_steps(
         param_shapes=param_shapes,
         param_shardings=p_shard,
         fns=fns,
-        meta=(
-            {
-                "participation": participation,
-                "cohort_compute": cohort_compute,
-                "flat_pp": flat_pp,
-            }
-            if pp
-            else {}
-        ),
+        meta={
+            **(
+                {
+                    "participation": participation,
+                    "cohort_compute": cohort_compute,
+                    "flat_pp": flat_pp,
+                }
+                if pp
+                else {}
+            ),
+            **({"aggregator": aggregator.rule} if robust else {}),
+            **({"faults": faults.attack} if faults is not None else {}),
+        },
     )
 
 

@@ -40,9 +40,11 @@ from repro.core import (
     BlockQSGD,
     BlockRandK,
     CorrelatedCompressor,
+    FaultSpec,
     Marina,
     PermK,
     PPMarina,
+    ServerAggregator,
     VRMarina,
     diana_alpha,
     make_compressor,
@@ -99,6 +101,21 @@ class TrainConfig:
     # tree path it is a make_compressor name.
     downlink: Optional[str] = None
     downlink_kwargs: dict = dataclasses.field(default_factory=dict)
+    # Byzantine-robust server aggregation + client fault injection
+    # (DESIGN.md §4.9). aggregator is a GAR name (repro.core.aggregators.RULES)
+    # with aggregator_f the assumed Byzantine count; faults/faults_frac/
+    # faults_scale build a FaultSpec. marina-family only; "mean"/"none" keep
+    # the seed trajectory bit-identical.
+    aggregator: str = "mean"
+    aggregator_f: int = 0
+    faults: str = "none"
+    faults_frac: float = 0.0
+    faults_scale: float = 1.0
+    # Non-finite round guard: when a step produces any NaN/inf in the new
+    # state (params or estimator), revert the whole state to the pre-step
+    # value and count the round in TrainMetrics.skipped_cum. Bits are still
+    # booked (the wire traffic happened; the server just refused the update).
+    nonfinite_guard: bool = True
 
 
 @dataclasses.dataclass
@@ -110,6 +127,21 @@ class TrainMetrics:
     down_cum: list = dataclasses.field(default_factory=list)
     oracle_cum: list = dataclasses.field(default_factory=list)
     wall: list = dataclasses.field(default_factory=list)
+    skipped_cum: list = dataclasses.field(default_factory=list)
+
+
+def _state_finite(state: PyTree) -> jax.Array:
+    """Scalar bool: every floating leaf of the optimizer state (params,
+    estimator g, carried h, …) is all-finite. The non-finite round guard's
+    predicate — one traced reduction, no host sync."""
+    checks = [
+        jnp.all(jnp.isfinite(leaf))
+        for leaf in jax.tree.leaves(state)
+        if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.inexact)
+    ]
+    if not checks:
+        return jnp.asarray(True)
+    return jnp.all(jnp.stack(checks))
 
 
 class Trainer:
@@ -197,6 +229,30 @@ class Trainer:
                 self.down_comp = make_compressor(train_cfg.downlink, **dkw)
 
         m = train_cfg.method
+        # robust aggregation / fault dials (DESIGN.md §4.9): None when the
+        # config is the honest default so the seed trajectory stays
+        # bit-identical (the optimizers also guarantee this for the explicit
+        # "mean"/"none" instances, but None skips the dial entirely).
+        agg = (
+            ServerAggregator(train_cfg.aggregator, f=train_cfg.aggregator_f)
+            if train_cfg.aggregator != "mean"
+            else None
+        )
+        fspec = (
+            FaultSpec(
+                train_cfg.faults,
+                frac=train_cfg.faults_frac,
+                scale=train_cfg.faults_scale,
+            )
+            if train_cfg.faults != "none"
+            else None
+        )
+        if (agg is not None or fspec is not None) and m not in (
+            "marina", "vr_marina", "pp_marina"
+        ):
+            raise ValueError(
+                f"aggregator/faults are marina-family dials, not {m!r}"
+            )
         if train_cfg.carry_grads and m not in (
             "marina", "vr_marina", "pp_marina"
         ):
@@ -214,6 +270,7 @@ class Trainer:
                 grad_fn, comp, train_cfg.gamma, p, self.engine,
                 carry=train_cfg.carry_grads,
                 down_compressor=self.down_comp, down_engine=self.down_engine,
+                aggregator=agg, faults=fspec,
             )
         elif m == "gd":
             from repro.core import make_gd
@@ -224,6 +281,7 @@ class Trainer:
                 grad_fn, grad_fn, comp, train_cfg.gamma, p, self.engine,
                 carry=train_cfg.carry_grads,
                 down_compressor=self.down_comp, down_engine=self.down_engine,
+                aggregator=agg, faults=fspec,
             )
         elif m == "pp_marina":
             self.method = PPMarina(
@@ -236,6 +294,7 @@ class Trainer:
                     else jnp.asarray(train_cfg.pp_weights, jnp.float32)
                 ),
                 carry=train_cfg.carry_grads,
+                aggregator=agg, faults=fspec,
             )
         elif m == "diana":
             alpha = train_cfg.diana_alpha
@@ -293,20 +352,40 @@ class Trainer:
         data pipeline is a pure function of (seed, step)), and the bits /
         down-bits / oracle ledgers accumulate in the carry — no per-step host
         sync. Returns the final carry and the last step's metrics.
+
+        With ``nonfinite_guard`` (the default), a step whose new state holds
+        any NaN/inf — e.g. a ``nan``-attack round hitting a mean aggregator —
+        is *skipped*: the whole state reverts to its pre-step value (one bad
+        round must not poison the MARINA recursion forever) and the skipped
+        ledger increments. Bits/oracle still accumulate: the traffic and the
+        compute happened; only the server-side update was refused.
         """
         base_key = jax.random.PRNGKey(self.tcfg.seed)
 
         def body(c, step):
-            state, bits, down, oracle = c
+            state, bits, down, oracle, skipped = c
             key = jax.random.fold_in(base_key, step)
             full_b = self._batches(step, self.tcfg.batch_per_worker)
             mb_b = self._batches(10**7 + step, self.tcfg.mb_per_worker)
-            state, met = self._step(state, key, full_b, mb_b)
+            new_state, met = self._step(state, key, full_b, mb_b)
+            if self.tcfg.nonfinite_guard:
+                ok = _state_finite(new_state)
+                # revert the ENTIRE state on a bad round — a finite-looking
+                # h/g paired with reverted params would desynchronize the
+                # estimator recursion.
+                new_state = jax.tree.map(
+                    lambda new, old: jnp.where(ok, new, old), new_state, state
+                )
+                met = met._replace(
+                    grad_est_norm=jnp.where(ok, met.grad_est_norm, 0.0)
+                )
+                skipped = skipped + jnp.where(ok, 0.0, 1.0)
             return (
-                state,
+                new_state,
                 bits + met.bits_per_worker,
                 down + met.down_bits,
                 oracle + met.oracle_calls,
+                skipped,
             ), met
 
         carry, mets = jax.lax.scan(body, carry, steps)
@@ -353,18 +432,22 @@ class Trainer:
         bits = 0.0
         down = 0.0
         oracle = 0.0
+        skipped = 0.0
         if tc.ckpt_dir:
             s = latest_step(tc.ckpt_dir)
             if s is not None:
                 # the communication/oracle ledgers resume WITH the state
                 # (which includes the carried h_i^k in carry mode): a restart
                 # that zeroes them silently shifts every resumed loss-vs-bits
-                # curve (the Fig. 1/2 x-axis) left.
+                # curve (the Fig. 1/2 x-axis) left. A corrupt file raises
+                # CheckpointCorruptionError from load_checkpoint — NOT caught
+                # by the KeyError format tiers below.
                 like = {
                     "state": state,
                     "bits": np.zeros((), np.float32),
                     "down": np.zeros((), np.float32),
                     "oracle": np.zeros((), np.float32),
+                    "skipped": np.zeros((), np.float32),
                 }
                 try:
                     ck = load_checkpoint(tc.ckpt_dir, s, like)
@@ -372,19 +455,29 @@ class Trainer:
                     bits = float(ck["bits"])
                     down = float(ck["down"])
                     oracle = float(ck["oracle"])
+                    skipped = float(ck["skipped"])
                 except KeyError:
                     try:
-                        # pre-downlink checkpoint: bits/oracle ledgers only.
-                        del like["down"]
+                        # pre-guard checkpoint: no skipped-rounds ledger.
+                        del like["skipped"]
                         ck = load_checkpoint(tc.ckpt_dir, s, like)
                         state = ck["state"]
                         bits = float(ck["bits"])
+                        down = float(ck["down"])
                         oracle = float(ck["oracle"])
                     except KeyError:
-                        # pre-ledger checkpoint (bare state tree): resume the
-                        # iterates and accept zeroed ledgers rather than
-                        # refuse the directory outright.
-                        state = load_checkpoint(tc.ckpt_dir, s, state)
+                        try:
+                            # pre-downlink checkpoint: bits/oracle only.
+                            del like["down"]
+                            ck = load_checkpoint(tc.ckpt_dir, s, like)
+                            state = ck["state"]
+                            bits = float(ck["bits"])
+                            oracle = float(ck["oracle"])
+                        except KeyError:
+                            # pre-ledger checkpoint (bare state tree): resume
+                            # the iterates and accept zeroed ledgers rather
+                            # than refuse the directory outright.
+                            state = load_checkpoint(tc.ckpt_dir, s, state)
                 start = s + 1
 
         # the chunk carry is donated; copy so self.params0 (aliased into the
@@ -409,22 +502,24 @@ class Trainer:
         hist.down_cum.append(down)
         hist.oracle_cum.append(oracle)
         hist.wall.append(time.time() - t0)
+        hist.skipped_cum.append(skipped)
 
         prev = start
         for bound, is_log, is_ckpt in self._boundaries(start):
             # one fused device dispatch for steps [prev, bound]; the bits /
-            # down-bits / oracle ledgers accumulate on device, read back once
-            # per chunk.
+            # down-bits / oracle / skipped ledgers accumulate on device, read
+            # back once per chunk.
             steps_arr = jnp.arange(prev, bound + 1, dtype=jnp.int32)
-            # three distinct zero buffers: the chunk carry is donated, and
-            # donating one buffer thrice is an XLA error
-            zeros = [jnp.zeros((), jnp.float32) for _ in range(3)]
-            (state, chunk_bits, chunk_down, chunk_oracle), met = (
+            # four distinct zero buffers: the chunk carry is donated, and
+            # donating one buffer several times is an XLA error
+            zeros = [jnp.zeros((), jnp.float32) for _ in range(4)]
+            (state, chunk_bits, chunk_down, chunk_oracle, chunk_skip), met = (
                 self._jitted_chunk((state, *zeros), steps_arr)
             )
             bits += float(chunk_bits)
             down += float(chunk_down)
             oracle += float(chunk_oracle)
+            skipped += float(chunk_skip)
             prev = bound + 1
 
             if is_log:
@@ -436,6 +531,7 @@ class Trainer:
                 hist.down_cum.append(down)
                 hist.oracle_cum.append(oracle)
                 hist.wall.append(time.time() - t0)
+                hist.skipped_cum.append(skipped)
             if is_ckpt:
                 save_checkpoint(
                     tc.ckpt_dir,
@@ -445,6 +541,7 @@ class Trainer:
                         "bits": np.float32(bits),
                         "down": np.float32(down),
                         "oracle": np.float32(oracle),
+                        "skipped": np.float32(skipped),
                     },
                 )
         return state, hist

@@ -1,0 +1,101 @@
+"""Checkpoint store: exact restore, content checksum, corruption errors.
+
+The npz store writes a CRC-32 content digest under the reserved
+``__checksum__`` entry; ``load_checkpoint`` verifies it (and the zip layer's
+own per-entry CRC) and raises :class:`CheckpointCorruptionError` — NOT a
+KeyError, so the trainer's old-format fallback tiers never swallow a corrupt
+file. Pre-checksum checkpoints (no digest entry) must keep loading.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointCorruptionError,
+    latest_step,
+    load_checkpoint,
+    save_checkpoint,
+)
+from repro.checkpoint import store
+
+
+def _tree():
+    return {
+        "w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "b": jnp.ones((5,), jnp.bfloat16) * 1.5,
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_roundtrip_exact(tmp_path):
+    d = str(tmp_path)
+    tree = _tree()
+    save_checkpoint(d, 3, tree)
+    assert latest_step(d) == 3
+    out = load_checkpoint(d, 3, jax.tree.map(jnp.zeros_like, tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_corrupt_byte_raises(tmp_path):
+    d = str(tmp_path)
+    path = save_checkpoint(d, 1, _tree())
+    blob = bytearray(open(path, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF
+    open(path, "wb").write(bytes(blob))
+    with pytest.raises(CheckpointCorruptionError, match="corrupt"):
+        load_checkpoint(d, 1, _tree())
+
+
+def test_truncated_file_raises(tmp_path):
+    d = str(tmp_path)
+    path = save_checkpoint(d, 1, _tree())
+    blob = open(path, "rb").read()
+    open(path, "wb").write(blob[: len(blob) // 3])
+    with pytest.raises(CheckpointCorruptionError, match="corrupt"):
+        load_checkpoint(d, 1, _tree())
+
+
+def test_digest_mismatch_raises(tmp_path):
+    """A file whose zip layer is intact but whose stored digest disagrees
+    with the content must still fail (guards against a stale/forged digest,
+    not just bit rot the zip CRC would catch)."""
+    d = str(tmp_path)
+    tree = _tree()
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    arrays = {}
+    for p, leaf in flat:
+        arr, tag = store._encode(np.asarray(leaf))
+        arrays[store._path_str(p) + (f"::{tag}" if tag else "")] = arr
+    arrays[store._CHECKSUM_KEY] = np.uint32(store._digest(arrays) ^ 0x1)
+    np.savez(os.path.join(d, "ckpt_00000002.npz"), **arrays)
+    with pytest.raises(CheckpointCorruptionError, match="checksum mismatch"):
+        load_checkpoint(d, 2, tree)
+
+
+def test_pre_checksum_checkpoint_still_loads(tmp_path):
+    d = str(tmp_path)
+    tree = _tree()
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    arrays = {}
+    for p, leaf in flat:
+        arr, tag = store._encode(np.asarray(leaf))
+        arrays[store._path_str(p) + (f"::{tag}" if tag else "")] = arr
+    np.savez(os.path.join(d, "ckpt_00000005.npz"), **arrays)  # no digest
+    out = load_checkpoint(d, 5, jax.tree.map(jnp.zeros_like, tree))
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
+
+
+def test_missing_leaf_stays_keyerror(tmp_path):
+    """Format-mismatch (a leaf the caller expects but the file lacks) must
+    stay a KeyError — the trainer's back-compat tiers dispatch on it."""
+    d = str(tmp_path)
+    save_checkpoint(d, 4, {"w": jnp.zeros((2,))})
+    with pytest.raises(KeyError):
+        load_checkpoint(d, 4, {"w": jnp.zeros((2,)), "extra": jnp.zeros(())})

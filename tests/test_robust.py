@@ -1,0 +1,357 @@
+"""Byzantine-robust aggregation + client fault injection (DESIGN.md §4.9).
+
+Covers the full robust stack at test scale:
+* the sort-free trimmed-mean / median rank semantics vs numpy sort oracles
+  (odd/even n, ties), and the NaN-exclusion property of the trim window;
+* the fused trimmed epilogue kernels vs the jnp refs (f32 + bf16, odd/even
+  n) under the repo's 1-ulp interpret-mode tolerance;
+* Krum / norm-clip behaviour under omniscient and garbage payloads;
+* fault-injection end-to-end: a NaN client poisons the plain mean's MARINA
+  recursion but not a trimmed aggregate; sign-flip at f=2/n=8 diverges the
+  mean while trimmed-mean still reaches stationarity;
+* dropped clients: carry-row substitution (stale h rows) and the exact
+  uploads-only bits ledger (drift guard vs an honest same-key run);
+* the robust-γ bookkeeping and the config refusals (GAR/wire compatibility);
+* the default dials ("mean" + "none") are bit-identical to the seed path;
+* the trainer's non-finite round guard (skipped_rounds ledger).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FaultSpec,
+    Marina,
+    PPMarina,
+    ServerAggregator,
+    make_compressor,
+    make_engine,
+    marina_gamma,
+    robust_marina_gamma,
+    robust_n_eff,
+    robust_pp_marina_gamma,
+)
+from repro.core.marina import pp_sample_cohort
+from repro.core.problems import (
+    binclass_full_grad,
+    binclass_smoothness,
+    make_synthetic_binclass,
+    nonconvex_binclass_loss,
+    BinClassData,
+)
+from repro.kernels import epilogue as epi
+from repro.kernels import ref as kref
+
+N, M, D = 8, 32, 20
+
+
+@pytest.fixture(scope="module")
+def problem():
+    data = make_synthetic_binclass(jax.random.PRNGKey(0), N, M, D)
+    L = binclass_smoothness(data)
+    return data, L
+
+
+def _grad_sqnorm(x, data):
+    flat = BinClassData(a=data.a.reshape(-1, D), y=data.y.reshape(-1))
+    g = binclass_full_grad(x, flat)
+    return float(jnp.sum(g**2))
+
+
+def _run(method, state, data, steps, seed=0):
+    step = jax.jit(method.step)
+    mets = []
+    for k in range(steps):
+        state, met = step(state, jax.random.PRNGKey(seed * 100_000 + k), data)
+        mets.append(met)
+    return state, mets
+
+
+# ---------------------------------------------------------------------------
+# Rank semantics: sort-free trim/median vs numpy sort
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,f", [(4, 1), (5, 1), (7, 2), (8, 3)])
+def test_trimmed_mean_matches_numpy_sort(n, f):
+    rows = jax.random.normal(jax.random.PRNGKey(n), (n, 3, 17))
+    # inject exact ties so the stable tie-break matters
+    rows = rows.at[1].set(rows[0])
+    got = np.asarray(kref.trimmed_mean_rows_ref(rows, f, n - f))
+    want = np.sort(np.asarray(rows), axis=0)[f : n - f].mean(axis=0)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("n", [3, 4, 5, 6])
+def test_coordinate_median_matches_numpy(n):
+    rows = jax.random.normal(jax.random.PRNGKey(10 + n), (n, 31))
+    lo, hi = ServerAggregator("coordinate_median").trim_bounds(n)
+    got = np.asarray(kref.trimmed_mean_rows_ref(rows, lo, hi))
+    np.testing.assert_allclose(
+        got, np.median(np.asarray(rows), axis=0), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_nan_rows_are_trimmed():
+    """NaN payloads rank 0 (all NaN comparisons are false), so any window
+    with lo >= 1 drops them; the survivors are the honest values minus their
+    f smallest — and the accumulation must select, not multiply (0·NaN)."""
+    n, f = 8, 2
+    rows = jax.random.normal(jax.random.PRNGKey(3), (n, 50))
+    rows = rows.at[:f].set(jnp.nan)
+    got = np.asarray(kref.trimmed_mean_rows_ref(rows, f, n - f))
+    assert np.isfinite(got).all()
+    honest = np.sort(np.asarray(rows)[f:], axis=0)
+    np.testing.assert_allclose(got, honest[f:].mean(axis=0), rtol=1e-6,
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Fused epilogue kernels vs refs (f32 + bf16, odd/even n)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [4, 5])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_trimmed_epilogues_ref_vs_interpret(n, dtype):
+    nblk, B = 3, 128
+    k = jax.random.PRNGKey(17)
+    bufs = jax.random.normal(k, (n, nblk, B), dtype)
+    g = jax.random.normal(jax.random.fold_in(k, 1), (nblk, B))
+    x = jax.random.normal(jax.random.fold_in(k, 2), (nblk, B)).astype(dtype)
+    lo, hi = 1, n - 1
+    for fn, args in (
+        (epi.trimmed_delta_epilogue, (bufs, g, x, 0.07, lo, hi)),
+        (epi.trimmed_sync_epilogue, (bufs, x, 0.07, lo, hi)),
+    ):
+        g_r, x_r = fn(*args, backend="ref")
+        g_p, x_p = fn(*args, backend="pallas_interpret")
+        # 1-ulp FMA-fusion tolerance, as for the non-robust epilogues
+        np.testing.assert_allclose(np.asarray(g_r), np.asarray(g_p),
+                                   rtol=1e-5, atol=1e-6)
+        assert x_r.dtype == x.dtype == x_p.dtype
+        np.testing.assert_allclose(
+            np.asarray(x_r, np.float32), np.asarray(x_p, np.float32),
+            rtol=(2e-2 if dtype == jnp.bfloat16 else 1e-5), atol=1e-6,
+        )
+        # the kernel must agree with the plain (n,)-rows reference too
+        g_direct = kref.trimmed_mean_rows_ref(bufs, lo, hi)
+        base = g + g_direct if fn is epi.trimmed_delta_epilogue else g_direct
+        np.testing.assert_allclose(np.asarray(g_r), np.asarray(base),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Krum / norm-clip
+# ---------------------------------------------------------------------------
+
+
+def test_krum_picks_honest_row_under_mean_shift():
+    n, f = 8, 2
+    honest = jax.random.normal(jax.random.PRNGKey(5), (n - f, 40)) + 2.0
+    byz = jnp.tile(-4.0 * honest.mean(0, keepdims=True), (f, 1))
+    rows = jnp.concatenate([byz, honest], axis=0)
+    out = np.asarray(ServerAggregator("krum", f=f).combine_rows(rows))
+    assert any(
+        np.array_equal(out, np.asarray(honest[i])) for i in range(n - f)
+    ), "krum must select an honest row under the omniscient attack"
+
+
+def test_krum_never_selects_nan_row():
+    rows = jax.random.normal(jax.random.PRNGKey(6), (6, 10))
+    rows = rows.at[0].set(jnp.nan)
+    out = np.asarray(ServerAggregator("krum", f=1).combine_rows(rows))
+    assert np.isfinite(out).all()
+
+
+def test_norm_clip_bounds_and_sanitizes():
+    rows = jax.random.normal(jax.random.PRNGKey(7), (6, 30))
+    rows = rows.at[0].mul(1e4)          # garbage-scale row
+    rows = rows.at[1].set(jnp.inf)      # unrepairable row -> scale 0
+    agg = ServerAggregator("norm_clip", clip_tau=2.0)
+    out = np.asarray(agg.combine_rows(rows))
+    assert np.isfinite(out).all()
+    assert np.linalg.norm(out) <= 2.0 + 1e-5  # mean of rows each clipped to τ
+
+
+# ---------------------------------------------------------------------------
+# Fault injection end-to-end on the optimizers
+# ---------------------------------------------------------------------------
+
+
+def _marina(problem, aggregator=None, faults=None, gamma=None, carry=False):
+    data, L = problem
+    comp = make_compressor("qsgd", s=7)
+    p = comp.default_p(D)
+    g = gamma if gamma is not None else marina_gamma(L, comp.omega(D), p, N)
+    return Marina(
+        grad_fn=jax.grad(nonconvex_binclass_loss), compressor=comp,
+        gamma=g, p=p, aggregator=aggregator, faults=faults, carry=carry,
+    ), data
+
+
+def test_nan_attack_poisons_mean_but_not_trimmed(problem):
+    m, data = _marina(problem, faults=FaultSpec("nan", frac=0.25))
+    st, _ = _run(m, m.init(jnp.zeros((D,)), data), data, 8)
+    assert not np.isfinite(np.asarray(st.params)).all(), (
+        "a NaN client must poison the unprotected mean recursion"
+    )
+    m2, _ = _marina(problem, aggregator=ServerAggregator("trimmed_mean", f=2),
+                    faults=FaultSpec("nan", frac=0.25))
+    st2, _ = _run(m2, m2.init(jnp.zeros((D,)), data), data, 8)
+    assert np.isfinite(np.asarray(st2.params)).all()
+
+
+def test_sign_flip_trimmed_converges_mean_degrades(problem):
+    """f = 2 of n = 8 sign-flipped clients at scale 10: the trimmed mean
+    stays near the attack-free loss (bounded trim bias — the flipped rows
+    are rank extremes and fall outside the keep window) while the plain
+    mean is steered far uphill. Loss, not grad-norm: the attacked mean run
+    performs gradient *ascent*, and a maximum is also a stationary point."""
+    data, L = problem
+    flat = BinClassData(a=data.a.reshape(-1, D), y=data.y.reshape(-1))
+    loss = lambda st: float(nonconvex_binclass_loss(st.params, flat))
+    faults = FaultSpec("sign_flip", frac=0.25, scale=10.0)
+    gamma, p = 0.05, 0.5
+
+    def fit(aggregator=None, flt=None):
+        m, _ = _marina(problem, aggregator=aggregator, faults=flt,
+                       gamma=gamma)
+        m = dataclasses.replace(m, p=p)
+        st, _ = _run(m, m.init(jnp.zeros((D,)), data), data, 300)
+        return loss(st)
+
+    l_free = fit()
+    l_rob = fit(aggregator=ServerAggregator("trimmed_mean", f=2), flt=faults)
+    l_avg = fit(flt=faults)
+    assert l_rob < l_free + 0.1, (
+        f"trimmed under attack should stay near attack-free "
+        f"({l_rob} vs {l_free})"
+    )
+    assert l_avg > l_rob + 0.15, (
+        f"plain mean should visibly degrade (mean {l_avg} vs robust {l_rob})"
+    )
+
+
+def test_default_dials_are_bit_identical(problem):
+    m0, data = _marina(problem)
+    m1, _ = _marina(problem, aggregator=ServerAggregator("mean"),
+                    faults=FaultSpec("none", frac=0.0))
+    st0, _ = _run(m0, m0.init(jnp.zeros((D,)), data), data, 25)
+    st1, _ = _run(m1, m1.init(jnp.zeros((D,)), data), data, 25)
+    np.testing.assert_array_equal(np.asarray(st0.params),
+                                  np.asarray(st1.params))
+
+
+# ---------------------------------------------------------------------------
+# Dropped clients: carry substitution + uploads-only ledger
+# ---------------------------------------------------------------------------
+
+
+def test_pp_drop_ledger_books_actual_uploads(problem):
+    """Drift guard: with dropped clients the per-round uplink bits must equal
+    the honest run's bits scaled by uploaded/r on every compressed round
+    (same keys → same cohorts), and match a from-scratch cohort recount."""
+    data, _ = problem
+    comp = make_compressor("qsgd", s=7)
+    faults = FaultSpec("drop", frac=0.25)  # ids {0, 1} of 8 never upload
+    kw = dict(grad_fn=jax.grad(nonconvex_binclass_loss), compressor=comp,
+              gamma=0.05, p=0.3, r=4, carry=True)
+    m_drop = PPMarina(**kw, faults=faults)
+    m_ok = PPMarina(**kw)
+    st_d, mets_d = _run(m_drop, m_drop.init(jnp.zeros((D,)), data), data, 12)
+    st_o, mets_o = _run(m_ok, m_ok.init(jnp.zeros((D,)), data), data, 12)
+    f = faults.n_faulty(N)
+    for k, (md, mo) in enumerate(zip(mets_d, mets_o)):
+        key = jax.random.PRNGKey(k)
+        _, k_sel, _ = jax.random.split(key, 3)
+        sel = pp_sample_cohort(k_sel, N, 4, True)
+        uploaded = 4 - int(np.sum(np.asarray(sel) < f))
+        if int(md.sync_round):
+            assert float(md.bits_per_worker) == float(mo.bits_per_worker)
+        else:
+            np.testing.assert_allclose(
+                float(md.bits_per_worker),
+                float(mo.bits_per_worker) * uploaded / 4.0, rtol=1e-6,
+            )
+
+
+def test_pp_drop_keeps_stale_carry_rows(problem):
+    data, _ = problem
+    faults = FaultSpec("drop", frac=0.25)
+    m = PPMarina(grad_fn=jax.grad(nonconvex_binclass_loss),
+                 compressor=make_compressor("qsgd", s=7),
+                 gamma=0.05, p=0.0,  # no sync rendezvous: drops never refresh
+                 r=4, carry=True, faults=faults)
+    st0 = m.init(jnp.zeros((D,)), data)
+    h0 = np.asarray(st0.h)
+    st, _ = _run(m, st0, data, 10)
+    h = np.asarray(st.h)
+    f = faults.n_faulty(N)
+    np.testing.assert_array_equal(h[:f], h0[:f])  # dropped rows stay stale
+    assert not np.array_equal(h[f:], h0[f:])      # honest rows refreshed
+
+
+# ---------------------------------------------------------------------------
+# Config refusals + γ bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_drop_requires_carry(problem):
+    with pytest.raises(ValueError, match="carry"):
+        _marina(problem, faults=FaultSpec("drop", frac=0.25), carry=False)
+
+
+def test_robust_refuses_partitioning_wire():
+    params = jnp.zeros((256,))
+    eng = make_engine(params, block=128, backend="ref", sampler="permk")
+    with pytest.raises(ValueError):
+        Marina(grad_fn=lambda x, b: x, compressor=make_compressor("qsgd", s=7),
+               gamma=0.1, p=0.5, engine=eng,
+               aggregator=ServerAggregator("trimmed_mean", f=1))
+
+
+def test_robust_n_eff_and_gamma():
+    assert robust_n_eff("mean", 8) == 8
+    assert robust_n_eff("trimmed_mean", 8, 2) == 4
+    assert robust_n_eff("coordinate_median", 7) == 1
+    assert robust_n_eff("coordinate_median", 8) == 2
+    assert robust_n_eff("krum", 8, 2) == 1
+    with pytest.raises(ValueError):
+        robust_n_eff("trimmed_mean", 4, 2)
+    g_plain = marina_gamma(1.0, 3.0, 0.1, 8)
+    g_rob = robust_marina_gamma(1.0, 3.0, 0.1, 8, "trimmed_mean", f=2)
+    assert 0 < g_rob <= g_plain
+    assert 0 < robust_pp_marina_gamma(1.0, 3.0, 0.1, 4, "coordinate_median")
+
+
+# ---------------------------------------------------------------------------
+# Trainer non-finite round guard
+# ---------------------------------------------------------------------------
+
+
+def test_trainer_nan_guard_skips_poisoned_rounds():
+    from repro.models import init_params
+    from repro.models.config import ModelConfig, dense_stack
+    from repro.train import TrainConfig, Trainer
+
+    cfg = ModelConfig(
+        name="rg", arch_type="dense", d_model=32, num_heads=2, num_kv_heads=2,
+        d_ff=64, vocab_size=64, segments=dense_stack(1),
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tc = TrainConfig(method="marina", compressor="qsgd",
+                     comp_kwargs={"s": 7}, gamma=0.02, n_workers=4,
+                     steps=8, log_every=4, faults="nan", faults_frac=0.25)
+    st, hist = Trainer(cfg, tc, params).run()
+    assert hist.skipped_cum[-1] > 0, "NaN rounds must be counted as skipped"
+    assert np.isfinite(hist.loss[-1]), "the guard must keep the state finite"
+    for leaf in jax.tree.leaves(st.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+    # guard refusal: robust dials are marina-family only
+    with pytest.raises(ValueError, match="marina-family"):
+        Trainer(cfg, dataclasses.replace(tc, method="dcgd"), params)

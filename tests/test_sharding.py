@@ -213,7 +213,34 @@ _SUBPROCESS_PROG = textwrap.dedent(
         assert not bool(row_nz[0]) and not bool(row_nz[2]), (
             "unsampled carry rows must stay stale"
         )
-    print("SUBPROCESS_OK", err, frac, frac3, frac4, nz5 / tot, nz6 / tot)
+    # Byzantine-robust round (DESIGN.md 4.9): trimmed-mean GAR over the
+    # per-worker decoded payload rows with one NaN-payload client — the
+    # delta must stay finite (a plain mean would be NaN everywhere) and
+    # dense like the honest qsgd wire.
+    from repro.core import ServerAggregator, FaultSpec
+    bundle_rb = build_train_steps(
+        arch, mesh, multi_pod=False, global_batch=8, seq_len=64,
+        gamma=0.1, dtype=jnp.float32, compression="qsgd", qsgd_s=7,
+        aggregator=ServerAggregator("trimmed_mean", f=1),
+        faults=FaultSpec("nan", frac=0.25),
+    )
+    assert bundle_rb.meta["aggregator"] == "trimmed_mean"
+    assert bundle_rb.meta["faults"] == "nan"
+    params7 = init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    g_init7 = jax.tree.map(lambda t: jnp.full_like(t, 0.01), params7)
+    g_keep7 = jax.tree.map(jnp.array, g_init7)
+    with bundle_rb.mesh:
+        fn, _ = bundle_rb.fns["compressed_step"]
+        x7, g7 = fn(params7, g_init7, batch, jax.random.PRNGKey(2))
+    delta7 = [a - b for a, b in zip(jax.tree.leaves(g7), jax.tree.leaves(g_keep7))]
+    assert all(bool(jnp.all(jnp.isfinite(t))) for t in delta7), (
+        "robust round leaked the NaN payload into the estimator"
+    )
+    nz7 = sum(int(jnp.sum(jnp.abs(t) > 1e-12)) for t in delta7)
+    frac7 = nz7 / tot
+    assert frac7 > 2 * frac, f"robust qsgd delta {frac7} not dense"
+
+    print("SUBPROCESS_OK", err, frac, frac3, frac4, nz5 / tot, nz6 / tot, frac7)
     """
 )
 
