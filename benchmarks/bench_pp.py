@@ -183,7 +183,7 @@ _ROUNDTIME_PROG = textwrap.dedent(
     import jax, jax.numpy as jnp
     from repro.configs import get_arch
     from repro.launch.distributed import build_train_steps, BLOCK, KB
-    from repro.launch.mesh import make_federated_mesh
+    from repro.launch.topology import make_federated_mesh
     from repro.models import reduced, init_params
     from repro.core import wire
 

@@ -15,6 +15,11 @@
                sync vs compressed, two-backprop vs grad-carry + fused
                epilogue, dense vs compressed downlink; writes
                BENCH_roundstep.json — the CI regression gate)
+    §7       → bench_roundstep_mp      (2-process jax.distributed smoke row:
+               the compressed carry round across a real process boundary vs
+               the 1-process fake-device mesh, with the transport's
+               bits-by-tier ledger; merges a `multiproc` section into
+               BENCH_roundstep.json)
     §4.9     → bench_robust            (Byzantine adversarial grid: attack ×
                GAR × faulty fraction on PP-MARINA + robust round-time rows;
                merges into BENCH_pp.json — gated by scripts/check_robust.py)
@@ -611,9 +616,144 @@ def bench_roundstep(quick=False):
     }
     print(f"# geomean carry speedup: {geo:.2f}x", file=sys.stderr)
     path = os.path.join(os.path.dirname(__file__), "..", "BENCH_roundstep.json")
+    if os.path.exists(path):
+        # read-merge-update: the multiproc smoke section (bench_roundstep_mp)
+        # survives a roundstep re-run and vice versa
+        with open(path) as f:
+            prev = json.load(f)
+        if "multiproc" in prev:
+            out["multiproc"] = prev["multiproc"]
     with open(path, "w") as f:
         json.dump(out, f, indent=2)
     print(f"# wrote {os.path.normpath(path)}", file=sys.stderr)
+
+
+_MP_ROUND_PROG = r"""
+import json, os, time
+from repro.launch import topology as topo
+pid, nproc = topo.init_from_env()
+
+import dataclasses
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.launch import sharding as shd
+from repro.launch.distributed import build_train_steps
+from repro.models import init_params, reduced
+
+n_dev = jax.device_count()
+mesh = jax.make_mesh((n_dev, 1), ("data", "model"))
+arch = get_arch("qwen1.5-0.5b")
+arch = dataclasses.replace(arch, model=reduced(arch.model, layers=2, d_model=64))
+bundle = build_train_steps(
+    arch, mesh, multi_pod=False, global_batch=2 * n_dev, seq_len=32,
+    gamma=0.1, dtype=jnp.float32, grad_carry=True,
+)
+cfg = arch.model
+rep = NamedSharding(mesh, P())
+params = jax.jit(
+    lambda: init_params(jax.random.PRNGKey(0), cfg, jnp.float32),
+    out_shardings=rep,
+)()
+g0 = jax.tree.map(jnp.zeros_like, params)
+h0 = jax.tree.map(lambda p: jnp.zeros((n_dev, *p.shape), p.dtype), params)
+toks = jax.jit(
+    lambda: jax.random.randint(
+        jax.random.PRNGKey(1), (n_dev, 2, 32), 0, cfg.vocab_size
+    ),
+    out_shardings=rep,
+)()
+tr = bundle.transport
+p_shard = tr.param_shardings
+wlead = tr.waxes if len(tr.waxes) > 1 else tr.waxes[0]
+h_shard = jax.tree.map(
+    lambda ns: NamedSharding(mesh, P(wlead, *ns.spec)), p_shard
+)
+b_shard = NamedSharding(mesh, shd.batch_spec(tr.waxes, None, 3))
+params = jax.device_put(params, p_shard)
+g0 = jax.device_put(g0, p_shard)
+h0 = jax.device_put(h0, h_shard)
+batch = {"tokens": jax.device_put(toks, b_shard)}
+
+rounds = int(os.environ.get("MARINA_MP_ROUNDS", "8"))
+with bundle.mesh:
+    fc, _ = bundle.fns["compressed_step"]
+    x, g, h = fc(params, g0, h0, batch, np.asarray(jax.random.PRNGKey(7)))
+    jax.block_until_ready(x)
+    best = float("inf")
+    for i in range(rounds):
+        k = np.asarray(jax.random.PRNGKey(100 + i))
+        t0 = time.time()
+        x, g, h = fc(x, g, h, batch, k)
+        jax.block_until_ready(x)
+        best = min(best, (time.time() - t0) * 1e6)
+
+led = bundle.transport.ledger
+if pid == 0:
+    print("MPBENCH " + json.dumps({
+        "n_processes": nproc,
+        "n_devices": n_dev,
+        "compressed_us": best,
+        "worker_tier": topo.detect_topology(mesh).tier_for_axes(("data",)),
+        "wire_by_tier": led.by_tier(scope="compressed_step"),
+    }), flush=True)
+"""
+
+
+def bench_roundstep_mp(quick=False):
+    """2-process smoke row (ISSUE 7): the SAME compressed grad-carry round
+    (reduced-qwen, 4 global devices) timed through a jax.distributed local
+    cluster (2 processes × 2 devices — gloo collectives genuinely cross the
+    process boundary, the simulated dcn) and through the historical
+    1-process × 4-fake-device mesh. Merges a ``multiproc`` section into
+    BENCH_roundstep.json (read-merge-update: the roundstep entries survive)
+    carrying wall clocks, the worker-axis link tier, and the transport's
+    bits-by-tier ledger for the compressed round."""
+    from repro.launch.topology import spawn_local_cluster
+
+    rounds = 6 if quick else 16
+    section = {"quick": bool(quick), "rounds": rounds}
+    for label, nproc, dev in (("2proc", 2, 2), ("1proc", 1, 4)):
+        res = spawn_local_cluster(
+            _MP_ROUND_PROG, num_processes=nproc, devices_per_process=dev,
+            extra_env={"MARINA_MP_ROUNDS": str(rounds)},
+        )
+        bad = [r for r in res if r.returncode != 0]
+        if bad:
+            section[label] = {"ok": False, "error": bad[0].stderr[-800:]}
+            print(f"# roundstep_mp/{label} FAILED:\n{bad[0].stderr[-2000:]}",
+                  file=sys.stderr)
+            continue
+        line = next(
+            ln for ln in res[0].stdout.splitlines() if ln.startswith("MPBENCH ")
+        )
+        payload = json.loads(line[len("MPBENCH "):])
+        payload["ok"] = True
+        section[label] = payload
+        emit(
+            f"roundstep_mp/{label}", payload["compressed_us"],
+            f"tier={payload['worker_tier']};nproc={payload['n_processes']}",
+        )
+    if section.get("2proc", {}).get("ok") and section.get("1proc", {}).get("ok"):
+        # the price of leaving the process: same algorithm, same wire bits,
+        # collectives through gloo instead of one address space
+        section["cross_process_slowdown"] = (
+            section["2proc"]["compressed_us"] / section["1proc"]["compressed_us"]
+        )
+
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_roundstep.json")
+    out = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            out = json.load(f)
+    out["multiproc"] = section
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {os.path.normpath(path)} (multiproc section)",
+          file=sys.stderr)
 
 
 def main():
@@ -632,6 +772,7 @@ def main():
         "kernels": bench_kernels,
         "compression": bench_compression,
         "roundstep": bench_roundstep,
+        "roundstep_mp": bench_roundstep_mp,
     }
     print("name,us_per_call,derived")
     for name, fn in benches.items():

@@ -1,0 +1,137 @@
+"""One CI entry point: run every repo gate, then the α–β disagreement sweep.
+
+Consolidates the four standalone checks (ISSUE 7 satellite) so CI and a
+local pre-push run invoke ONE script with one summary line per gate:
+
+* ``roundstep`` — scripts/check_roundstep.py (compressed-round regression
+  gate vs the committed baseline; pass fresh JSONs via ``--roundstep``),
+* ``robust``    — scripts/check_robust.py (robust-GAR round-time + semantics),
+* ``docs``      — scripts/check_docs.py (markdown links + README quickstart),
+* ``api_docs``  — scripts/check_api_docs.py (public-surface docstrings).
+
+Each check still works standalone — this script shells out to them (they
+own sys.argv/sys.exit and the api_docs/docs checks import jax, which must
+not contaminate one shared interpreter with device state).
+
+After the gates, the α–β disagreement sweep (roofline/analysis.py,
+DESIGN.md §7) walks experiments/perf/*.json: every recorded step that
+carries both the flat-ici collective term and the per-tier α–β term gets a
+CONFIRMED/REFUTED verdict at the >2× threshold. The sweep is REFUTED-style
+*reporting*, not a gate — a REFUTED row means the flat model mispriced that
+variant's dominant link tier (exactly the insight the per-tier model adds),
+not that the repo regressed. Pre-ISSUE-7 JSONs without per-tier data are
+counted as skipped.
+
+Usage:
+    python scripts/check_all.py [--roundstep fresh.json ...]
+                                [--skip roundstep,robust,docs,api_docs]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+SCRIPTS = os.path.dirname(os.path.abspath(__file__))
+PERF = os.path.join(ROOT, "experiments", "perf")
+
+
+def run_check(name: str, argv: list, needs_src_path: bool = False) -> bool:
+    env = dict(os.environ)
+    if needs_src_path:
+        env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    print(f"== {name} ==", flush=True)
+    proc = subprocess.run(argv, cwd=ROOT, env=env)
+    ok = proc.returncode == 0
+    print(f"== {name}: {'OK' if ok else 'FAIL'} ==", flush=True)
+    return ok
+
+
+def alpha_beta_sweep(factor: float = 2.0) -> None:
+    """Flat-ici vs per-tier α–β verdict for every recorded perf step."""
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.roofline import alpha_beta_disagreement
+
+    rows, skipped = [], 0
+    for path in sorted(glob.glob(os.path.join(PERF, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        tag = f"{r.get('arch')}__{r.get('shape')}__{r.get('mesh')}__{r.get('variant')}"
+        for sname, s in r.get("steps", {}).items():
+            if not s.get("ok"):
+                continue
+            flat, tiered = s.get("collective_s_flat"), s.get("collective_s")
+            if flat is None:  # pre-ISSUE-7 JSON: no per-tier classification
+                skipped += 1
+                continue
+            v = alpha_beta_disagreement(flat, tiered, factor=factor)
+            if v is None:
+                skipped += 1
+                continue
+            rows.append((tag, sname, flat, tiered, v))
+    print(f"== alpha-beta sweep ({len(rows)} steps, {skipped} skipped) ==")
+    for tag, sname, flat, tiered, v in rows:
+        print(
+            f"  {v['verdict']:9s} {tag}/{sname}: flat {flat*1e3:.2f} ms vs "
+            f"a-b {tiered*1e3:.2f} ms ({v['ratio']:.2f}x)"
+        )
+    refuted = sum(1 for *_r, v in rows if v["verdict"] == "REFUTED")
+    if refuted:
+        print(
+            f"  note: {refuted} REFUTED — the flat model mispriced those "
+            "variants' dominant link tier (reporting only, not a gate)"
+        )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--roundstep", nargs="*", default=None, metavar="JSON",
+        help="fresh BENCH_roundstep.json files for the regression gate "
+        "(default: the repo-root BENCH_roundstep.json)",
+    )
+    ap.add_argument(
+        "--skip", default="", metavar="NAMES",
+        help="comma-separated gates to skip (e.g. docs-only runners: "
+        "--skip roundstep,robust)",
+    )
+    args = ap.parse_args()
+    skip = {s.strip() for s in args.skip.split(",") if s.strip()}
+
+    py = sys.executable
+    checks = {
+        "roundstep": (
+            [py, os.path.join(SCRIPTS, "check_roundstep.py"),
+             *(args.roundstep or [])],
+            False,
+        ),
+        "robust": ([py, os.path.join(SCRIPTS, "check_robust.py")], False),
+        "docs": ([py, os.path.join(SCRIPTS, "check_docs.py")], False),
+        "api_docs": ([py, os.path.join(SCRIPTS, "check_api_docs.py")], True),
+    }
+
+    results = {}
+    for name, (argv, needs_src) in checks.items():
+        if name in skip:
+            print(f"== {name}: SKIPPED ==")
+            continue
+        results[name] = run_check(name, argv, needs_src)
+
+    alpha_beta_sweep()
+
+    failed = [n for n, ok in results.items() if not ok]
+    if failed:
+        print(f"CHECK_ALL FAILED: {', '.join(failed)}", file=sys.stderr)
+        return 1
+    print(f"check_all OK ({len(results)} gates" +
+          (f", {len(skip)} skipped" if skip else "") + ")")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,8 +6,11 @@ The checked surface is the doc contract of DESIGN.md/README.md:
   stepsizes) and ``repro.data.__all__``,
 * the public methods of :class:`repro.core.FlatEngine`,
 * the ``repro.launch.distributed`` builders and PP schedule,
+* the ``repro.launch.topology`` fabric surface (meshes, tiers, bring-up)
+  and the public methods of :class:`repro.launch.transport.Transport`,
 * the experiment-problem constructors in ``repro.core.problems``,
-* the wire-accounting formulas in ``repro.core.wire``.
+* the wire-accounting formulas in ``repro.core.wire`` and the
+  :class:`repro.core.wire.TierLedger` methods.
 
 Every symbol must carry a non-empty ``__doc__`` (one-line summary + paper-
 equation reference where applicable). Run: PYTHONPATH=src python
@@ -32,7 +35,7 @@ def main():
     import repro.core as core
     import repro.data as data
     from repro.core import FlatEngine, problems, wire
-    from repro.launch import distributed, mesh
+    from repro.launch import distributed, topology, transport
 
     failures = []
 
@@ -42,18 +45,27 @@ def main():
             if _missing_doc(obj):
                 failures.append(f"{mod.__name__}.{name}")
 
-    for name, member in inspect.getmembers(FlatEngine):
-        if name.startswith("_") or not callable(member):
-            continue
-        if not inspect.getdoc(member):
-            failures.append(f"repro.core.FlatEngine.{name}")
+    for cls, qual in (
+        (FlatEngine, "repro.core.FlatEngine"),
+        (transport.Transport, "repro.launch.transport.Transport"),
+        (wire.TierLedger, "repro.core.wire.TierLedger"),
+    ):
+        for name, member in inspect.getmembers(cls):
+            if name.startswith("_") or not callable(member):
+                continue
+            if not inspect.getdoc(member):
+                failures.append(f"{qual}.{name}")
 
     for mod, names in (
         (distributed, ("build_train_steps", "build_serve_steps",
                        "pp_cohort_schedule", "StepBundle")),
-        (mesh, ("make_production_mesh", "make_test_mesh",
-                "make_federated_mesh", "worker_axis_names", "num_workers",
-                "cohort_group_size")),
+        (topology, ("Topology", "LinkSpec", "detect_topology",
+                    "production_topology", "initialize_multiprocess",
+                    "spawn_local_cluster", "make_production_mesh",
+                    "make_test_mesh", "make_federated_mesh",
+                    "worker_axis_names", "num_workers",
+                    "cohort_group_size")),
+        (transport, ("Transport", "make_transport")),
         (problems, ("nonconvex_binclass_loss", "make_synthetic_binclass",
                     "make_dirichlet_binclass", "make_shifted_quadratics",
                     "gradient_heterogeneity", "quadratic_loss",
@@ -76,7 +88,10 @@ def main():
         for f in failures:
             print(f"  - {f}", file=sys.stderr)
         sys.exit(1)
-    print("api docs OK (core/data exports, FlatEngine, launch, problems, wire)")
+    print(
+        "api docs OK (core/data exports, FlatEngine, launch "
+        "topology/transport/assembly, problems, wire)"
+    )
 
 
 if __name__ == "__main__":

@@ -24,9 +24,18 @@ The packed quantization wire (ISSUE 3) fixes the representation per family:
 
 All values are bits per worker per compressed round; float so the ledgers
 can accumulate without overflow at production scale.
+
+Since ISSUE 7 the module also owns the **bytes-by-link-tier ledger**
+(:class:`TierLedger`): the transport layer (`launch/transport.py`) books
+every payload collective it stages — direction (up/down), link tier
+(loopback / ici / dcn — `launch/topology.py` classifies), collective kind,
+and the bits from the per-format helpers above — so "how many bits crossed
+the slow link" is answered by the same module that defines what a bit is.
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 F32_BITS = 32.0
 SEED_BITS = 32.0      # one uint32 murmur3 seed
@@ -160,3 +169,85 @@ def round_total_bits(up_bits_per_worker: float,
     and ledger convention: per worker, both directions — multiply by n for
     the fleet)."""
     return up_bits_per_worker + down_bits_per_worker
+
+
+# ---------------------------------------------------------------------------
+# Bytes-by-link-tier ledger (ISSUE 7 — DESIGN.md §7)
+#
+# A payload bit is not priced by its count alone but by WHICH link it
+# crosses: host-loopback (fake-device single process), ici (intra-pod), or
+# dcn (the cross-pod bandwidth cliff the compressed wires were built for).
+# The transport layer books every collective it stages here, tagged by
+# (scope, direction, tier, kind), so EXPERIMENTS.md and the multiproc bench
+# can report "uplink bits on the dcn" rather than one flat number.
+# ---------------------------------------------------------------------------
+
+#: canonical link-tier names, fast → slow (launch/topology.py assigns them)
+LINK_TIERS = ("loopback", "ici", "dcn")
+
+
+@dataclasses.dataclass
+class TierLedger:
+    """Mutable bits-by-link-tier ledger the transport layer books into.
+
+    Entries are keyed ``(scope, direction, tier, kind)``:
+
+    * ``scope``     — which step traced the collective ("sync_step",
+                      "compressed_step", …; the round-assembly layer scopes
+                      each jitted step so one shared transport never
+                      double-books across step entries),
+    * ``direction`` — "up" (worker → server) or "down" (server → worker),
+    * ``tier``      — one of :data:`LINK_TIERS`,
+    * ``kind``      — the collective family ("all-gather", "all-to-all",
+                      "psum", "broadcast", …).
+
+    Booked values are BITS PER WORKER PER ROUND from the per-format helpers
+    in this module — the ledger adds the *where*, never a second opinion on
+    the *how much*.
+    """
+
+    bits: dict = dataclasses.field(default_factory=dict)
+    counts: dict = dataclasses.field(default_factory=dict)
+
+    def book(self, scope: str, direction: str, tier: str, kind: str,
+             bits: float) -> None:
+        """Accumulate ``bits`` under ``(scope, direction, tier, kind)``.
+        Direction must be "up"/"down"; tier must be a LINK_TIERS name."""
+        assert direction in ("up", "down"), direction
+        assert tier in LINK_TIERS, tier
+        key = (scope, direction, tier, kind)
+        self.bits[key] = self.bits.get(key, 0.0) + float(bits)
+        self.counts[key] = self.counts.get(key, 0) + 1
+
+    def total_bits(self, scope=None, direction=None, tier=None) -> float:
+        """Sum booked bits, filtered by any of scope/direction/tier (None
+        matches everything)."""
+        return sum(
+            v for (s, d, t, _k), v in self.bits.items()
+            if (scope is None or s == scope)
+            and (direction is None or d == direction)
+            and (tier is None or t == tier)
+        )
+
+    def by_tier(self, scope=None) -> dict:
+        """{tier: {direction: bits}} summary for one scope (or all)."""
+        out: dict = {}
+        for (s, d, t, _k), v in self.bits.items():
+            if scope is not None and s != scope:
+                continue
+            out.setdefault(t, {}).setdefault(d, 0.0)
+            out[t][d] += v
+        return out
+
+    def to_dict(self) -> dict:
+        """JSON-serializable dump: ``{"scope/direction/tier/kind": bits}``
+        plus per-key trace counts — what the bench artifacts persist."""
+        return {
+            "bits": {"/".join(k): v for k, v in self.bits.items()},
+            "counts": {"/".join(k): v for k, v in self.counts.items()},
+        }
+
+    def clear(self) -> None:
+        """Drop all bookings (used between benchmark configurations)."""
+        self.bits.clear()
+        self.counts.clear()

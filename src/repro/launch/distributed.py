@@ -1,70 +1,38 @@
-"""Sharded production steps: MARINA train rounds + serve prefill/decode.
+"""Round assembly: MARINA train rounds composed on the mesh.
 
 This is the mesh instantiation of the algorithm in core/marina.py (the
-simulation backend and this file share the update equations; the difference is
-explicit GSPMD shardings and payload collectives — DESIGN.md §3):
+simulation backend and this file share the update equations; the difference
+is explicit GSPMD shardings and payload collectives — DESIGN.md §3). Since
+ISSUE 7 the launch stack is three layers (DESIGN.md §7):
 
-* ``sync_step``       — the probability-p dense round: per-worker gradients
-  averaged across the worker axis (an all-reduce of d, exactly the paper's
-  "send dense ∇f_i" cost).
-* ``compressed_step`` — the probability-(1−p) round: per-worker two-point
-  gradient differences, Block-RandK compressed; payloads are *replicated across
-  the worker axes* (the HLO all-gather whose bytes are the paper's ζ_Q), then
-  scatter-decompressed and averaged locally by every device. With
-  ``compression="permk"`` the round uses the correlated Perm-K compressor
-  (Szlendak et al. 2021): one shared permutation partitions each leaf's lane
-  dimension across workers, every worker's payload is a disjoint L/n shard,
-  and the exchange is an exact all-to-all of those shards — values only, no
-  indices on the wire (the permutation regenerates from the replicated round
-  key), and the mean assembles by inverse-perm gather with zero scatter
-  collisions.
-  With ``compression="qsgd"`` the round ships the packed quantization wire
-  (DESIGN.md §4.6): workers quantize dense diff rows against per-row ℓ2
-  norms under worker-local sharding constraints, the collective carries int8
-  levels (or 4-bit nibbles in uint32 with ``packed_payload`` and s ≤ 7) +
-  f32 norms — 1 (or 0.5) B/coord instead of 4 — and every device runs the
-  worker-indexed dequantize-and-mean.
-* ``train_step``      — production step: Bernoulli(p) `lax.cond` over the two.
-  The dry-run lowers sync/compressed separately so §Roofline can attribute
-  costs per round type.
+* **topology** (`launch/topology.py`) — the device fabric: mesh
+  construction, worker axes, link tiers (loopback / ici / dcn), and
+  multi-process bring-up;
+* **transport** (`launch/transport.py`) — the collective primitives: the
+  dense sync exchange, the compressed uplink (randk / shared-mask / permk /
+  qsgd), the per-worker robust decode, and the compressed downlink, each
+  booking its wire bits into the bytes-by-link-tier ledger
+  (`core/wire.TierLedger`);
+* **round assembly** (this file) — composition only: step bodies wire
+  gradients, carries, cohorts and faults through the transport interface,
+  and never call raw collectives or stage payload shardings themselves.
 
-Round-pipeline overrides (DESIGN.md §4.7):
-
-* ``grad_carry=True`` — the step carry grows the per-worker gradients
-  ``h_i^k = ∇f_i(x^k)`` (worker-stacked tree, sharded like the grads,
-  donated): a compressed round evaluates ONE vmapped backprop (at x^{k+1})
-  and differences against the carried h instead of recomputing at x^k —
-  legal whenever each worker's oracle is deterministic in the iterate (fixed
-  local shards). Step signatures become (params, g, h, batch[, key]) →
-  (params, g, h).
-* ``flat_sync=True`` — sync rounds ride the flat buffer: the per-leaf dense
-  tree exchange is replaced by ONE fused mean over the packed (nblk, B)
-  buffer (a single worker-axis psum of d instead of one collective per
-  leaf); the unpacked mean is pinned back to the parameter shardings.
-* ``downlink=`` — compressed downlink mirroring ``compression=``: the server
-  side broadcasts Q_down(g^{k+1} − g^k) = Q_down(δ_up) instead of the dense
-  estimator ("qsgd" quantizes the aggregated delta rows against per-row ℓ2
-  norms, int8 — or 4-bit nibbles with ``packed_payload`` — and every worker
-  decompress-accumulates; "randk" broadcasts a seeded K-subsample). The
-  recursion runs on the broadcast estimator, so worker replicas stay exact.
-* ``participation=(r, scheme)`` — federated PP-MARINA (Alg. 4, DESIGN.md
-  §4.8): compressed rounds take a cohort row from ``pp_cohort_schedule``,
-  respread the r sampled clients' batch rows over all n worker shards (each
-  shard backprops r/n of its full-round tokens) and put exactly r payload
-  rows on the wire; with ``grad_carry`` the carried h becomes the
-  server-side per-client table, refreshed only for sampled clients.
-
-The inner gather/scatter run through the backend-switched block primitives in
-repro.core.flat (``block_gather`` / ``block_scatter_mean``): the pure-jnp ref
-path (bit-identical to kernels/ref.py) on CPU simulation, the Pallas kernels
-in repro.kernels on real TPU hardware (DESIGN.md §4/§5).
+Steps built here: ``sync_step`` (the probability-p dense round —
+``Transport.sync_aggregate``), ``compressed_step`` (the probability-(1−p)
+round: two-point gradient differences through ``Transport.uplink_mean`` +
+``Transport.downlink``), and ``train_step`` (Bernoulli(p) `lax.cond` over
+the two; the dry-run lowers sync/compressed separately so §Roofline can
+attribute costs per round type). Serving assembly lives in
+launch/serve_steps.py. The exchange semantics of every wire family and the
+round-pipeline overrides (grad_carry, flat_sync, downlink, participation,
+aggregator, faults) are documented on the transport methods and the
+``build_train_steps`` flags below.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -76,14 +44,14 @@ from repro.core import flat as flat_engine
 from repro.core.marina import (
     _FAULT_FOLD,
     _carry_refresh,
-    _pp_carry_refresh,
     _sync_faults,
     _uplink_faults,
 )
-from repro.kernels import ref as kref
-from repro.models import init_cache, init_params, lm_loss, decode_step as model_decode, prefill as model_prefill
+from repro.models import init_params, lm_loss
 from repro.launch import sharding as shd
-from repro.launch.mesh import cohort_group_size, num_workers, worker_axis_names
+from repro.launch.participation import build_pp_steps, pp_cohort_schedule  # noqa: F401
+from repro.launch.topology import detect_topology, num_workers, worker_axis_names
+from repro.launch.transport import make_transport
 
 PyTree = Any
 
@@ -102,348 +70,7 @@ class StepBundle:
     fns: dict  # name -> (jitted fn, example abstract args)
     meta: dict = dataclasses.field(default_factory=dict)  # builder decisions
     # (participation mode, cohort-compute vs masked fallback, flat-PP path)
-
-
-# ---------------------------------------------------------------------------
-# Block-RandK on worker-stacked leaves (pure jnp; ref semantics of kernels/)
-# ---------------------------------------------------------------------------
-
-
-def _qsgd_quantize_rows(key: jax.Array, x, s: int):
-    """Per-row ℓ2-norm s-level stochastic quantization over the LAST axis:
-    levels = sign(x)·⌊s|x|/‖row‖ + u⌋ as int8, norms f32 (kept-dims). The
-    one quantize formula both wire directions share — uplink
-    (``compression="qsgd"``, worker-stacked rows) and downlink
-    (:func:`_downlink_roundtrip`) must never drift apart."""
-    assert 1 <= s <= 127, f"s={s} does not fit the int8 wire"
-    xf = x.astype(jnp.float32)
-    norm = jnp.sqrt(jnp.sum(xf * xf, axis=-1, keepdims=True))
-    safe = jnp.where(norm > 0, norm, 1.0)
-    u = jax.random.uniform(key, x.shape)
-    q = (jnp.sign(xf) * jnp.floor(s * jnp.abs(xf) / safe + u)).astype(jnp.int8)
-    return q, norm.astype(jnp.float32)
-
-
-def _nibble_roundtrip_rows(q: jax.Array) -> jax.Array:
-    """Push int8 levels through the genuine 4-bit wire (|level| ≤ 7): pack
-    eight two's-complement nibbles per uint32 lane word, unpack back."""
-    L = q.shape[-1]
-    lead = q.shape[:-1]
-    flat = q.reshape(-1, L)
-    return kref.nibble_unpack_ref(kref.nibble_pack_ref(flat), L).reshape(
-        *lead, L
-    )
-
-
-def _gather_along_last(x3d, idx3d, scale, backend):
-    """(n, R, L) gather via the backend-switched flat primitive."""
-    n_, R, L = x3d.shape
-    kb = idx3d.shape[-1]
-    out = flat_engine.block_gather(
-        x3d.reshape(n_ * R, L), idx3d.reshape(n_ * R, kb), scale, backend
-    )
-    return out.reshape(n_, R, kb)
-
-
-def _scatter_mean_last(vals3d, idx3d, L, backend):
-    """(n_eff, R, kb) scatter-accumulate mean over workers → (R, L) f32."""
-    return flat_engine.block_scatter_mean(
-        vals3d.astype(jnp.float32), idx3d, L, backend
-    )
-
-
-def _compress_decompress_mean(
-    key: jax.Array,
-    diffs: PyTree,
-    n: int,
-    mesh,
-    waxes: tuple = (),
-    shared_mask: bool = False,
-    packed_payload: bool = False,
-    staged_payload: bool = True,
-    out_shardings: "PyTree | None" = None,
-    backend: str = "auto",
-    compression: str = "randk",
-    qsgd_s: int = 15,
-) -> PyTree:
-    """Per-leaf Block-RandK across workers → dense mean update.
-
-    Layout: each leaf (n, *shape) is treated as (n, R, L) with L = its last
-    dimension — gathers and scatters act along L only, so they stay local to
-    whatever sharding the leaf has on its leading dims, and scatter indices
-    never exceed L (no int64 pressure at 10^10-parameter scale). Sampling is
-    kb ≈ L/128 indices per row with replacement (unbiased, ω ≈ L/kb — same
-    class as kernels/randk.py's seeded sampler).
-
-    independent masks (paper-faithful): the n·K payload is replicated across
-    the mesh — the all-gather the paper prices at ζ_Q. Feasible for the
-    small/mid models; for ≥27B models the replicated payload itself exceeds
-    HBM, which the baseline records and §Perf resolves via:
-
-    shared_mask=True (beyond-paper, MARINA-SM): all workers share one mask, so
-    the worker mean commutes with the gather — a ζ-sized *psum* over the
-    worker axis replaces the n·ζ all-gather, payload and dense accumulator
-    both stay sharded, and the scheme scales to 671B. Theory cost: the
-    cross-worker error correlation forfeits the 1/n variance averaging
-    (ω instead of ω/√n in Thm 2.1).
-
-    compression="qsgd" (the packed quantization wire — DESIGN.md §4.6): each
-    worker quantizes its dense diff rows against per-row ℓ2 norms (s levels,
-    stochastic dither) and the payload collective carries int8 levels + f32
-    norms — 1 B/coord instead of 4. With ``packed_payload`` and s ≤ 7 the
-    levels ship as signed 4-bit nibbles packed eight-per-uint32 (0.5 B/coord).
-    The dense f32 diffs stay worker-local (staged constraints); every device
-    dequantize-and-means the replicated int8 payload with a worker-indexed
-    accumulation loop, so no (n, d) f32 buffer is ever materialized.
-
-    compression="permk" (Szlendak et al. 2021): one permutation of each
-    leaf's lane dimension, SHARED across workers, partitions the coordinates;
-    worker i's payload is its disjoint (R, L/n) shard ×n. Because supports
-    are disjoint, the exchange is an exact all-to-all of d/n shards — values
-    only, no indices (every device regenerates the permutation from the
-    replicated round key) — and the mean assembles by inverse-permutation
-    *gather*: no scatter, no collisions, and no (A − B) > 0 variance premium
-    in the stepsize (core/stepsize.py::marina_gamma_permk). Leaves whose lane
-    width L is not divisible by n fall back to the independent-mask path.
-    """
-    leaves, treedef = jax.tree.flatten(diffs)
-    out_shard_leaves = (
-        jax.tree.leaves(out_shardings) if out_shardings is not None
-        else [None] * len(leaves)
-    )
-    keys = jax.random.split(key, len(leaves))
-    outs = []
-    for lk, leaf, osh in zip(keys, leaves, out_shard_leaves):
-        shape = leaf.shape[1:]
-        L = int(shape[-1])
-        R = int(np.prod(shape[:-1])) if len(shape) > 1 else 1
-        kb = max(1, L // 128)
-        scale = L / kb
-        x = leaf.reshape(n, R, L)
-
-        wspec = P(waxes if len(waxes) != 1 else waxes[0]) if waxes else P()
-        worker_sharded = NamedSharding(mesh, wspec)
-
-        if compression == "permk" and L % n == 0:
-            C = L // n
-            perm = jax.random.permutation(lk, L)  # shared across workers
-            idx = jnp.broadcast_to(perm.reshape(n, 1, C), (n, R, C))
-            vals = _gather_along_last(x, idx, float(n), backend)  # Q_i nonzeros
-            if staged_payload:
-                vals = jax.lax.with_sharding_constraint(vals, worker_sharded)
-            repl = NamedSharding(mesh, P())
-            # the exact all-to-all of d/n shards: VALUES ONLY ride the wire
-            # (bf16 when packed); the permutation regenerates from the
-            # replicated round key on every device, so there is no index
-            # payload and no scatter on arrival.
-            wire = vals.astype(jnp.bfloat16) if packed_payload else vals
-            wire = jax.lax.with_sharding_constraint(wire, repl)
-            by_slot = jnp.moveaxis(wire.astype(jnp.float32), 0, 1).reshape(R, L)
-            inv = jnp.argsort(perm)
-            dense = (jnp.take(by_slot, inv, axis=1) / n).astype(leaf.dtype)
-        elif compression == "qsgd":
-            # shared row-quantize formula (int8-wire bound asserted inside);
-            # norm is (n, R, 1) f32
-            q, norm = _qsgd_quantize_rows(lk, x, int(qsgd_s))
-            s = int(qsgd_s)
-            if staged_payload:
-                # quantize under the worker-sharded layout: the dense f32
-                # diffs never leave their worker
-                q = jax.lax.with_sharding_constraint(q, worker_sharded)
-                norm = jax.lax.with_sharding_constraint(norm, worker_sharded)
-            repl = NamedSharding(mesh, P())
-            if packed_payload and s <= 7 and L % 8 == 0:
-                # genuine 4-bit wire: eight signed nibbles per uint32 lane
-                # word cross the collective (0.5 B/coord)
-                words = kref.nibble_pack_ref(q.reshape(n * R, L))
-                words = jax.lax.with_sharding_constraint(
-                    words.reshape(n, R, L // 8), repl
-                )
-                q = kref.nibble_unpack_ref(
-                    words.reshape(n * R, L // 8), L
-                ).reshape(n, R, L)
-            else:
-                q = jax.lax.with_sharding_constraint(q, repl)
-            norm = jax.lax.with_sharding_constraint(norm, repl)
-
-            # fused dequantize-and-mean: worker-indexed accumulation into one
-            # (R, L) f32 buffer — input bandwidth stays int8
-            def dq_body(w, acc):
-                qw = jax.lax.dynamic_index_in_dim(q, w, 0, keepdims=False)
-                nw = jax.lax.dynamic_index_in_dim(norm, w, 0, keepdims=False)
-                return acc + qw.astype(jnp.float32) * (nw / s)
-
-            acc = jax.lax.fori_loop(
-                0, n, dq_body, jnp.zeros((R, L), jnp.float32)
-            )
-            dense = (acc / n).astype(leaf.dtype)
-        elif shared_mask:
-            idx = jax.random.randint(lk, (R, kb), 0, L, jnp.int32)
-            vals = _gather_along_last(
-                x, jnp.broadcast_to(idx, (n, R, kb)), scale, backend
-            )
-            if staged_payload:
-                # pin the gather to the worker-sharded layout so the
-                # partitioner cannot replicate the dense diffs instead
-                vals = jax.lax.with_sharding_constraint(vals, worker_sharded)
-            # ζ-sized psum over the worker axis; stays sharded on R
-            vals_mean = jnp.mean(vals, axis=0)                     # (R, kb)
-            dense = _scatter_mean_last(
-                vals_mean[None], idx[None], L, backend
-            ).astype(leaf.dtype)
-        else:
-            idx = jax.random.randint(lk, (n, R, kb), 0, L, jnp.int32)
-            vals = _gather_along_last(x, idx, scale, backend)
-            if staged_payload:
-                # stage 1: gather under the worker-sharded layout (local);
-                # stage 2 (below): all-gather only the K-sized payload
-                vals = jax.lax.with_sharding_constraint(vals, worker_sharded)
-            repl = NamedSharding(mesh, P())
-            if packed_payload:
-                # §Perf: bf16 values + int16 indices on the wire — 8 → 4
-                # B/coord, degrading to int32 indices (8 → 6 B/coord) when
-                # L > 32767 (int16 can't address the lane)
-                vals = jax.lax.with_sharding_constraint(
-                    vals.astype(jnp.bfloat16), repl
-                ).astype(leaf.dtype)
-                idx_wire = jax.lax.with_sharding_constraint(
-                    (idx if L > 32767 else idx.astype(jnp.int16)), repl
-                )
-                idx = idx_wire.astype(jnp.int32)
-            else:
-                vals = jax.lax.with_sharding_constraint(vals, repl)
-                idx = jax.lax.with_sharding_constraint(idx, repl)
-            dense = _scatter_mean_last(vals, idx, L, backend).astype(leaf.dtype)
-
-        out = dense.reshape(shape)
-        if osh is not None and staged_payload:
-            # pin the decompressed accumulator to the destination leaf's
-            # sharding — otherwise the partitioner may materialize the scatter
-            # replicated (a 435 GB buffer for the 671B expert stack)
-            out = jax.lax.with_sharding_constraint(out, osh)
-        outs.append(out)
-    return jax.tree.unflatten(treedef, outs)
-
-
-def _decompress_worker_rows(
-    key: jax.Array,
-    diffs: PyTree,
-    n: int,
-    packed_payload: bool = False,
-    backend: str = "auto",
-    compression: str = "randk",
-    qsgd_s: int = 15,
-) -> PyTree:
-    """Per-worker DENSE payload rows — what the server actually received
-    from each client, before any aggregation (DESIGN.md §4.9).
-
-    Robust GARs cannot ride the fused dequantize-and-mean of
-    :func:`_compress_decompress_mean` (trim/median/Krum/clip don't commute
-    with the mean), so the robust wire decodes every worker's payload to a
-    dense (n, *leaf) row stack and hands it to
-    ``ServerAggregator.combine_stacked``. Key discipline is IDENTICAL to the
-    mean path (one split per leaf, same per-leaf draw shapes), so the honest
-    rows carry exactly the values the fused path would have averaged. The
-    dense row stack costs the fused path's memory saving — the price of
-    robustness, recorded in DESIGN.md §4.9. ``permk`` is refused upstream
-    (coordinates partition across workers; nothing to aggregate robustly)."""
-    leaves, treedef = jax.tree.flatten(diffs)
-    keys = jax.random.split(key, len(leaves))
-    rows = []
-    for lk, leaf in zip(keys, leaves):
-        shape = leaf.shape[1:]
-        L = int(shape[-1])
-        R = int(np.prod(shape[:-1])) if len(shape) > 1 else 1
-        kb = max(1, L // 128)
-        scale = L / kb
-        x = leaf.reshape(n, R, L)
-        if compression == "qsgd":
-            q, norm = _qsgd_quantize_rows(lk, x, int(qsgd_s))
-            s = int(qsgd_s)
-            if packed_payload and s <= 7 and L % 8 == 0:
-                q = _nibble_roundtrip_rows(q)
-            dense = q.astype(jnp.float32) * (norm / s)
-        else:  # independent Block-RandK masks
-            idx = jax.random.randint(lk, (n, R, kb), 0, L, jnp.int32)
-            vals = _gather_along_last(x, idx, scale, backend)
-            dense = jax.vmap(
-                lambda v, i: _scatter_mean_last(v[None], i[None], L, backend)
-            )(vals, idx)
-        rows.append(dense.reshape((n,) + tuple(shape)))
-    return jax.tree.unflatten(treedef, rows)
-
-
-def _downlink_roundtrip(
-    key: jax.Array,
-    delta: PyTree,
-    mode: str,
-    s: int,
-    packed_payload: bool,
-) -> PyTree:
-    """Compressed downlink on the aggregated round delta (DESIGN.md §4.7).
-
-    The server broadcasts Q_down(g^{k+1} − g^k) = Q_down(δ_up); since δ_up is
-    replicated after aggregation, every device compresses with the SHARED
-    round key (one payload, one broadcast) and decompress-accumulates — the
-    estimator recursion runs on the broadcast sequence, so worker replicas
-    stay bitwise in sync. "qsgd": per-row ℓ2-norm s-level quantization, int8
-    (4-bit nibbles with ``packed_payload`` and s ≤ 7). "randk": seeded
-    K-subsample (K = L/128 per row), indices regenerate from the key.
-    """
-    if mode == "none":
-        return delta
-    leaves, treedef = jax.tree.flatten(delta)
-    keys = jax.random.split(key, len(leaves))
-    outs = []
-    for lk, leaf in zip(keys, leaves):
-        shape = leaf.shape
-        L = int(shape[-1])
-        R = int(np.prod(shape[:-1])) if len(shape) > 1 else 1
-        x = leaf.reshape(R, L).astype(jnp.float32)
-        if mode == "qsgd":
-            # the same shared row-quantize formula as the uplink
-            q, norm = _qsgd_quantize_rows(lk, x, s)
-            if packed_payload and s <= 7 and L % 8 == 0:
-                # the broadcast genuinely crosses the 4-bit wire
-                q = _nibble_roundtrip_rows(q)
-            y = q.astype(jnp.float32) * (norm / s)
-        elif mode == "randk":
-            kb = max(1, L // 128)
-            idx = jax.random.randint(lk, (R, kb), 0, L, jnp.int32)
-            vals = jnp.take_along_axis(x, idx, axis=1) * (L / kb)
-            y = jnp.zeros((R, L), jnp.float32).at[
-                jnp.arange(R)[:, None], idx
-            ].add(vals)
-        else:
-            raise ValueError(f"unknown downlink {mode!r}")
-        outs.append(y.reshape(shape).astype(leaf.dtype))
-    return jax.tree.unflatten(treedef, outs)
-
-
-def pp_cohort_schedule(
-    base_key: jax.Array, n_steps: int, n: int, r: int,
-    scheme: str = "without",
-) -> jax.Array:
-    """Precompute the (n_steps, r) PP cohort table — the prefetch side of the
-    participation wire (DESIGN.md §4.8).
-
-    Row k is EXACTLY the cohort the core ``PPMarina`` step draws from the
-    step key ``fold_in(base_key, k)`` (the same 3-way ``(bern, sel, q)``
-    split), so a precomputed schedule keeps distributed rounds
-    trajectory-equal to the single-process reference while hoisting the
-    sampling off the round's critical path: the k+1 batch-row gather can be
-    issued while round k's epilogue is still in flight.
-    """
-    from repro.core.marina import pp_sample_cohort
-
-    assert scheme in ("with", "without"), scheme
-
-    def one(step):
-        k = jax.random.fold_in(base_key, step)
-        _, k_sel, _ = jax.random.split(k, 3)
-        return pp_sample_cohort(k_sel, n, r, replace=(scheme == "with"))
-
-    return jax.vmap(one)(jnp.arange(n_steps, dtype=jnp.int32))
+    transport: Any = None  # the Transport whose ledger priced this bundle
 
 
 # ---------------------------------------------------------------------------
@@ -476,67 +103,53 @@ def build_train_steps(
     participation: "tuple[int, str] | None" = None,
     aggregator: "Any | None" = None,
     faults: "Any | None" = None,
+    topology: "Any | None" = None,
 ):
     """Returns (fns, abstract_args) for sync_step / compressed_step / train_step.
 
-    §Perf overrides:
+    §Perf overrides (wire policy freezes into the transport —
+    launch/transport.py documents each family's exchange semantics):
     * shared_mask      — SharedRandK: K-value psum instead of n·K all-gather
-    * packed_payload   — bf16 values + int16 indices on the wire (8 → 4
-      B/coord; indices fall back to int32 when L > 32767, 8 → 6 B/coord);
-      with compression="qsgd" and s ≤ 7 it instead packs the int8 levels
-      into 4-bit nibbles (1 → 0.5 B/coord)
-    * compression      — "randk" (independent masks, n·K all-gather),
-      "permk" (correlated Perm-K: disjoint d/n shards, values-only exchange)
-      or "qsgd" (dense s-level quantization: int8 levels + f32 row norms on
-      the wire — the packed quantization wire of DESIGN.md §4.6)
+    * packed_payload   — bf16 values + int16 indices on the wire; with
+      compression="qsgd" and s ≤ 7, 4-bit nibble packing instead
+    * compression      — "randk" | "permk" | "qsgd" (DESIGN.md §4.2–§4.6)
     * qsgd_s           — quantization levels for compression="qsgd"
+    * topology         — modeled fabric for the wire ledger (default: the
+      runtime fabric via detect_topology; perf/dryrun pass the production
+      topology so bits book under the tiers the mesh MODELS)
     * replicate_params — small-model mode: no tensor parallelism; the model
-      axis becomes within-worker data parallelism (per-worker batch sharded
-      over "model", params replicated)
+      axis becomes within-worker data parallelism
     * grad_carry       — single-backprop compressed rounds: the step carry
       grows per-worker h_i^k = ∇f_i(x^k) (sharded like the grads, donated);
       signatures become (params, g, h, batch[, key]) → (params, g, h)
     * flat_sync        — sync rounds exchange ONE packed (n, nblk, B) buffer
-      (a single worker-axis psum) instead of one collective per leaf.
-      Default (None) auto-enables it only when packing cannot force a
-      reshard of model-parallel leaves (replicated params, or a mesh whose
-      axes are all worker axes) — on tensor/FSDP-sharded params GSPMD must
-      all-gather the dense grads to assemble the flat buffer (involuntary
-      full remat, ~4× sync-step memory on the qwen 0.5B dryrun), so the
-      per-leaf exchange stays the sharded default
-    * downlink         — "none" (dense estimator broadcast) or "qsgd"/"randk":
-      broadcast Q_down(g^{k+1} − g^k) and decompress-accumulate worker-side
-      (downlink_s levels; packed_payload packs the downlink nibbles too)
+      instead of one collective per leaf. Default (None) auto-enables it
+      only when packing cannot force a reshard of model-parallel leaves
+      (replicated params, or a mesh whose axes are all worker axes) —
+      otherwise GSPMD must all-gather the dense grads to assemble the flat
+      buffer (~4× sync-step memory on the qwen 0.5B dryrun)
+    * downlink         — "none" (dense estimator broadcast) or
+      "qsgd"/"randk": broadcast Q_down(g^{k+1} − g^k) and
+      decompress-accumulate worker-side (downlink_s levels)
     * participation    — (r, "with"|"without"): PP-MARINA on the mesh
       (DESIGN.md §4.8). Compressed rounds sample a cohort of r clients from
-      the schedule (``pp_cohort_schedule``; steps gain a trailing (r,) int32
-      ``sel`` argument) and map it onto the worker axis: the r clients'
-      batch rows are respread over ALL n shards (each backprops r/n of its
-      full-round tokens — the genuine r/n compute saving) and the wire
-      carries exactly r payload rows through the configured compression
-      (permk re-keys its partition to the cohort, tiling d/r). When r does
-      not divide n·per_worker evenly the builder falls back to masked dense
-      compute (all n backprop, only r rows compressed — wire saving kept,
-      compute saving lost; recorded in ``bundle.meta``). With ``grad_carry``
+      ``pp_cohort_schedule`` (steps gain a trailing (r,) int32 ``sel``
+      argument), respread the r clients' batch rows over ALL n shards (the
+      genuine r/n compute saving) and put exactly r payload rows on the
+      wire; falls back to masked dense compute when r doesn't divide
+      n·per_worker evenly (recorded in ``bundle.meta``). With ``grad_carry``
       the step's h becomes the server-side carry table: only sampled rows
       refresh. Composes with randk/permk/qsgd but not shared_mask. On
       packing-legal meshes PP rounds are trajectory-equal to core
-      ``PPMarina`` for ``downlink="none"``; with a downlink the key
-      discipline follows the mesh convention (split from k_q), not core's
-      step-key fold — see DESIGN.md §4.8.
+      ``PPMarina`` for ``downlink="none"`` — see DESIGN.md §4.8
     * aggregator       — a ``repro.core.ServerAggregator``: swap the server
-      mean for a robust GAR (DESIGN.md §4.9). Sync rounds aggregate the
-      worker gradient stack with ``combine_stacked``; compressed rounds
-      decode per-worker dense payload rows (``_decompress_worker_rows``, or
-      the flat engine's ``worker_dense`` on the flat-PP path) and aggregate
-      those. Refused with compression="permk" and with shared_mask (the
-      payloads aren't per-coordinate comparable across workers).
+      mean for a robust GAR on decoded per-worker rows
+      (``Transport.worker_rows``; DESIGN.md §4.9). Refused with permk and
+      shared_mask (payloads aren't per-coordinate comparable)
     * faults           — a ``repro.core.FaultSpec``: per-round client fault
-      injection on the uplinked payloads (sign_flip / mean_shift / nan /
-      garbage / drop — see repro.core.faults). ``drop`` requires
-      ``grad_carry`` (the carried h row substitutes the missing upload, and
-      dropped rows skip their h refresh). Sync-round garbage noise draws
-      from a fixed key (the mesh sync steps are keyless by design).
+      injection on the uplinked payloads (repro.core.faults); ``drop``
+      requires ``grad_carry`` (the carried h row substitutes the missing
+      upload)
     """
     cfg = dataclasses.replace(arch.model, remat=remat)
     robust = aggregator is not None and aggregator.robust
@@ -601,9 +214,10 @@ def build_train_steps(
 
     # sync rounds ride the flat buffer: one fused mean over the packed
     # (n, nblk, B) buffer — a single worker-axis psum of d — instead of one
-    # collective per leaf. The buffer's block dim is pinned to the non-worker
-    # mesh axes (when they divide nblk) so the dense grads never replicate,
-    # and the unpacked mean is pinned back to the parameter shardings.
+    # collective per leaf. The buffer's block dim is pinned to the
+    # non-worker mesh axes (when they divide nblk) so the dense grads never
+    # replicate, and the unpacked mean is pinned back to the parameter
+    # shardings.
     lay = flat_engine.make_layout(param_shapes, block=BLOCK)
     wlead = waxes if len(waxes) > 1 else (waxes[0] if waxes else None)
     # size-1 axes cannot shard anything, so they neither disqualify the
@@ -623,28 +237,21 @@ def build_train_steps(
           else (blk_axes[0] if blk_axes else None), None),
     )
 
-    def flat_worker_mean(grads):
-        bufs = jax.vmap(lambda t: flat_engine.pack(lay, t))(grads)
-        bufs = jax.lax.with_sharding_constraint(bufs, buf_shard)
-        g_new = flat_engine.unpack(lay, jnp.mean(bufs, axis=0))
-        return jax.tree.map(
-            jax.lax.with_sharding_constraint, g_new, p_shard
-        )
-
-    def worker_mean(grads):
-        if flat_sync:
-            return flat_worker_mean(grads)
-        return jax.tree.map(lambda t: jnp.mean(t, axis=0), grads)
-
-    def worker_aggregate(grads):
-        """Sync-round server aggregation: the GAR on the worker gradient
-        stack when a robust aggregator is configured, else the mean."""
-        if robust:
-            g_new = aggregator.combine_stacked(grads)
-            return jax.tree.map(
-                jax.lax.with_sharding_constraint, g_new, p_shard
-            )
-        return worker_mean(grads)
+    # the transport owns all wire policy + the bytes-by-tier ledger; the
+    # topology classifies which link tier the worker axes cross. Callers
+    # modeling a production fabric on fake devices (perf/dryrun) pass the
+    # modeled topology; by default the RUNTIME fabric is detected.
+    topo = topology if topology is not None else detect_topology(
+        mesh, multi_pod=multi_pod
+    )
+    transport = make_transport(
+        mesh, topo, waxes, n,
+        backend=compression_backend, compression=compression, qsgd_s=qsgd_s,
+        packed_payload=packed_payload, staged_payload=staged_payload,
+        shared_mask=shared_mask, downlink=downlink, downlink_s=downlink_s,
+        flat_sync=flat_sync, sync_layout=lay, sync_buf_shard=buf_shard,
+        param_shardings=p_shard,
+    )
 
     # mesh sync steps are keyless by design, so the (rare) sync-round
     # garbage noise draws from a fixed key — every other attack is
@@ -662,11 +269,7 @@ def build_train_steps(
     def robust_delta(key, diffs, rows_n):
         """Robust compressed-round delta: per-worker dense payload rows →
         GAR → parameter-sharding pins (replaces the fused mean)."""
-        rows = _decompress_worker_rows(
-            key, diffs, rows_n, packed_payload=packed_payload,
-            backend=compression_backend, compression=compression,
-            qsgd_s=qsgd_s,
-        )
+        rows = transport.worker_rows(key, diffs, rows_n)
         delta = aggregator.combine_stacked(rows)
         return jax.tree.map(
             jax.lax.with_sharding_constraint, delta, p_shard
@@ -678,15 +281,8 @@ def build_train_steps(
         if robust:
             delta = robust_delta(k_up, diffs, n)
         else:
-            delta = _compress_decompress_mean(
-                k_up, diffs, n, mesh, waxes,
-                shared_mask, packed_payload, staged_payload,
-                out_shardings=p_shard, backend=compression_backend,
-                compression=compression, qsgd_s=qsgd_s,
-            )
-        return _downlink_roundtrip(
-            k_down, delta, downlink, downlink_s, packed_payload
-        )
+            delta = transport.uplink_mean(k_up, diffs, out_shardings=p_shard)
+        return transport.downlink(k_down, delta)
 
     if grad_carry:
         # single-backprop rounds: the carry holds h_i^k = ∇f_i(x^k), so the
@@ -697,7 +293,11 @@ def build_train_steps(
             grads = worker_grads(x_new, batch)
             # h keeps the HONEST gradients: liars lie on the wire, the
             # simulated clients still know their own state
-            return x_new, worker_aggregate(sync_uplink(grads)), grads
+            return (
+                x_new,
+                transport.sync_aggregate(sync_uplink(grads), aggregator),
+                grads,
+            )
 
         def compressed_step(params, g, h, batch, key):
             x_new = descend(params, g)
@@ -726,7 +326,9 @@ def build_train_steps(
         def sync_step(params, g, batch):
             x_new = descend(params, g)
             grads = worker_grads(x_new, batch)
-            return x_new, worker_aggregate(sync_uplink(grads))
+            return x_new, transport.sync_aggregate(
+                sync_uplink(grads), aggregator
+            )
 
         def compressed_step(params, g, batch, key):
             x_new = descend(params, g)
@@ -750,155 +352,22 @@ def build_train_steps(
                 None,
             )
 
+    pp_meta = {}
     if participation is not None:
-        # -- PP-MARINA on the mesh (DESIGN.md §4.8) -------------------------
-        # sync rounds are unchanged (all n clients ship dense gradients —
-        # the sync_step above); compressed rounds take the cohort row `sel`
-        # from pp_cohort_schedule and override compressed/train below.
-        r_part, scheme = participation
-        assert scheme in ("with", "without"), scheme
-        assert 1 <= r_part <= n, f"cohort r={r_part} vs n={n} workers"
-        assert not shared_mask, (
-            "participation composes with randk/permk/qsgd, not shared_mask "
-            "(a shared mask already correlates the whole fleet)"
+        # federated PP-MARINA cohort rounds override compressed/train
+        # (launch/participation.py — sync rounds stay as built above)
+        compressed_step, train_step, pp_meta = build_pp_steps(
+            participation, n=n, per_worker=per_worker, p=p, block=BLOCK,
+            kb=KB, shared_mask=shared_mask, compression=compression,
+            compression_backend=compression_backend, qsgd_s=qsgd_s,
+            replicate_params=replicate_params, inner=inner,
+            param_shapes=param_shapes, p_shard=p_shard,
+            batch_shard=batch_shard, mesh=mesh, transport=transport,
+            downlink=downlink, robust=robust, aggregator=aggregator,
+            faults=faults, grad_carry=grad_carry, sync_step=sync_step,
+            worker_grads=worker_grads, descend=descend,
+            robust_delta=robust_delta,
         )
-        # cohort-mapped compute needs the r clients' rows to respread evenly
-        # over the n worker shards in whole tokens-per-shard units
-        grp = cohort_group_size(n, r_part)
-        cohort_compute = grp is not None and (per_worker * r_part) % n == 0
-        # flat-PP: where packing cannot force a reshard (same predicate as
-        # flat_sync auto), the r-row payload pipeline IS the core engine —
-        # pack → sampler → aggregate with the identical key/seed derivation,
-        # which is what makes mesh rounds trajectory-equal to core PPMarina.
-        flat_pp = replicate_params or not inner
-        pp_eng = None
-        if flat_pp and compression in ("randk", "permk", "qsgd"):
-            if compression == "permk" and BLOCK % r_part != 0:
-                flat_pp = False
-            else:
-                # seed_constraint pins the threefry seed derivation
-                # replicated: the SPMD partitioner otherwise re-partitions
-                # the split→bits chain and yields different seed VALUES
-                # than one device — the silent killer of core↔mesh
-                # trajectory equality (core/flat.py).
-                pp_eng = flat_engine.make_engine(
-                    param_shapes, kb=KB, block=BLOCK,
-                    backend=compression_backend, sampler=compression,
-                    s=qsgd_s,
-                )
-                pp_eng = dataclasses.replace(
-                    pp_eng, seed_constraint=shd.replicated(mesh)
-                )
-        else:
-            flat_pp = False
-
-        def cohort_grads(x, batch, sel):
-            """Per-client gradients of the r sampled clients.
-
-            Cohort-mapped: gather the r clients' batch rows, respread them
-            over all n shards (each shard backprops per_worker·r/n tokens —
-            compute is r/n of a full round), then group-mean the n shard
-            grads back to r client grads (equal sub-batch sizes make the
-            mean of means exact). Masked fallback: every shard backprops its
-            own full batch and only the r sampled rows are kept."""
-            if cohort_compute:
-                sub = (per_worker * r_part) // n
-                sel_b = jax.tree.map(
-                    lambda t: t[sel].reshape(n, sub, *t.shape[2:]), batch
-                )
-                sel_b = jax.tree.map(
-                    jax.lax.with_sharding_constraint, sel_b, batch_shard
-                )
-                wg = worker_grads(x, sel_b)
-                return jax.tree.map(
-                    lambda t: jnp.mean(
-                        t.reshape(r_part, grp, *t.shape[1:]), axis=1
-                    ),
-                    wg,
-                )
-            wg = worker_grads(x, batch)
-            return jax.tree.map(lambda t: t[sel], wg)
-
-        def pp_delta(key, diffs):
-            """(1/r)·Σ Q(Δ_i) over the r cohort payload rows (the GAR over
-            the cohort's decoded rows when robust) + downlink."""
-            k_up, k_down = jax.random.split(key)
-            k_up = k_up if downlink != "none" else key
-            if flat_pp:
-                bufs = flat_engine.pack_stacked(pp_eng.layout, diffs)
-                delta = flat_engine.unpack(
-                    pp_eng.layout,
-                    pp_eng.aggregate(k_up, bufs, r_part, aggregator),
-                )
-                delta = jax.tree.map(
-                    jax.lax.with_sharding_constraint, delta, p_shard
-                )
-            elif robust:
-                delta = robust_delta(k_up, diffs, r_part)
-            else:
-                # sharded fallback: the per-leaf staged wire on the r-row
-                # payload stack (cohort rows replicate — r·ζ, not n·ζ)
-                delta = _compress_decompress_mean(
-                    k_up, diffs, r_part, mesh, (), False,
-                    packed_payload, False,
-                    out_shardings=p_shard, backend=compression_backend,
-                    compression=compression, qsgd_s=qsgd_s,
-                )
-            return _downlink_roundtrip(
-                k_down, delta, downlink, downlink_s, packed_payload
-            )
-
-        if grad_carry:
-            # h is the SERVER-SIDE CARRY TABLE: all n rows live on the mesh,
-            # compressed rounds refresh only the sampled ones.
-            def compressed_step(params, g, h, batch, key, sel):
-                x_new = descend(params, g)
-                cg = cohort_grads(x_new, batch, sel)
-                h_sel = jax.tree.map(lambda t: t[sel], h)
-                diffs = jax.tree.map(jnp.subtract, cg, h_sel)
-                diffs = _uplink_faults(
-                    faults, jax.random.fold_in(key, _FAULT_FOLD), diffs,
-                    sel, n,
-                )
-                g_new = jax.tree.map(jnp.add, g, pp_delta(key, diffs))
-                # sampled rows refresh — except dropped clients, whose row
-                # the server never received (core _pp_carry_refresh)
-                h_new = _pp_carry_refresh(h, sel, cg, faults, n)
-                return x_new, g_new, h_new
-
-            def train_step(params, g, h, batch, key, sel):
-                k_b, _, k_q = jax.random.split(key, 3)
-                c_k = jax.random.bernoulli(k_b, p)
-                return jax.lax.cond(
-                    c_k,
-                    lambda _: sync_step(params, g, h, batch),
-                    lambda _: compressed_step(params, g, h, batch, k_q, sel),
-                    None,
-                )
-        else:
-            def compressed_step(params, g, batch, key, sel):
-                x_new = descend(params, g)
-                g_plus = cohort_grads(x_new, batch, sel)
-                g_minus = cohort_grads(params, batch, sel)
-                diffs = jax.tree.map(jnp.subtract, g_plus, g_minus)
-                diffs = _uplink_faults(
-                    faults, jax.random.fold_in(key, _FAULT_FOLD), diffs,
-                    sel, n,
-                )
-                g_new = jax.tree.map(jnp.add, g, pp_delta(key, diffs))
-                return x_new, g_new
-
-            def train_step(params, g, batch, key, sel):
-                # the core PPMarina key discipline: (bern, sel, q) 3-way
-                # split; the sel slot is consumed by pp_cohort_schedule.
-                k_b, _, k_q = jax.random.split(key, 3)
-                c_k = jax.random.bernoulli(k_b, p)
-                return jax.lax.cond(
-                    c_k,
-                    lambda _: sync_step(params, g, batch),
-                    lambda _: compressed_step(params, g, batch, k_q, sel),
-                    None,
-                )
 
     g_shard = p_shard  # estimator g^k lives like the params
     key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
@@ -925,14 +394,23 @@ def build_train_steps(
         jax.ShapeDtypeStruct((participation[0],), jnp.int32) if pp else None
     )
 
-    def entry(fn, needs_key, needs_sel=False):
+    def entry(name, fn, needs_key, needs_sel=False):
         key_in = (repl,) if needs_key else ()
         key_arg = (key_spec,) if needs_key else ()
         sel_in = (repl,) if needs_sel else ()
         sel_arg = (sel_spec,) if needs_sel else ()
+
+        def scoped(*step_args):
+            # ledger bookings from this trace land under the entry's name
+            # (train_step traces both cond branches → books sync +
+            # compressed together; read per-round-type numbers from the
+            # dedicated sync/compressed scopes)
+            with transport.scope(name):
+                return fn(*step_args)
+
         return (
             jax.jit(
-                fn,
+                scoped,
                 in_shardings=(
                     p_shard, g_shard, *h_in, batch_shard, *key_in, *sel_in
                 ),
@@ -943,9 +421,13 @@ def build_train_steps(
         )
 
     fns = {
-        "sync_step": entry(sync_step, needs_key=False),
-        "compressed_step": entry(compressed_step, needs_key=True, needs_sel=pp),
-        "train_step": entry(train_step, needs_key=True, needs_sel=pp),
+        "sync_step": entry("sync_step", sync_step, needs_key=False),
+        "compressed_step": entry(
+            "compressed_step", compressed_step, needs_key=True, needs_sel=pp
+        ),
+        "train_step": entry(
+            "train_step", train_step, needs_key=True, needs_sel=pp
+        ),
     }
     return StepBundle(
         mesh=mesh,
@@ -954,101 +436,14 @@ def build_train_steps(
         param_shardings=p_shard,
         fns=fns,
         meta={
-            **(
-                {
-                    "participation": participation,
-                    "cohort_compute": cohort_compute,
-                    "flat_pp": flat_pp,
-                }
-                if pp
-                else {}
-            ),
+            **pp_meta,
             **({"aggregator": aggregator.rule} if robust else {}),
             **({"faults": faults.attack} if faults is not None else {}),
         },
+        transport=transport,
     )
 
 
-def build_serve_steps(
-    arch: ArchConfig,
-    mesh,
-    multi_pod: bool,
-    *,
-    batch: int,
-    seq_len: int,
-    mode: str,  # "prefill" | "decode"
-    dtype=jnp.bfloat16,
-    last_logits: bool = False,
-):
-    """Jitted serving steps for MARINA-trained checkpoints: "prefill" (full
-    attention over the prompt, cache build) or "decode" (one token, donated
-    cache) under the arch's GSPMD shardings — see launch/serve.py."""
-    cfg = arch.model
-    param_shapes = jax.eval_shape(
-        lambda k: init_params(k, cfg, dtype), jax.random.PRNGKey(0)
-    )
-    p_shard = shd.param_sharding_tree(param_shapes, mesh, arch.fsdp)
-    baxes = shd.serve_batch_axes(mesh, batch)
-    repl = shd.replicated(mesh)
-
-    fns = {}
-    if mode == "prefill":
-        P_len = arch.prefix_len
-        tok_len = seq_len - P_len
-        toks = jax.ShapeDtypeStruct((batch, tok_len), jnp.int32)
-        tok_shard = NamedSharding(
-            mesh, P(baxes if not baxes or len(baxes) > 1 else baxes[0], None)
-        )
-        args = [toks]
-        shards = [tok_shard]
-        if P_len:
-            pre = jax.ShapeDtypeStruct((batch, P_len, cfg.d_model), dtype)
-            args.append(pre)
-            shards.append(
-                NamedSharding(
-                    mesh,
-                    P(baxes if not baxes or len(baxes) > 1 else baxes[0], None, None),
-                )
-            )
-
-        def prefill_step(params, tokens, prefix=None):
-            return model_prefill(
-                params, cfg, tokens, prefix, max_len=seq_len,
-                last_logits_only=last_logits,
-            )
-
-        fns["prefill_step"] = (
-            jax.jit(
-                prefill_step,
-                in_shardings=(p_shard, *shards),
-                out_shardings=None,
-            ),
-            (param_shapes, *args),
-        )
-    else:
-        cache_shapes = jax.eval_shape(
-            lambda: init_cache(cfg, batch, seq_len, dtype)
-        )
-        c_shard = shd.cache_sharding_tree(cache_shapes, mesh, baxes)
-        tok = jax.ShapeDtypeStruct((batch,), jnp.int32)
-        pos = jax.ShapeDtypeStruct((), jnp.int32)
-
-        def serve_step(params, cache, token, pos):
-            return model_decode(params, cfg, cache, token, pos)
-
-        fns["decode_step"] = (
-            jax.jit(
-                serve_step,
-                in_shardings=(p_shard, c_shard, repl, repl),
-                out_shardings=(None, c_shard),
-                donate_argnums=(1,),
-            ),
-            (param_shapes, cache_shapes, tok, pos),
-        )
-    return StepBundle(
-        mesh=mesh,
-        n_workers=1,
-        param_shapes=param_shapes,
-        param_shardings=p_shard,
-        fns=fns,
-    )
+# Serving assembly moved to launch/serve_steps.py (ISSUE 7 split); re-export
+# so existing callers (dryrun, perf, check_api_docs) keep one import site.
+from repro.launch.serve_steps import build_serve_steps  # noqa: E402,F401

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import PUBLIC_TO_MODULE, get_arch
-from repro.launch.mesh import make_production_mesh
+from repro.launch.topology import make_production_mesh, production_topology
 from repro.launch import param_math
 from repro.roofline import analyze_compiled
 
@@ -69,8 +69,12 @@ def run_one(arch_name: str, shape_name: str, mesh_name: str, overrides=None) -> 
     arch = get_arch(arch_name)
     spec = SHAPES[shape_name]
     multi_pod = mesh_name == "multi"
+    # one mesh + one modeled fabric per production shape — the topology layer
+    # is the single source for both (the old duplicate n_dev constants drifted
+    # from the mesh construction by design pressure alone)
     mesh = make_production_mesh(multi_pod=multi_pod)
-    n_dev = 512 if multi_pod else 256
+    topo = production_topology(multi_pod=multi_pod)
+    n_dev = topo.n_devices
     overrides = overrides or {}
 
     t0 = time.time()
@@ -78,6 +82,7 @@ def run_one(arch_name: str, shape_name: str, mesh_name: str, overrides=None) -> 
         bundle = build_train_steps(
             arch, mesh, multi_pod,
             global_batch=spec["global_batch"], seq_len=spec["seq_len"],
+            topology=topo,   # book wire bits under the MODELED fabric's tiers
             **overrides,
         )
         tokens = spec["global_batch"] * spec["seq_len"]
@@ -121,7 +126,9 @@ def run_one(arch_name: str, shape_name: str, mesh_name: str, overrides=None) -> 
                 # old point (2× oracle), sync rounds evaluate once
                 step_mf = mf * (2.0 if name == "compressed_step" else 1.0) \
                     if name != "train_step" else mf
-                rep = analyze_compiled(compiled, n_dev, model_flops_total=step_mf)
+                rep = analyze_compiled(
+                    compiled, n_dev, model_flops_total=step_mf, topology=topo
+                )
                 entry.update(rep.to_dict())
                 try:
                     ma = compiled.memory_analysis()

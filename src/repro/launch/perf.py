@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from repro.configs import get_arch
 from repro.launch import param_math
 from repro.launch.dryrun import SHAPES, OUT_DIR
-from repro.launch.mesh import make_production_mesh
+from repro.launch.topology import make_production_mesh, production_topology
 from repro.roofline import analyze_compiled
 
 PERF_DIR = os.path.join(os.path.dirname(OUT_DIR), "perf")
@@ -100,12 +100,14 @@ def run_variant(arch_name, shape_name, mesh_name, variant):
     spec = SHAPES[shape_name]
     multi_pod = mesh_name == "multi"
     mesh = make_production_mesh(multi_pod=multi_pod)
-    n_dev = 512 if multi_pod else 256
+    topo = production_topology(multi_pod=multi_pod)
+    n_dev = topo.n_devices
 
     if spec["kind"] == "train":
         bundle = build_train_steps(
             arch, mesh, multi_pod,
             global_batch=spec["global_batch"], seq_len=spec["seq_len"],
+            topology=topo,   # book wire bits under the MODELED fabric's tiers
             **overrides,
         )
         tokens = spec["global_batch"] * spec["seq_len"]
@@ -138,7 +140,9 @@ def run_variant(arch_name, shape_name, mesh_name, variant):
                 entry["compile_s"] = time.time() - t0
                 step_mf = mf * (2.0 if name == "compressed_step" else 1.0) \
                     if name != "train_step" else mf
-                rep = analyze_compiled(compiled, n_dev, model_flops_total=step_mf)
+                rep = analyze_compiled(
+                    compiled, n_dev, model_flops_total=step_mf, topology=topo
+                )
                 entry.update(rep.to_dict())
                 try:
                     ma = compiled.memory_analysis()
@@ -157,6 +161,10 @@ def run_variant(arch_name, shape_name, mesh_name, variant):
                 entry["error"] = f"{type(e).__name__}: {e}"
                 entry["traceback"] = traceback.format_exc()[-3000:]
             result["steps"][name] = entry
+    tr = getattr(bundle, "transport", None)
+    if tr is not None and tr.ledger.bits:
+        # the bytes-by-link-tier ledger of whatever the loop above traced
+        result["wire_by_tier"] = tr.ledger.to_dict()
     return result
 
 

@@ -1,0 +1,100 @@
+"""Serving round assembly: jitted prefill/decode steps for MARINA-trained
+checkpoints under the arch's GSPMD shardings (launch/serve.py drives them;
+the train-side assembly lives in launch/distributed.py)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchConfig
+from repro.models import init_cache, init_params, decode_step as model_decode, prefill as model_prefill
+from repro.launch import sharding as shd
+
+
+def build_serve_steps(
+    arch: ArchConfig,
+    mesh,
+    multi_pod: bool,
+    *,
+    batch: int,
+    seq_len: int,
+    mode: str,  # "prefill" | "decode"
+    dtype=jnp.bfloat16,
+    last_logits: bool = False,
+):
+    """Jitted serving steps for MARINA-trained checkpoints: "prefill" (full
+    attention over the prompt, cache build) or "decode" (one token, donated
+    cache) under the arch's GSPMD shardings — see launch/serve.py."""
+    from repro.launch.distributed import StepBundle
+
+    cfg = arch.model
+    param_shapes = jax.eval_shape(
+        lambda k: init_params(k, cfg, dtype), jax.random.PRNGKey(0)
+    )
+    p_shard = shd.param_sharding_tree(param_shapes, mesh, arch.fsdp)
+    baxes = shd.serve_batch_axes(mesh, batch)
+    repl = shd.replicated(mesh)
+
+    fns = {}
+    if mode == "prefill":
+        P_len = arch.prefix_len
+        tok_len = seq_len - P_len
+        toks = jax.ShapeDtypeStruct((batch, tok_len), jnp.int32)
+        tok_shard = NamedSharding(
+            mesh, P(baxes if not baxes or len(baxes) > 1 else baxes[0], None)
+        )
+        args = [toks]
+        shards = [tok_shard]
+        if P_len:
+            pre = jax.ShapeDtypeStruct((batch, P_len, cfg.d_model), dtype)
+            args.append(pre)
+            shards.append(
+                NamedSharding(
+                    mesh,
+                    P(baxes if not baxes or len(baxes) > 1 else baxes[0], None, None),
+                )
+            )
+
+        def prefill_step(params, tokens, prefix=None):
+            return model_prefill(
+                params, cfg, tokens, prefix, max_len=seq_len,
+                last_logits_only=last_logits,
+            )
+
+        fns["prefill_step"] = (
+            jax.jit(
+                prefill_step,
+                in_shardings=(p_shard, *shards),
+                out_shardings=None,
+            ),
+            (param_shapes, *args),
+        )
+    else:
+        cache_shapes = jax.eval_shape(
+            lambda: init_cache(cfg, batch, seq_len, dtype)
+        )
+        c_shard = shd.cache_sharding_tree(cache_shapes, mesh, baxes)
+        tok = jax.ShapeDtypeStruct((batch,), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def serve_step(params, cache, token, pos):
+            return model_decode(params, cfg, cache, token, pos)
+
+        fns["decode_step"] = (
+            jax.jit(
+                serve_step,
+                in_shardings=(p_shard, c_shard, repl, repl),
+                out_shardings=(None, c_shard),
+                donate_argnums=(1,),
+            ),
+            (param_shapes, cache_shapes, tok, pos),
+        )
+    return StepBundle(
+        mesh=mesh,
+        n_workers=1,
+        param_shapes=param_shapes,
+        param_shardings=p_shard,
+        fns=fns,
+    )

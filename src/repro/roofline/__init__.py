@@ -2,6 +2,7 @@ from .analysis import (
     HW,
     CollectiveStats,
     RooflineReport,
+    alpha_beta_disagreement,
     analyze_compiled,
     collective_bytes_from_hlo,
 )
@@ -10,6 +11,7 @@ __all__ = [
     "HW",
     "CollectiveStats",
     "RooflineReport",
+    "alpha_beta_disagreement",
     "analyze_compiled",
     "collective_bytes_from_hlo",
 ]

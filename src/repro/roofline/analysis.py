@@ -16,6 +16,27 @@ under standard ring-algorithm accounting:
     collective-permute  bytes
 
 Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+**Per-tier α–β collective model (ISSUE 7).** A flat ici bandwidth misprices
+exactly the regime MARINA targets: the cross-pod (dcn) link is ~8× slower
+than ici and adds ~25µs launch latency per collective. When a
+``launch.topology.Topology`` is passed to :func:`analyze_compiled`, every
+collective is classified by its replica groups — by the member device ids
+when the HLO records them (explicit lists or the iota reshape-transpose
+form: a group strided across pods is dcn no matter how narrow), by group
+size otherwise (wider than one pod must cross the dcn; wider than one
+process likewise on the local CPU cluster) — and the collective term
+becomes the α–β cost
+
+    collective_s = Σ_tier  counts_tier · α_tier  +  bytes_tier / β_tier
+
+with (α = per-collective launch latency, β = link bandwidth) taken from the
+topology's link table (``launch/topology.py::DEFAULT_LINKS`` documents the
+default constants: loopback 0.5µs / 100 GB/s, ici 1µs / 50 GB/s, dcn 25µs /
+6.25 GB/s). Without a topology the historical flat-ici model is used, so
+pre-ISSUE-7 perf JSONs stay comparable. :func:`alpha_beta_disagreement` is
+the REFUTED-style check: it flags recorded rooflines that disagree with the
+α–β model by more than 2× (scripts/check_all.py sweeps experiments/perf/).
 """
 
 from __future__ import annotations
@@ -47,6 +68,10 @@ _COLL_RE = re.compile(
 )
 _GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}")
 _GROUPS_BRACKET_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?"
+)
+_TIER_ORDER = ("loopback", "ici", "dcn")  # mirrors core.wire.LINK_TIERS
 
 
 def _shape_bytes(shape_str: str) -> float:
@@ -62,6 +87,54 @@ def _shape_bytes(shape_str: str) -> float:
                 n *= int(d)
         total += n * _DTYPE_BYTES[dt]
     return total
+
+
+def _replica_group_ids(line: str):
+    """Device ids of every replica group, when the HLO spells them out.
+
+    Handles the explicit-list form (``replica_groups={{0,16},{1,17}}``) and
+    the iota reshape-transpose form (``replica_groups=[16,32]<=[16,2,16]
+    T(1,0,2)``). Returns a list of id-lists, or None when only the group
+    size survives (caller falls back to size-based classification)."""
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        ng, gs = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        n = 1
+        for d in dims:
+            n *= d
+        if n != ng * gs or n > 1 << 20:
+            return None
+        import numpy as np
+
+        ids = np.arange(n)
+        if m.group(4) is not None:
+            perm = [int(x) for x in m.group(4).split(",")]
+            ids = ids.reshape(dims).transpose(perm).reshape(-1)
+        return [[int(i) for i in row] for row in ids.reshape(ng, gs)]
+    key = "replica_groups={"
+    i = line.find(key)
+    if i < 0:
+        return None
+    j, depth = i + len(key) - 1, 0
+    for j in range(i + len(key) - 1, len(line)):
+        if line[j] == "{":
+            depth += 1
+        elif line[j] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+    body = line[i + len(key): j]
+    groups = []
+    for part in body.split("},"):
+        part = part.strip().strip("{}")
+        if not part:
+            continue
+        try:
+            groups.append([int(x) for x in part.split(",") if x.strip()])
+        except ValueError:
+            return None
+    return groups or None
 
 
 def _group_size(line: str, default: int) -> int:
@@ -81,11 +154,15 @@ class CollectiveStats:
     per_device_bytes: float = 0.0
     counts: dict = dataclasses.field(default_factory=dict)
     by_kind_bytes: dict = dataclasses.field(default_factory=dict)
+    # per-link-tier splits (empty when no topology classified the groups)
+    by_tier_bytes: dict = dataclasses.field(default_factory=dict)
+    by_tier_counts: dict = dataclasses.field(default_factory=dict)
 
 
-def collective_bytes_from_hlo(hlo_text: str, n_devices: int) -> CollectiveStats:
+def collective_bytes_from_hlo(
+    hlo_text: str, n_devices: int, topology: Optional[Any] = None
+) -> CollectiveStats:
     stats = CollectiveStats()
-    seen_done = set()
     for line in hlo_text.splitlines():
         m = _COLL_RE.search(line)
         if not m:
@@ -110,6 +187,21 @@ def collective_bytes_from_hlo(hlo_text: str, n_devices: int) -> CollectiveStats:
         stats.per_device_bytes += wire
         stats.counts[kind] = stats.counts.get(kind, 0) + 1
         stats.by_kind_bytes[kind] = stats.by_kind_bytes.get(kind, 0.0) + wire
+        if topology is not None:
+            # the slowest link any replica group must cross: classify by the
+            # actual member ids when the HLO records them (a 32-device group
+            # strided across two pods is dcn even though it is far narrower
+            # than a pod), by group size otherwise
+            groups = _replica_group_ids(line)
+            if groups:
+                tier = max(
+                    (topology.tier_for_ids(ids) for ids in groups),
+                    key=_TIER_ORDER.index,
+                )
+            else:
+                tier = topology.tier_for_group_size(g)
+            stats.by_tier_bytes[tier] = stats.by_tier_bytes.get(tier, 0.0) + wire
+            stats.by_tier_counts[tier] = stats.by_tier_counts.get(tier, 0) + 1
     return stats
 
 
@@ -122,6 +214,7 @@ class RooflineReport:
     hw: HW = dataclasses.field(default_factory=HW)
     model_flops_total: Optional[float] = None
     peak_memory_per_device: Optional[float] = None
+    topology: Optional[Any] = None  # launch.topology.Topology (α–β model)
 
     @property
     def compute_s(self) -> float:
@@ -146,8 +239,22 @@ class RooflineReport:
         return self.bytes_per_device / self.hw.hbm_bw
 
     @property
-    def collective_s(self) -> float:
+    def collective_s_flat(self) -> float:
+        """The historical single-bandwidth model (bytes / flat ici bw)."""
         return self.collective.per_device_bytes / self.hw.ici_bw
+
+    @property
+    def collective_s(self) -> float:
+        """Collective term: the per-tier α–β cost when a topology classified
+        the replica groups, else the flat-ici fallback."""
+        if self.topology is None or not self.collective.by_tier_bytes:
+            return self.collective_s_flat
+        total = 0.0
+        for tier, byts in self.collective.by_tier_bytes.items():
+            link = self.topology.link(tier)
+            total += self.collective.by_tier_counts.get(tier, 0) * link.alpha_s
+            total += byts / link.bw
+        return total
 
     @property
     def dominant(self) -> str:
@@ -172,6 +279,19 @@ class RooflineReport:
             "collective_bytes_per_device": self.collective.per_device_bytes,
             "collective_counts": self.collective.counts,
             "collective_by_kind_bytes": self.collective.by_kind_bytes,
+            **(
+                {
+                    "collective_by_tier_bytes": self.collective.by_tier_bytes,
+                    "collective_by_tier_counts": self.collective.by_tier_counts,
+                    "collective_s_flat": self.collective_s_flat,
+                    "link_table": {
+                        t: {"alpha_s": sp.alpha_s, "bw": sp.bw}
+                        for t, sp in dict(self.topology.links).items()
+                    },
+                }
+                if self.topology is not None
+                else {}
+            ),
             "analytic_compute_s": self.analytic_compute_s,
             "compute_s": self.compute_s,
             "memory_s": self.memory_s,
@@ -184,8 +304,32 @@ class RooflineReport:
         }
 
 
+def alpha_beta_disagreement(
+    recorded_s: float, modeled_s: float, factor: float = 2.0
+) -> Optional[dict]:
+    """REFUTED-style flag for recorded-vs-model roofline drift (ISSUE 7).
+
+    ``recorded_s`` is the collective term a perf JSON recorded (typically
+    the flat-ici model of its day); ``modeled_s`` the per-tier α–β cost of
+    the same HLO. A >``factor``× ratio either way earns REFUTED — the
+    recorded number can't be trusted as a cross-host prediction (the
+    variant's collectives are dominated by a link tier the flat model
+    mispriced). Returns None when either side is degenerate (zero-collective
+    steps have nothing to disagree about)."""
+    if recorded_s <= 0.0 or modeled_s <= 0.0:
+        return None
+    ratio = max(recorded_s / modeled_s, modeled_s / recorded_s)
+    return {
+        "ratio": ratio,
+        "verdict": "REFUTED" if ratio > factor else "CONFIRMED",
+    }
+
+
 def analyze_compiled(
-    compiled, n_devices: int, model_flops_total: Optional[float] = None
+    compiled,
+    n_devices: int,
+    model_flops_total: Optional[float] = None,
+    topology: Optional[Any] = None,
 ) -> RooflineReport:
     cost = compiled.cost_analysis() or {}
     if isinstance(cost, (list, tuple)):  # older jax: one dict per device
@@ -194,7 +338,7 @@ def analyze_compiled(
     flops = float(cost.get("flops", 0.0))
     byts = float(cost.get("bytes accessed", 0.0))
     hlo = compiled.as_text()
-    coll = collective_bytes_from_hlo(hlo, n_devices)
+    coll = collective_bytes_from_hlo(hlo, n_devices, topology)
 
     peak = None
     try:
@@ -215,4 +359,5 @@ def analyze_compiled(
         n_devices=n_devices,
         model_flops_total=model_flops_total,
         peak_memory_per_device=peak,
+        topology=topology,
     )

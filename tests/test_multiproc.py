@@ -1,0 +1,174 @@
+"""Multi-process launch tests (ISSUE 7, `multiproc` marker).
+
+The worker program below is ONE program run two ways through the same
+bring-up path (`topology.spawn_local_cluster` → `init_from_env` →
+`jax.distributed.initialize` with gloo CPU collectives):
+
+* 2 processes × 2 fake devices — the worker ("data") axis crosses the OS
+  process boundary, so every payload collective genuinely leaves the
+  process (the local cluster's simulated dcn);
+* 1 process × 4 fake devices — the historical fake-device simulation.
+
+Both runs execute a sync round plus three compressed grad-carry MARINA
+rounds on identical data (all randomness flows from threefry keys, which
+are layout-independent) and print the parameter/estimator trajectory and
+the link tiers the transport booked. The assertions:
+
+1. the trajectories agree across process layouts (the refactor's
+   trajectory-equality contract extends across the process boundary — only
+   collective reduction order may differ, so tolerance is float32-tight,
+   not bitwise);
+2. every rank of the 2-process run agrees exactly (same global program);
+3. the ledger books the SAME bits under "dcn" cross-process that the
+   single-process run books under "loopback" — the wire cost is a property
+   of the algorithm, the tier is a property of the fabric.
+
+Excluded from tier-1 (`-m "not multiproc"` in pytest.ini): each run
+compiles the reduced model per process. CI runs these in the dedicated
+`multiproc` job. Run locally:  pytest -m multiproc tests/test_multiproc.py
+"""
+
+import re
+
+import numpy as np
+import pytest
+
+from repro.launch.topology import spawn_local_cluster
+
+pytestmark = pytest.mark.multiproc
+
+
+_WORKER_PROG = r"""
+from repro.launch import topology as topo
+pid, nproc = topo.init_from_env()
+
+import dataclasses
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.launch import sharding as shd
+from repro.launch.distributed import build_train_steps
+from repro.models import init_params, reduced
+
+n_dev = jax.device_count()
+assert n_dev == 4, n_dev
+mesh = jax.make_mesh((n_dev, 1), ("data", "model"))
+
+t = topo.detect_topology(mesh)
+expect = "dcn" if nproc > 1 else "loopback"
+assert t.tier_for_axes(("data",)) == expect, (t.axis_tiers, nproc)
+assert t.n_processes == nproc
+
+arch = get_arch("qwen1.5-0.5b")
+arch = dataclasses.replace(arch, model=reduced(arch.model, layers=2, d_model=64))
+bundle = build_train_steps(
+    arch, mesh, multi_pod=False, global_batch=2 * n_dev, seq_len=32,
+    gamma=0.1, dtype=jnp.float32, grad_carry=True,
+)
+cfg = arch.model
+rep = NamedSharding(mesh, P())
+
+# all state is materialized INSIDE jit from threefry keys with replicated
+# output sharding: bit-identical values regardless of the process layout,
+# and globally addressable on every rank
+params = jax.jit(
+    lambda: init_params(jax.random.PRNGKey(0), cfg, jnp.float32),
+    out_shardings=rep,
+)()
+g0 = jax.tree.map(jnp.zeros_like, params)
+h0 = jax.tree.map(lambda p: jnp.zeros((n_dev, *p.shape), p.dtype), params)
+toks = jax.jit(
+    lambda: jax.random.randint(
+        jax.random.PRNGKey(1), (n_dev, 2, 32), 0, cfg.vocab_size
+    ),
+    out_shardings=rep,
+)()
+
+# the step fns are jitted with explicit in_shardings, and multi-process jit
+# refuses to silently reshard committed arrays — place the state exactly
+# where the round assembly expects it (same shardings build_train_steps
+# computed: fsdp off and replicate_params off => inner batch axis None)
+tr = bundle.transport
+p_shard = tr.param_shardings
+wlead = tr.waxes if len(tr.waxes) > 1 else tr.waxes[0]
+h_shard = jax.tree.map(
+    lambda ns: NamedSharding(mesh, P(wlead, *ns.spec)), p_shard
+)
+b_shard = NamedSharding(mesh, shd.batch_spec(tr.waxes, None, 3))
+params = jax.device_put(params, p_shard)
+g0 = jax.device_put(g0, p_shard)
+h0 = jax.device_put(h0, h_shard)
+batch = {"tokens": jax.device_put(toks, b_shard)}
+
+
+def checksum(tree):
+    fp = jax.jit(
+        lambda s: sum(jnp.sum(leaf) for leaf in jax.tree.leaves(s)),
+        out_shardings=rep,
+    )(tree)
+    return float(fp)
+
+
+traj = []
+with bundle.mesh:
+    fs, _ = bundle.fns["sync_step"]
+    fc, _ = bundle.fns["compressed_step"]
+    x, g, h = fs(params, g0, h0, batch)
+    traj += [checksum(x), checksum(g)]
+    for i in range(3):
+        # numpy keys: host-consistent across ranks, no committed-device traps
+        x, g, h = fc(x, g, h, batch, np.asarray(jax.random.PRNGKey(10 + i)))
+        traj += [checksum(x), checksum(g)]
+
+led = bundle.transport.ledger
+up_tiers = sorted({tier for (_s, d, tier, _k) in led.bits if d == "up"})
+assert up_tiers == [expect], (up_tiers, expect)
+print("TIERS", ",".join(up_tiers))
+print("UPBITS", repr(led.total_bits(direction="up")))
+print("TRAJ", " ".join(f"{v:.9e}" for v in traj), flush=True)
+"""
+
+
+def _parse(stdout: str, tag: str) -> str:
+    m = re.search(rf"^{tag} (.+)$", stdout, re.M)
+    assert m, f"no {tag} line in:\n{stdout[-2000:]}"
+    return m.group(1)
+
+
+def _run(num_processes: int, devices_per_process: int):
+    results = spawn_local_cluster(
+        _WORKER_PROG,
+        num_processes=num_processes,
+        devices_per_process=devices_per_process,
+    )
+    for r in results:
+        assert r.returncode == 0, (
+            f"rank failed ({num_processes}p):\n{r.stderr[-4000:]}"
+        )
+    return results
+
+
+def test_two_process_compressed_carry_matches_single_process():
+    mp = _run(num_processes=2, devices_per_process=2)
+    sp = _run(num_processes=1, devices_per_process=4)
+
+    # every rank of the 2-process run computed the same global trajectory
+    assert _parse(mp[0].stdout, "TRAJ") == _parse(mp[1].stdout, "TRAJ")
+
+    traj_mp = np.array([float(v) for v in _parse(mp[0].stdout, "TRAJ").split()])
+    traj_sp = np.array([float(v) for v in _parse(sp[0].stdout, "TRAJ").split()])
+    assert traj_mp.shape == traj_sp.shape == (8,)
+    assert np.all(np.isfinite(traj_mp))
+    # cross-process gloo collectives may reduce in a different order than the
+    # single-process fused all-reduce — float32-tight, not bitwise
+    np.testing.assert_allclose(traj_mp, traj_sp, rtol=1e-5, atol=1e-6)
+
+    # same wire, different fabric: identical booked bits, re-tiered
+    assert _parse(mp[0].stdout, "TIERS") == "dcn"
+    assert _parse(sp[0].stdout, "TIERS") == "loopback"
+    assert float(_parse(mp[0].stdout, "UPBITS")) == pytest.approx(
+        float(_parse(sp[0].stdout, "UPBITS"))
+    )

@@ -413,7 +413,7 @@ _PP_MESH_PROG = textwrap.dedent(
 
     from repro.configs import get_arch
     from repro.launch.distributed import build_train_steps, pp_cohort_schedule
-    from repro.launch.mesh import make_federated_mesh
+    from repro.launch.topology import make_federated_mesh
     from repro.models import reduced, init_params, lm_loss
     from repro.core import PPMarina, BlockRandK, make_engine
     from repro.core.marina import MarinaState
