@@ -14,6 +14,13 @@ participation + §Byzantine robustness) by scripts/update_perf.py:
   the cohort-mapped PP round (only r of n shards backprop, r payload rows on
   the wire) on the reduced-qwen LM step, and books the per-round wire bits
   from repro.core.wire.
+* **Straggler wall-clock curves** (`--only async`) — the deadline-cohort
+  harness of DESIGN.md §4.10: synchronous MARINA (every round waits for the
+  slowest client) vs DeadlineMarina at honest-quantile deadlines (missed
+  clients ride the carry table as PP non-participants), with and without
+  stale-difference acceptance, under lognormal / exponential / fixed-slow
+  compute-time models (core/roundtime.py). Reports simulated wall clock to
+  MATCHED loss — the `async` section of BENCH_pp.json.
 * **Adversarial grid** (`--only robust`) — the Byzantine stress test of
   DESIGN.md §4.9: attack (sign_flip / omniscient mean_shift / label_flip /
   drop) × GAR (mean / trimmed_mean / coordinate_median / krum / norm_clip)
@@ -24,8 +31,9 @@ participation + §Byzantine robustness) by scripts/update_perf.py:
   rows: the fused robust epilogues vs the fused mean on the reduced-qwen
   flat layout — the `scripts/check_robust.py` CI gate metric.
 
-Run: PYTHONPATH=src python -m benchmarks.bench_pp [--quick] [--only pp|robust|all]
-(or  PYTHONPATH=src python -m benchmarks.run --only pp|robust [--quick])
+Run: PYTHONPATH=src python -m benchmarks.bench_pp [--quick]
+     [--only pp|robust|async|all]
+(or  PYTHONPATH=src python -m benchmarks.run --only pp|robust|async [--quick])
 """
 
 from __future__ import annotations
@@ -44,12 +52,15 @@ import numpy as np
 
 from repro.core import (
     DCGD,
+    DeadlineMarina,
     Diana,
     FaultSpec,
     Marina,
     PPMarina,
     RandK,
+    RoundTimeModel,
     ServerAggregator,
+    async_marina_gamma,
     diana_alpha,
     diana_gamma,
     flip_binclass_labels,
@@ -461,17 +472,185 @@ def bench_robust_roundtime(quick=False, emit=print):
     return row
 
 
+# --- Straggler / deadline wall-clock harness (DESIGN.md §4.10) -------------
+#
+# The paper's curves are loss-vs-bits; a federated fleet also pays WALL
+# CLOCK, and a synchronous round costs the slowest client. The harness runs
+# DeadlineMarina on the same Dirichlet non-IID problem and Rand3 wire as the
+# pp curves, under three straggler distributions, and reports simulated
+# wall clock to a MATCHED loss: synchronous full participation (a deadline
+# no draw reaches — bit-identical trajectory to Marina carry, wall = max
+# client time per round) vs deadline cohorts at honest-quantile deadlines,
+# with and without stale-difference acceptance.
+
+#: deadline no compute-time draw ever reaches: every client makes every
+#: round, so the trajectory IS synchronous MARINA and the wall clock pays
+#: max_i T_i — the baseline the deadline variants race.
+NEVER_MISS_S = 1e9
+
+ASYNC_TIMES = {
+    # multiplicative heterogeneity with a heavy right tail (σ = 1: the p99
+    # honest client is ~6× the median)
+    "lognormal": RoundTimeModel(dist="lognormal", mean_s=1.0, sigma=1.0),
+    # memoryless service times
+    "exponential": RoundTimeModel(dist="exponential", mean_s=1.0),
+    # two persistently slow clients at 8×: the static-drop regime — a
+    # deadline permanently excludes the same cohort every round
+    "fixed_slow": RoundTimeModel(
+        dist="fixed", mean_s=1.0, slow_ids=(3, 11), slow_factor=8.0
+    ),
+}
+
+
+def _expected_arrive_frac(tm: RoundTimeModel, deadline: float) -> float:
+    """Expected per-round arrival fraction under a deadline: honest clients
+    beat it w.p. 1 − miss_prob; the persistently slow set (slow_factor ≥
+    deadline/mean for every model here) is counted fully missing."""
+    slow = len(tm.slow_ids) / N_CLIENTS
+    return (1.0 - tm.miss_prob(deadline)) * (1.0 - slow)
+
+
+def _run_async_curve(method, data, steps, every):
+    state = method.init(jnp.zeros((DIM,)), data)
+    step = jax.jit(method.step)
+    bits = wall = up = 0.0
+    pts = [{"round": 0, "wall_s": 0.0, "mbits_up": 0.0,
+            "loss": _loss(state.params, data),
+            "gradsq": _gradsq(state.params, data)}]
+    t0 = time.time()
+    for k in range(steps):
+        state, met = step(state, jax.random.PRNGKey(k), data)
+        bits += float(met.bits_per_worker) * N_CLIENTS   # fleet uplink
+        wall += float(met.wall_clock_s)
+        up += float(met.uploaded)
+        if (k + 1) % every == 0:
+            pts.append({
+                "round": k + 1,
+                "wall_s": wall,
+                "mbits_up": bits / 1e6,
+                "loss": _loss(state.params, data),
+                "gradsq": _gradsq(state.params, data),
+            })
+    us = (time.time() - t0) / steps * 1e6
+    return pts, up / (steps * N_CLIENTS), us
+
+
+def bench_async_curves(quick=False, emit=print):
+    """Loss-vs-wall-clock curves per straggler distribution: synchronous
+    MARINA vs deadline cohorts (tau_max = 0) vs deadline + stale acceptance
+    (tau_max = 2), every variant at its heuristic stepsize
+    (:func:`async_marina_gamma` on the expected arrival fraction)."""
+    steps = 400 if quick else 2000
+    every = 25 if quick else 50
+    data = make_dirichlet_binclass(
+        jax.random.PRNGKey(7), N_CLIENTS, M_LOCAL, DIM, alpha=0.1
+    )
+    L = binclass_smoothness(data)
+    comp = RandK(k=3)
+    omega = comp.omega(DIM)
+    p = comp.default_p(DIM)
+    grad = jax.grad(nonconvex_binclass_loss)
+    names = ("lognormal", "fixed_slow") if quick else tuple(ASYNC_TIMES)
+    quants = (0.8,) if quick else (0.6, 0.8)
+    curves = []
+    for dist_name in names:
+        tm = ASYNC_TIMES[dist_name]
+        variants = [(
+            "sync", None, 0,
+            DeadlineMarina(
+                grad, comp, marina_gamma(L, omega, p, N_CLIENTS), p,
+                deadline=NEVER_MISS_S, times=tm,
+            ),
+        )]
+        for q in quants:
+            dl = tm.deadline_for_quantile(q)
+            arrive = _expected_arrive_frac(tm, dl)
+            variants.append((
+                f"deadline_q{q:g}", q, 0,
+                DeadlineMarina(
+                    grad, comp,
+                    async_marina_gamma(
+                        L, omega, p, N_CLIENTS, arrive_frac=arrive
+                    ),
+                    p, deadline=dl, times=tm,
+                ),
+            ))
+        # stale acceptance at the tightest deadline: late uploads land
+        # within 2 rounds instead of vanishing; γ additionally degrades
+        # with the anchor-age heuristic
+        q = quants[0]
+        dl = tm.deadline_for_quantile(q)
+        arrive = _expected_arrive_frac(tm, dl)
+        variants.append((
+            f"deadline_q{q:g}_tau2", q, 2,
+            DeadlineMarina(
+                grad, comp,
+                async_marina_gamma(
+                    L, omega, p, N_CLIENTS, arrive_frac=arrive, staleness=1.0
+                ),
+                p, deadline=dl, times=tm, tau_max=2,
+            ),
+        ))
+        for vname, q, tau, method in variants:
+            pts, arrived, us = _run_async_curve(method, data, steps, every)
+            curves.append({
+                "dist": dist_name, "variant": vname, "quantile": q,
+                "tau_max": tau, "deadline_s": float(method.deadline),
+                "gamma": float(method.gamma), "steps": steps,
+                "arrived_frac": arrived, "points": pts,
+            })
+            emit(f"async/{dist_name}/{vname}", us,
+                 f"final_loss={pts[-1]['loss']:.4f};"
+                 f"wall_s={pts[-1]['wall_s']:.1f};arrived={arrived:.2f}")
+    return curves
+
+
+def async_wall_table(curves):
+    """Simulated wall clock to a MATCHED loss, per distribution: the target
+    is the worst final loss among that distribution's variants (so every
+    variant reaches it), wall_s the first logged point at/below it, and
+    speedup_vs_sync the headline — how much sooner the deadline round
+    delivers the same loss than waiting for the slowest client."""
+    rows = []
+    for dist in sorted({c["dist"] for c in curves}):
+        group = [c for c in curves if c["dist"] == dist]
+        target = max(c["points"][-1]["loss"] for c in group)
+        row = {"dist": dist, "target_loss": target,
+               "wall_s": {}, "rounds": {}}
+        for c in group:
+            hit = next(
+                (pt for pt in c["points"] if pt["loss"] <= target), None
+            )
+            row["wall_s"][c["variant"]] = hit["wall_s"] if hit else None
+            row["rounds"][c["variant"]] = hit["round"] if hit else None
+        sync_wall = row["wall_s"].get("sync")
+        row["speedup_vs_sync"] = {
+            v: (sync_wall / w if sync_wall and w else None)
+            for v, w in row["wall_s"].items()
+        }
+        rows.append(row)
+    return rows
+
+
 def _write_merged(update):
-    """Read-merge-update BENCH_pp.json so `--only robust` doesn't clobber the
-    pp curves (and vice versa)."""
+    """Read-merge-update BENCH_pp.json so `--only robust` doesn't clobber
+    the pp curves (and vice versa). The write is ATOMIC: the merged JSON is
+    serialized to a temp file in the same directory and os.replace'd over
+    the target, so a run killed mid-write (a CI timeout on `--quick`) can
+    only ever leave a stray temp file — never a truncated/corrupt
+    BENCH_pp.json that would take the other sections' results with it."""
     path = os.path.join(ROOT, "BENCH_pp.json")
     out = {}
     if os.path.exists(path):
         with open(path) as f:
             out = json.load(f)
     out.update(update)
-    with open(path, "w") as f:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
         json.dump(out, f, indent=2)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
     print(f"# wrote {os.path.normpath(path)}", file=sys.stderr)
     return out
 
@@ -506,16 +685,37 @@ def bench_robust(quick=False, emit=None):
     })
 
 
+def bench_async(quick=False, emit=None):
+    """Entry point shared with benchmarks.run (--only async)."""
+    if emit is None:
+        def emit(name, us, derived):
+            print(f"{name},{us:.2f},{derived}", flush=True)
+    curves = bench_async_curves(quick=quick, emit=emit)
+    return _write_merged({
+        "async": {
+            "quick": bool(quick),
+            "problem": {"n_clients": N_CLIENTS, "m_local": M_LOCAL,
+                        "d": DIM, "compressor": "rand3", "alpha": 0.1},
+            "curves": curves,
+            "wall_table": async_wall_table(curves),
+        },
+    })
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--only", default="all", choices=("pp", "robust", "all"))
+    ap.add_argument(
+        "--only", default="all", choices=("pp", "robust", "async", "all")
+    )
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.only in ("pp", "all"):
         bench_pp(quick=args.quick)
     if args.only in ("robust", "all"):
         bench_robust(quick=args.quick)
+    if args.only in ("async", "all"):
+        bench_async(quick=args.quick)
 
 
 if __name__ == "__main__":

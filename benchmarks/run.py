@@ -23,6 +23,10 @@
     §4.9     → bench_robust            (Byzantine adversarial grid: attack ×
                GAR × faulty fraction on PP-MARINA + robust round-time rows;
                merges into BENCH_pp.json — gated by scripts/check_robust.py)
+    §4.10    → bench_async             (straggler wall-clock harness:
+               synchronous MARINA vs deadline cohorts vs stale acceptance
+               under lognormal/exponential/fixed-slow compute times; merges
+               the `async` section into BENCH_pp.json)
 
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call = step wall time;
 derived = the figure-of-merit for that table).
@@ -188,6 +192,16 @@ def bench_robust(quick=False):
     from benchmarks.bench_pp import bench_robust as run_robust
 
     run_robust(quick=quick, emit=emit)
+
+
+def bench_async(quick=False):
+    """Straggler/deadline harness (benchmarks/bench_pp.py --only async):
+    simulated wall clock to matched loss — synchronous MARINA vs deadline
+    cohorts vs stale acceptance under lognormal/exponential/fixed-slow
+    client compute times. Merges the ``async`` section into BENCH_pp.json."""
+    from benchmarks.bench_pp import bench_async as run_async
+
+    run_async(quick=quick, emit=emit)
 
 
 def bench_lm(quick=False):
@@ -768,6 +782,7 @@ def main():
         "vr": bench_vr,
         "pp": bench_pp,
         "robust": bench_robust,
+        "async": bench_async,
         "lm": bench_lm,
         "kernels": bench_kernels,
         "compression": bench_compression,

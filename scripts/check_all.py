@@ -6,6 +6,8 @@ local pre-push run invoke ONE script with one summary line per gate:
 * ``roundstep`` — scripts/check_roundstep.py (compressed-round regression
   gate vs the committed baseline; pass fresh JSONs via ``--roundstep``),
 * ``robust``    — scripts/check_robust.py (robust-GAR round-time + semantics),
+* ``async``     — scripts/check_async.py (deadline-cohort bit-identity:
+  p_miss=0 ≡ full participation, static-slow ≡ FaultSpec drop),
 * ``docs``      — scripts/check_docs.py (markdown links + README quickstart),
 * ``api_docs``  — scripts/check_api_docs.py (public-surface docstrings).
 
@@ -98,7 +100,7 @@ def main() -> int:
     ap.add_argument(
         "--skip", default="", metavar="NAMES",
         help="comma-separated gates to skip (e.g. docs-only runners: "
-        "--skip roundstep,robust)",
+        "--skip roundstep,robust,async)",
     )
     args = ap.parse_args()
     skip = {s.strip() for s in args.skip.split(",") if s.strip()}
@@ -111,6 +113,7 @@ def main() -> int:
             False,
         ),
         "robust": ([py, os.path.join(SCRIPTS, "check_robust.py")], False),
+        "async": ([py, os.path.join(SCRIPTS, "check_async.py")], True),
         "docs": ([py, os.path.join(SCRIPTS, "check_docs.py")], False),
         "api_docs": ([py, os.path.join(SCRIPTS, "check_api_docs.py")], True),
     }

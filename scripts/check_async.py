@@ -1,0 +1,109 @@
+"""CI gate for the deadline-cohort async path (DESIGN.md §4.10).
+
+Runs the two equivalence contracts of core/async_rounds.py at test scale
+and fails the job when either stops holding BITWISE:
+
+1. **p_miss = 0** — a deadline no client can ever miss must leave
+   ``DeadlineMarina`` bit-identical to ``Marina(carry=True)``: the
+   (k_bern, k_q) key split is untouched (round-time randomness rides the
+   ``TIME_FOLD`` side channel) and the diff rows coincide, so any drift
+   here means a refactor broke the key discipline or reordered the
+   iterate update (the in-branch-axpy XLA-fusion trap).
+
+2. **static slow set, tau_max = 0** — clients that ALWAYS miss the
+   deadline and are never accepted late must reproduce the static
+   ``FaultSpec("drop", ids=...)`` carry substitution exactly: Δ̂_i = 0
+   rows, no h refresh, and the uploaded·ζ_Q/n billing.
+
+Bitwise (not allclose) on purpose: both sides run the same op sequence in
+one process, so ANY difference is a semantics change, not float noise.
+
+Usage: PYTHONPATH=src python scripts/check_async.py
+"""
+
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+N, M, D = 6, 32, 24
+ROUNDS = 40
+SLOW = (1, 4)
+
+
+def run_pair(label, method_a, method_b, steps=ROUNDS, seed=7):
+    from repro.core.problems import make_synthetic_binclass, nonconvex_binclass_loss
+
+    data = make_synthetic_binclass(jax.random.PRNGKey(0), N, M, D)
+    x0 = jnp.zeros((D,))
+    sa = method_a.init(x0, data)
+    sb = method_b.init(x0, data)
+    step_a = jax.jit(method_a.step)
+    step_b = jax.jit(method_b.step)
+    bits_a = bits_b = 0.0
+    for k in range(steps):
+        key = jax.random.PRNGKey(seed * 100_000 + k)
+        sa, ma = step_a(sa, key, data)
+        sb, mb = step_b(sb, key, data)
+        bits_a += float(ma.bits_per_worker)
+        bits_b += float(mb.bits_per_worker)
+        for name in ("params", "g"):
+            va = np.asarray(getattr(sa, name))
+            vb = np.asarray(getattr(sb, name))
+            if not np.array_equal(va, vb):
+                print(f"{label}: {name} DIVERGED at round {k} "
+                      f"(max |Δ| = {np.max(np.abs(va - vb)):.3e})",
+                      file=sys.stderr)
+                return False
+    if bits_a != bits_b:
+        print(f"{label}: ledger drift — {bits_a} vs {bits_b} bits/worker",
+              file=sys.stderr)
+        return False
+    print(f"{label}: {steps} rounds bit-identical "
+          f"({bits_a:.0f} bits/worker booked on both sides)")
+    return True
+
+
+def main():
+    from repro.core import (
+        DeadlineMarina,
+        FaultSpec,
+        Marina,
+        RandK,
+        RoundTimeModel,
+    )
+    from repro.core.problems import nonconvex_binclass_loss
+
+    grad = jax.grad(nonconvex_binclass_loss)
+    comp = RandK(k=3)
+    gamma, p = 0.05, 0.3
+
+    ok = run_pair(
+        "p_miss=0 (never-miss deadline == full participation)",
+        DeadlineMarina(grad, comp, gamma, p, deadline=1e9,
+                       times=RoundTimeModel(dist="fixed", mean_s=1.0)),
+        Marina(grad, comp, gamma, p, carry=True),
+    )
+    ok &= run_pair(
+        "static slow set (always-miss == FaultSpec drop)",
+        DeadlineMarina(
+            grad, comp, gamma, p, deadline=2.0,
+            times=RoundTimeModel(dist="fixed", mean_s=1.0,
+                                 slow_ids=SLOW, slow_factor=8.0),
+        ),
+        Marina(grad, comp, gamma, p, carry=True,
+               faults=FaultSpec("drop", ids=SLOW)),
+    )
+
+    if not ok:
+        print("FAIL: async equivalence gate", file=sys.stderr)
+        return 1
+    print("async gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -38,8 +38,11 @@ from .marina import Marina, MarinaState, PPMarina, StepMetrics, VRMarina, make_g
 from .baselines import DCGD, Diana, ECSGD, VRDiana
 from .aggregators import ServerAggregator
 from .faults import FaultSpec, flip_binclass_labels
+from .roundtime import RoundTimeModel
+from .async_rounds import AsyncMarinaState, AsyncStepMetrics, DeadlineMarina
 from .stepsize import (
     ab_from_omega,
+    async_marina_gamma,
     diana_alpha,
     diana_gamma,
     marina_comm_per_worker,
@@ -69,7 +72,10 @@ __all__ = [
     "tree_roundtrip", "Marina", "MarinaState", "PPMarina", "StepMetrics",
     "VRMarina", "make_gd", "DCGD", "Diana", "ECSGD", "VRDiana",
     "ServerAggregator", "FaultSpec", "flip_binclass_labels",
-    "ab_from_omega", "diana_alpha", "diana_gamma", "marina_comm_per_worker",
+    "RoundTimeModel", "AsyncMarinaState", "AsyncStepMetrics",
+    "DeadlineMarina",
+    "ab_from_omega", "async_marina_gamma", "diana_alpha", "diana_gamma",
+    "marina_comm_per_worker",
     "marina_gamma", "marina_gamma_ab", "marina_gamma_permk",
     "marina_gamma_pl", "marina_iteration_bound", "permk_default_p",
     "pp_marina_gamma", "robust_marina_gamma", "robust_n_eff",

@@ -1,0 +1,253 @@
+"""Deadline-cohort MARINA: straggler-tolerant rounds on the carry table.
+
+The bridge from PP-MARINA to asynchrony (ROADMAP "Asynchronous /
+straggler-tolerant rounds", DESIGN.md §4.10): the server closes every
+compressed round after a fixed ``deadline``; clients whose compute time
+(drawn from a :class:`repro.core.roundtime.RoundTimeModel`) beats it upload
+the compressed difference against their carry anchor, clients that miss are
+treated EXACTLY like PP non-participants / dropped clients — Δ̂_i = 0 on the
+wire (the mean then contributes the server's anchor h_i back), no h refresh,
+no bits booked. This generalizes the static-prefix ``drop`` fault of
+DESIGN.md §4.9 to a time-driven, varying-size cohort.
+
+Stale-difference acceptance: a client that misses round k by τ =
+⌈T_i/deadline⌉ − 1 rounds keeps computing and its upload LANDS at round
+k + τ. If τ ≤ ``tau_max`` the server accepts it there: the payload is
+∇f_i(x^{k+1}) − h_i against the anchor the client actually diffed (its row
+was pinned while in flight, so server and client agree), and the per-client
+round ``tag`` records how old each anchor is. If τ > tau_max the client
+abandons at the deadline (the staleness bound is public) and rejoins idle
+next round — which is what makes a permanently-slow client with
+``tau_max=0`` IDENTICAL to the static ``drop`` fault. Sync rounds (c_k ~
+Be(p)) stay the rendezvous: every client finishes, in-flight work is
+discarded, all anchors refresh, wall clock pays the slowest client.
+
+Equivalence contracts (enforced by tests + scripts/check_async.py):
+
+* deadline never missed  ⇒ bit-identical to ``Marina(carry=True)`` — the
+  (k_bern, k_q) key split is untouched (time randomness rides
+  :data:`repro.core.roundtime.TIME_FOLD`) and the diff rows coincide;
+* fixed slow set always missing, ``tau_max=0``  ⇒  bit-identical to
+  ``Marina(carry=True, faults=FaultSpec("drop", ids=slow))``.
+
+Tree path only (`engine=None` semantics): the reference estimator the mesh
+and bench layers are checked against, like ``_decompress_mean``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .faults import FaultSpec
+from .marina import (
+    GradFn,
+    _compressed_delta,
+    _per_worker_grads,
+    _round_bits,
+    tree_dim,
+)
+from .compressors import Compressor
+from .roundtime import TIME_FOLD, RoundTimeModel
+from .tree_util import tree_axpy, tree_mean_axis0, tree_norm
+
+PyTree = Any
+
+
+class AsyncStepMetrics(NamedTuple):
+    grad_est_norm: jax.Array   # ‖g^{k+1}‖ (the estimator driving the step)
+    bits_per_worker: jax.Array # fleet uplink / n: uploaded·ζ_Q on deadline
+                               # rounds (only arrived payloads bill), 32d sync
+    sync_round: jax.Array      # c_k (1 = dense rendezvous round)
+    wall_clock_s: jax.Array    # simulated round duration (server view)
+    uploaded: jax.Array        # compressed payloads accepted this round
+    staleness_mean: jax.Array  # mean anchor age over clients, in rounds
+    staleness_max: jax.Array   # oldest anchor age (the γ-rule dial)
+    down_bits: jax.Array       # dense 32d estimator broadcast every round
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AsyncMarinaState:
+    params: PyTree      # lookahead iterate x^{k+1} (carry convention)
+    g: PyTree           # server estimator g^k
+    step: jax.Array
+    h: PyTree           # (n,)-stacked carry anchors, pinned while in flight
+    tag: jax.Array      # (n,) i32: round whose lookahead produced h_i
+                        # (−1 = init; fresh at entry to round k means k−1)
+    pend_g: PyTree      # (n,)-stacked in-flight gradients (late uploads)
+    arrive: jax.Array   # (n,) i32: round the in-flight upload lands; −1 idle
+    born: jax.Array     # (n,) i32: round the in-flight compute started; −1
+
+
+def _where_rows(mask: jax.Array, a: PyTree, b: PyTree) -> PyTree:
+    """Row-select between two worker-stacked trees on a (n,) bool mask."""
+    return jax.tree.map(
+        lambda ta, tb: jnp.where(
+            mask.reshape((-1,) + (1,) * (ta.ndim - 1)), ta, tb
+        ),
+        a, b,
+    )
+
+
+@dataclasses.dataclass
+class DeadlineMarina:
+    """MARINA with deadline cohorts and stale-difference acceptance.
+
+    ``times`` draws each round's per-client compute times; ``deadline`` is
+    the server's round budget; ``tau_max`` the staleness bound on accepted
+    late uploads (0 = deadline misses are pure PP non-participation).
+    Carry-only by construction — the deadline substitution IS the carry
+    table (see the module docstring for the drop/PP equivalences)."""
+
+    grad_fn: GradFn
+    compressor: Compressor
+    gamma: float
+    p: float
+    deadline: float
+    times: RoundTimeModel = RoundTimeModel()
+    tau_max: int = 0
+
+    def __post_init__(self):
+        if self.deadline <= 0.0:
+            raise ValueError("deadline must be positive")
+        if self.tau_max < 0:
+            raise ValueError("tau_max must be non-negative")
+
+    def static_miss_faults(self) -> "FaultSpec | None":
+        """The equivalent static ``drop`` FaultSpec when the slow set ALWAYS
+        misses and late uploads are never accepted — the reference the
+        equivalence tests run ``Marina(carry=True)`` with. None when the
+        configuration is not statically reducible (no fixed slow set, or a
+        staleness window that admits their uploads)."""
+        if not self.times.slow_ids or self.tau_max > 0:
+            return None
+        return FaultSpec("drop", ids=self.times.slow_ids)
+
+    def init(self, params: PyTree, batches: PyTree) -> AsyncMarinaState:
+        n = jax.tree.leaves(batches)[0].shape[0]
+        grads = _per_worker_grads(self.grad_fn, params, batches)
+        g0 = tree_mean_axis0(grads)
+        x1 = tree_axpy(-self.gamma, g0, params)
+        return AsyncMarinaState(
+            params=x1, g=g0, step=jnp.zeros((), jnp.int32), h=grads,
+            tag=jnp.full((n,), -1, jnp.int32),
+            pend_g=jax.tree.map(jnp.zeros_like, grads),
+            arrive=jnp.full((n,), -1, jnp.int32),
+            born=jnp.full((n,), -1, jnp.int32),
+        )
+
+    def step(self, state: AsyncMarinaState, key: jax.Array, batches: PyTree):
+        n = jax.tree.leaves(batches)[0].shape[0]
+        k = state.step
+        # the Marina carry key discipline, untouched: (k_bern, k_q) split,
+        # side-channel randomness via fold_in constants only.
+        k_bern, k_q = jax.random.split(key)
+        c_k = jax.random.bernoulli(k_bern, self.p)
+        k_t = jax.random.fold_in(key, TIME_FOLD)
+        times = self.times.sample(k_t, n)
+        d = tree_dim(state.params)
+        D = jnp.float32(self.deadline)
+
+        # the one backprop of the round at the lookahead point x^{k+1}
+        # (busy clients' rows are computed too — simulation convenience,
+        # their values are never consumed)
+        grads = _per_worker_grads(self.grad_fn, state.params, batches)
+
+        idle = state.arrive < 0            # free to start this round
+        arriving = state.arrive == k       # late upload lands now
+        busy = state.arrive > k            # still crunching an older round
+
+        def sync_branch(_):
+            # rendezvous: in-flight work is discarded, every client ships
+            # the dense gradient, all anchors refresh, tags reset.
+            g_next = tree_mean_axis0(grads)
+            # busy clients finish (or abandon) their in-flight rounds
+            # before computing the sync gradient: ≈ (arrive − k) extra
+            # deadline windows on top of this round's draw.
+            residual = jnp.maximum(state.arrive - k, 0).astype(jnp.float32)
+            wall = jnp.max(times + residual * D)
+            return (
+                g_next, grads,
+                jnp.broadcast_to(k, (n,)).astype(jnp.int32),
+                jax.tree.map(jnp.zeros_like, grads),
+                jnp.full((n,), -1, jnp.int32),
+                jnp.full((n,), -1, jnp.int32),
+                wall, jnp.asarray(n, jnp.int32),
+            )
+
+        def deadline_branch(_):
+            on_time = idle & (times <= D)
+            # staleness of a missed upload: it lands τ windows late
+            tau = jnp.ceil(times / D).astype(jnp.int32) - 1
+            pending = idle & (times > D) & (tau <= self.tau_max)
+
+            contrib = on_time | arriving
+            # accepted rows diff against the anchor BOTH sides hold (in-
+            # flight rows were pinned); everyone else's row is h_i − h_i = 0
+            # — exactly the zero-row carry substitution of the drop fault.
+            up_src = _where_rows(
+                on_time, grads, _where_rows(arriving, state.pend_g, state.h)
+            )
+            diffs = jax.tree.map(jnp.subtract, up_src, state.h)
+            delta = _compressed_delta(
+                self.compressor, None, k_q, diffs, state.params, n
+            )
+            g_next = jax.tree.map(jnp.add, state.g, delta)
+
+            h_next = _where_rows(contrib, up_src, state.h)
+            tag_next = jnp.where(
+                on_time, k, jnp.where(arriving, state.born, state.tag)
+            )
+            pend_next = _where_rows(pending, grads, state.pend_g)
+            arrive_next = jnp.where(
+                pending, k + tau,
+                jnp.where(arriving, -1, state.arrive),
+            )
+            born_next = jnp.where(
+                pending, k, jnp.where(arriving, -1, state.born)
+            )
+            # server view of the round: the deadline is only paid when
+            # someone is late/in flight; an all-on-time round closes at the
+            # slowest on-time upload (the synchronous wall clock).
+            all_on_time = jnp.all(on_time)
+            wall = jnp.where(
+                all_on_time, jnp.max(jnp.where(idle, times, 0.0)), D
+            )
+            uploaded = jnp.sum(contrib.astype(jnp.int32))
+            return (
+                g_next, h_next, tag_next, pend_next, arrive_next,
+                born_next, wall, uploaded,
+            )
+
+        g_next, h_next, tag_next, pend_next, arrive_next, born_next, wall, \
+            uploaded = jax.lax.cond(c_k, sync_branch, deadline_branch, None)
+        # the iterate update happens ONCE, on the cond output — the same op
+        # sequence as Marina._step_carry, which is what keeps the p_miss=0
+        # trajectory bit-identical (XLA fuses an in-branch axpy differently).
+        x_next = tree_axpy(-self.gamma, g_next, state.params)
+        new_state = AsyncMarinaState(
+            params=x_next, g=g_next, step=k + 1, h=h_next, tag=tag_next,
+            pend_g=pend_next, arrive=arrive_next, born=born_next,
+        )
+
+        bits_dense = jnp.asarray(32.0 * d)
+        zeta = _round_bits(self.compressor, None, state.params, n)
+        # fleet-total / n (the PP ledger convention, DESIGN.md §4.8): only
+        # payloads that arrived bill — uploaded·ζ_Q of wire.py, exactly.
+        bits_q = uploaded.astype(jnp.float32) * zeta / n
+        age = (new_state.step - 1) - new_state.tag
+        metrics = AsyncStepMetrics(
+            grad_est_norm=tree_norm(new_state.g),
+            bits_per_worker=jnp.where(c_k, bits_dense, bits_q),
+            sync_round=c_k.astype(jnp.int32),
+            wall_clock_s=wall,
+            uploaded=uploaded,
+            staleness_mean=jnp.mean(age.astype(jnp.float32)),
+            staleness_max=jnp.max(age),
+            down_bits=bits_dense,
+        )
+        return new_state, metrics

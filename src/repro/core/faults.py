@@ -53,12 +53,17 @@ class FaultSpec:
     the fleet (ids ``< ⌊frac·n⌋`` are faulty — fixed, so partial
     participation naturally samples cohorts with a varying Byzantine count);
     ``scale`` the attack amplitude (sign_flip/mean_shift multiplier,
-    garbage standard deviation). Frozen/hashable: safe as jit-static config.
+    garbage standard deviation). ``ids`` optionally names the faulty set
+    EXPLICITLY (overriding the ``frac`` prefix) — the crash/deadline
+    machinery needs arbitrary dead-client sets, not just prefixes: a worker
+    process that dies on the mesh takes its device rows with it, wherever
+    they sit (DESIGN.md §4.10). Frozen/hashable: safe as jit-static config.
     """
 
     attack: str = "sign_flip"
     frac: float = 0.25
     scale: float = 1.0
+    ids: "tuple | None" = None
 
     def __post_init__(self):
         if self.attack not in ATTACKS:
@@ -67,14 +72,32 @@ class FaultSpec:
             )
         if not 0.0 <= self.frac <= 1.0:
             raise ValueError("faulty fraction must be in [0, 1]")
+        if self.ids is not None:
+            ids = tuple(self.ids)
+            if any((not isinstance(i, int)) or i < 0 for i in ids):
+                raise ValueError(
+                    f"faulty ids must be non-negative ints: {ids!r}"
+                )
+            if len(set(ids)) != len(ids):
+                raise ValueError(f"faulty ids has duplicates: {ids!r}")
+            object.__setattr__(self, "ids", tuple(sorted(ids)))
 
     def n_faulty(self, n: int) -> int:
-        """Faulty client count f = ⌊frac·n⌋ of an n-client fleet."""
+        """Faulty client count of an n-client fleet: |ids| when the set is
+        explicit (ids ≥ n don't exist in the fleet), else f = ⌊frac·n⌋."""
+        if self.ids is not None:
+            return sum(1 for i in self.ids if i < n)
         return int(self.frac * n)
 
     def byz_mask(self, ids: jax.Array, n: int) -> jax.Array:
-        """Boolean fault mask for the given client-id rows (ids < f). ``ids``
-        may be traced (a PP cohort) — the threshold is static."""
+        """Boolean fault mask for the given client-id rows: membership in
+        the explicit set when one is named, else the prefix ids < f. ``ids``
+        may be traced (a PP cohort) — the faulty set itself is static."""
+        if self.ids is not None:
+            if not self.ids:
+                return jnp.zeros(ids.shape, bool)
+            hits = ids[..., None] == jnp.asarray(self.ids)
+            return jnp.any(hits, axis=-1)
         return ids < self.n_faulty(n)
 
 

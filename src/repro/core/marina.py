@@ -311,7 +311,19 @@ def _check_robust_config(m) -> None:
     if flt is not None and flt.attack == "drop" and not m.carry:
         raise ValueError(
             "faults='drop' substitutes the server-side carry row h_i for "
-            "the missing upload — carry=True is required (DESIGN.md §4.9)"
+            "the missing upload — carry=True is required (DESIGN.md §4.9); "
+            f"construct {type(m).__name__}(..., carry=True) or drop the "
+            "FaultSpec"
+        )
+    if flt is not None and flt.attack == "drop" and _robust(agg):
+        # a zero payload row stands in for h_i ONLY under mean aggregation
+        # (it contributes exactly h_i/n to the recursion); a GAR treats the
+        # zero rows as candidate payloads and trims/medians/scores them —
+        # a different, silently wrong estimator. Refuse at construction.
+        raise ValueError(
+            "faults='drop' relies on mean aggregation: the zero-row carry "
+            f"substitution is not defined under the {agg.rule!r} GAR "
+            "(DESIGN.md §4.9/§4.10) — use aggregator=None/mean with drop"
         )
 
 

@@ -1,0 +1,138 @@
+"""Per-client compute-time models for straggler simulation (DESIGN.md §4.10).
+
+MARINA's convergence story is stated in rounds and bits; a real federated
+fleet pays WALL CLOCK, and a synchronous round costs the fleet the time of
+its slowest client. :class:`RoundTimeModel` is the dial that turns the
+simulated optimizers into wall-clock benchmarks: each round it draws one
+compute time per client from a heterogeneity distribution —
+
+* ``lognormal``   — multiplicative heterogeneity (the classic straggler
+                    model: most clients near the mean, a heavy right tail),
+                    parameterized so E[T_i] = ``mean_s`` for any ``sigma``;
+* ``exponential`` — memoryless service times, E[T_i] = ``mean_s``;
+* ``fixed``       — every client takes exactly ``mean_s`` (the degenerate
+                    no-straggler baseline, and the deterministic harness the
+                    deadline-equivalence tests are built on);
+
+optionally with a **fixed slow set**: the clients in ``slow_ids`` take
+``slow_factor``× their drawn time every round (a persistently slow shard —
+the regime where a deadline permanently excludes the same cohort and the
+carry table pins their anchors, exactly the static ``drop`` fault).
+
+Sampling is jittable and keyed: the async round derives the time key from
+the step key via :data:`TIME_FOLD` (like ``_DOWN_FOLD``/``_FAULT_FOLD`` in
+``core/marina.py``), so adding wall-clock simulation NEVER perturbs the
+``(k_bern, k_q)`` split — timed and untimed trajectories stay bit-identical.
+
+The quantile helpers are host-side (pure ``math``): benchmarks pick the
+per-round deadline as a quantile of the honest (non-slow) distribution,
+e.g. ``deadline_for_quantile(0.8)`` admits ~80% of honest uploads per round.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from statistics import NormalDist
+
+import jax
+import jax.numpy as jnp
+
+#: fold_in constant deriving the round-time key from the step key WITHOUT
+#: perturbing the (k_bern, k_q) split — wall-clock simulation must not
+#: change the optimizer's Bernoulli/compressor randomness (reads "CLOC").
+TIME_FOLD = 0xC10C
+
+DISTS = ("lognormal", "exponential", "fixed")
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundTimeModel:
+    """Static description of per-client compute-time heterogeneity.
+
+    ``dist`` is one of :data:`DISTS`; ``mean_s`` the mean honest compute
+    time (seconds; the unit is nominal — every downstream number is a
+    ratio); ``sigma`` the lognormal shape (ignored otherwise); ``slow_ids``
+    an optional fixed set of persistently slow clients whose drawn time is
+    multiplied by ``slow_factor``. Frozen/hashable: safe as jit-static
+    config, like :class:`repro.core.faults.FaultSpec`.
+    """
+
+    dist: str = "lognormal"
+    mean_s: float = 1.0
+    sigma: float = 0.5
+    slow_ids: tuple = ()
+    slow_factor: float = 4.0
+
+    def __post_init__(self):
+        if self.dist not in DISTS:
+            raise ValueError(f"unknown dist {self.dist!r}, expected {DISTS}")
+        if self.mean_s <= 0.0:
+            raise ValueError("mean_s must be positive")
+        if self.sigma < 0.0:
+            raise ValueError("sigma must be non-negative")
+        if self.slow_factor < 1.0:
+            raise ValueError(
+                "slow_factor < 1 would make the slow set FASTER; use the "
+                "honest distribution instead"
+            )
+        ids = tuple(self.slow_ids)
+        if any((not isinstance(i, int)) or i < 0 for i in ids):
+            raise ValueError(f"slow_ids must be non-negative ints: {ids!r}")
+        if len(set(ids)) != len(ids):
+            raise ValueError(f"slow_ids has duplicates: {ids!r}")
+        object.__setattr__(self, "slow_ids", ids)
+
+    # -- sampling (jittable) ------------------------------------------------
+
+    def sample(self, key: jax.Array, n: int) -> jax.Array:
+        """One compute time per client: (n,) f32, E[T_i] = mean_s for
+        honest clients under every ``dist`` (the lognormal is mean-
+        corrected by exp(−σ²/2))."""
+        if self.dist == "lognormal":
+            z = jax.random.normal(key, (n,))
+            t = self.mean_s * jnp.exp(
+                self.sigma * z - 0.5 * self.sigma**2
+            )
+        elif self.dist == "exponential":
+            t = self.mean_s * jax.random.exponential(key, (n,))
+        else:  # fixed
+            t = jnp.full((n,), self.mean_s)
+        if self.slow_ids:
+            slow = jnp.zeros((n,), bool).at[jnp.asarray(self.slow_ids)].set(
+                True
+            )
+            t = jnp.where(slow, self.slow_factor * t, t)
+        return t.astype(jnp.float32)
+
+    # -- host-side quantile helpers (deadline dials) ------------------------
+
+    def deadline_for_quantile(self, q: float) -> float:
+        """The deadline admitting a ``q`` fraction of HONEST uploads per
+        round: the q-quantile of the non-slow compute-time distribution
+        (host-side closed forms; ``fixed`` returns mean_s for any q)."""
+        if not 0.0 < q < 1.0:
+            raise ValueError("quantile must be in (0, 1)")
+        if self.dist == "lognormal":
+            z = NormalDist().inv_cdf(q)
+            return self.mean_s * math.exp(
+                self.sigma * z - 0.5 * self.sigma**2
+            )
+        if self.dist == "exponential":
+            return -self.mean_s * math.log(1.0 - q)
+        return self.mean_s
+
+    def miss_prob(self, deadline: float) -> float:
+        """P(T_i > deadline) for an honest client — the expected per-round
+        non-participation fraction the deadline buys its wall-clock bound
+        with (0 for ``fixed`` whenever deadline ≥ mean_s)."""
+        if deadline <= 0.0:
+            return 1.0
+        if self.dist == "lognormal":
+            z = (
+                math.log(deadline / self.mean_s) + 0.5 * self.sigma**2
+            ) / max(self.sigma, 1e-12)
+            return 1.0 - NormalDist().cdf(z)
+        if self.dist == "exponential":
+            return math.exp(-deadline / self.mean_s)
+        return 0.0 if deadline >= self.mean_s else 1.0

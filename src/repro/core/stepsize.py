@@ -165,6 +165,51 @@ def robust_pp_marina_gamma(
     return pp_marina_gamma(L, omega, p, robust_n_eff(rule, r, f))
 
 
+# ---------------------------------------------------------------------------
+# Deadline/staleness γ degradation (DESIGN.md §4.10)
+#
+# A deadline round looks like a PP round whose cohort the clock sampled:
+# only the clients that beat the deadline (plus accepted late uploads)
+# contribute fresh differences, so the variance-averaging count in the
+# Thm 4.1 view is the expected arrivals r_eff = arrive_frac·n, not n. On
+# top of that, an accepted upload that is τ rounds stale diffs against an
+# anchor τ rounds old: under L-smoothness its second moment grows with the
+# iterate drift ‖x^{k+1} − x^{k−τ+1}‖² ≲ (1+τ)·Σ‖x^{j+1} − x^j‖², which we
+# book as a (1 + τ̄) inflation of the compressor-noise term — the same
+# conservative substitution device as robust_n_eff, NOT a theorem from the
+# paper (MARINA's analysis leaves asynchrony to future work), so the helper
+# is explicitly labeled heuristic. At arrive_frac = 1, staleness = 0 it
+# reduces exactly to marina_gamma.
+# ---------------------------------------------------------------------------
+
+
+def async_marina_gamma(
+    L: float,
+    omega: float,
+    p: float,
+    n: int,
+    arrive_frac: float = 1.0,
+    staleness: float = 0.0,
+) -> float:
+    """Heuristic deadline-MARINA stepsize, degrading with the observed
+    participation and anchor staleness:
+
+        γ = 1 / ( L (1 + sqrt((1−p) ω (1+τ̄) / (p · max(1, ā·n)))) )
+
+    with ā = ``arrive_frac`` (the fraction of clients whose upload made the
+    round — :attr:`AsyncStepMetrics.uploaded`/n averaged over rounds) and
+    τ̄ = ``staleness`` (mean anchor age, ``staleness_mean``). Equals
+    :func:`marina_gamma` at ā = 1, τ̄ = 0; heuristic otherwise (see the
+    section comment)."""
+    if not 0.0 <= arrive_frac <= 1.0:
+        raise ValueError("arrive_frac must be in [0, 1]")
+    if staleness < 0.0:
+        raise ValueError("staleness must be non-negative")
+    n_eff = max(1.0, arrive_frac * n)
+    inflated = omega * (1.0 + staleness)
+    return 1.0 / (L * (1.0 + math.sqrt((1.0 - p) * inflated / (p * n_eff))))
+
+
 def marina_iteration_bound(
     delta0: float, L: float, omega: float, p: float, n: int, eps: float
 ) -> float:

@@ -275,13 +275,26 @@ def build_train_steps(
             jax.lax.with_sharding_constraint, delta, p_shard
         )
 
+    # dropped/crashed clients ride the collective as zero rows (shape
+    # stability across the fleet), but only the surviving uploads bill:
+    # booked uplink == (n − f)·ζ_Q, mirroring the PP r·ζ_Q convention
+    # (DESIGN.md §4.10). drop+GAR is refused at construction, so the
+    # robust path never sees dropped rows.
+    drop_uploaded = (
+        n - faults.n_faulty(n)
+        if faults is not None and faults.attack == "drop" else None
+    )
+
     def compressed_delta(key, diffs):
         k_up, k_down = jax.random.split(key)
         k_up = k_up if downlink != "none" else key
         if robust:
             delta = robust_delta(k_up, diffs, n)
         else:
-            delta = transport.uplink_mean(k_up, diffs, out_shardings=p_shard)
+            delta = transport.uplink_mean(
+                k_up, diffs, out_shardings=p_shard,
+                uploaded_rows=drop_uploaded,
+            )
         return transport.downlink(k_down, delta)
 
     if grad_carry:

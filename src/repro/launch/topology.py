@@ -44,10 +44,22 @@ import os
 import socket
 import subprocess
 import sys
+import time
 from typing import Optional
 
 PROCESS_ENV = "MARINA_MP_PROCESS"       # "<process_id>/<num_processes>"
 COORD_ENV = "MARINA_MP_COORDINATOR"     # "host:port"
+
+# crash/recovery contract (DESIGN.md §4.10): the resilient runner and the
+# worker programs communicate through these —
+CRASH_ENV = "MARINA_MP_CRASH"           # "<rank>@<round>": hard-exit there
+DEAD_ENV = "MARINA_MP_DEAD"             # "2,3": client ids lost to a crash
+RESUME_ENV = "MARINA_MP_RESUME"         # first round the dead set applies
+
+#: per-round liveness marker worker programs print (rank 0 AND every other
+#: rank) after completing each round; the resilient runner reads the stream
+#: back to locate the last fleet-wide completed round after a crash.
+HEARTBEAT = "MARINA_HB"
 
 #: link-tier names, fastest to slowest (mirrors repro.core.wire.LINK_TIERS)
 TIERS = ("loopback", "ici", "dcn")
@@ -324,24 +336,15 @@ def _free_port() -> int:
     return port
 
 
-def spawn_local_cluster(
+def _launch_procs(
     prog: str,
-    *,
-    num_processes: int = 2,
-    devices_per_process: int = 2,
-    timeout: float = 560.0,
-    extra_env: Optional[dict] = None,
+    num_processes: int,
+    devices_per_process: int,
+    extra_env: Optional[dict],
 ) -> list:
-    """Run ``prog`` (python source) in ``num_processes`` subprocesses wired
-    into one jax.distributed cluster; each child sees
-    ``devices_per_process`` fake CPU devices and must call
-    :func:`init_from_env` before computing. Returns the per-process
-    ``CompletedProcess`` list (rank order) — callers assert on
-    returncode/stdout.
-
-    This is the CI-sized stand-in for real multi-host bring-up: same
-    initialize path, same global meshes, same cross-process collectives
-    (gloo), just on localhost."""
+    """Start the cluster's subprocesses (rank order) on a fresh coordinator
+    port — the shared bring-up of :func:`spawn_local_cluster` and
+    :func:`run_resilient_cluster`."""
     port = _free_port()
     env_base = dict(os.environ)
     env_base["XLA_FLAGS"] = (
@@ -366,18 +369,268 @@ def spawn_local_cluster(
                 text=True, env=env,
             )
         )
-    done = []
+    return procs
+
+
+class ClusterBringupError(RuntimeError):
+    """A local-cluster attempt came back with failed children. Carries the
+    per-rank ``CompletedProcess`` list so the retry wrapper can surface the
+    LAST attempt's stderr when the budget runs out."""
+
+    def __init__(self, message: str, results: Optional[list] = None):
+        super().__init__(message)
+        self.results = results
+
+
+def spawn_local_cluster(
+    prog: str,
+    *,
+    num_processes: int = 2,
+    devices_per_process: int = 2,
+    timeout: float = 560.0,
+    extra_env: Optional[dict] = None,
+    retry=None,
+) -> list:
+    """Run ``prog`` (python source) in ``num_processes`` subprocesses wired
+    into one jax.distributed cluster; each child sees
+    ``devices_per_process`` fake CPU devices and must call
+    :func:`init_from_env` before computing. Returns the per-process
+    ``CompletedProcess`` list (rank order) — callers assert on
+    returncode/stdout.
+
+    This is the CI-sized stand-in for real multi-host bring-up: same
+    initialize path, same global meshes, same cross-process collectives
+    (gloo), just on localhost.
+
+    ``retry`` (a :class:`repro.launch.transport.RetryPolicy`) hardens the
+    flaky bring-up: the whole attempt is torn down and relaunched — fresh
+    port, fresh children — when it times out or any child exits nonzero
+    (gloo rendezvous races ARE whole-cluster failures; a half-alive fleet
+    cannot be patched). Each attempt gets ``retry.timeout_s``; backoff
+    sleeps between attempts; the last attempt's failure propagates
+    (``TimeoutExpired``) or returns its failed results for the caller's
+    returncode asserts."""
+
+    def one_attempt(attempt_timeout: float) -> list:
+        procs = _launch_procs(
+            prog, num_processes, devices_per_process, extra_env
+        )
+        done = []
+        for p in procs:
+            try:
+                out, err = p.communicate(timeout=attempt_timeout)
+            except subprocess.TimeoutExpired:
+                for q in procs:
+                    q.kill()
+                raise
+            done.append(
+                subprocess.CompletedProcess(p.args, p.returncode, out, err)
+            )
+        return done
+
+    if retry is None:
+        return one_attempt(timeout)
+
+    from repro.launch.transport import retry_call  # deferred: transport imports topology
+
+    def attempt() -> list:
+        results = one_attempt(retry.timeout_s)
+        bad = [i for i, r in enumerate(results) if r.returncode != 0]
+        if bad:
+            raise ClusterBringupError(
+                f"cluster ranks {bad} exited nonzero", results=results
+            )
+        return results
+
+    try:
+        return retry_call(
+            attempt, retry,
+            retryable=(ClusterBringupError, subprocess.TimeoutExpired),
+        )
+    except ClusterBringupError as exc:
+        return exc.results
+
+
+# ---------------------------------------------------------------------------
+# crash detection + recovery (DESIGN.md §4.10)
+#
+# A killed worker process on the real gloo cluster takes its device rows
+# with it, and every survivor then hangs in the next collective — there is
+# no in-band signal. The resilient runner therefore watches LIVENESS from
+# outside: it polls the children, and the moment any rank dies it kills the
+# survivors (they are blocked, not recoverable), reads the buffered stdout
+# back, and locates the last fleet-wide completed round from the heartbeat
+# lines every rank prints. Recovery is a relaunch with the dead clients
+# mapped to the static ``drop`` fault (FaultSpec ids) from the first
+# incomplete round onward — deterministic replay makes the recovered
+# trajectory equal the run where those clients had simply missed every
+# deadline from the crash round (tests/test_multiproc.py proves it).
+# ---------------------------------------------------------------------------
+
+
+def clients_of_rank(rank: int, devices_per_process: int) -> tuple:
+    """Client ids a crashed rank takes down: the local-cluster convention
+    maps worker/client i to global device i, and rank r owns the contiguous
+    device block [r·dpp, (r+1)·dpp)."""
+    lo = rank * devices_per_process
+    return tuple(range(lo, lo + devices_per_process))
+
+
+def crash_spec_from_env() -> Optional[tuple]:
+    """Worker side of the crash-fault contract: ``(rank, round)`` parsed
+    from ``MARINA_MP_CRASH="<rank>@<round>"``; None when unset/empty."""
+    spec = os.environ.get(CRASH_ENV, "")
+    if not spec:
+        return None
+    rank_s, round_s = spec.split("@")
+    return (int(rank_s), int(round_s))
+
+
+def maybe_crash(rank: int, round_k: int) -> None:
+    """Process-crash fault injection: hard-exit via ``os._exit`` — no
+    atexit, no flushed collectives, the closest a test gets to a SIGKILL'd
+    worker — when the env names this rank and round. Call at the TOP of the
+    round body, before any collective: the round never completes anywhere."""
+    if crash_spec_from_env() == (rank, round_k):
+        sys.stdout.flush()
+        sys.stderr.flush()
+        os._exit(17)
+
+
+def recovery_from_env() -> tuple:
+    """Worker side of the recovery contract: ``(dead_client_ids,
+    resume_round)`` from ``MARINA_MP_DEAD``/``MARINA_MP_RESUME``. Rounds
+    before ``resume_round`` replay fault-free (the fleet completed them);
+    from it onward the dead ids are a static ``drop`` set. ``((), 0)``
+    when unset — a plain run."""
+    dead_s = os.environ.get(DEAD_ENV, "")
+    dead = tuple(
+        int(x) for x in dead_s.split(",") if x.strip()
+    ) if dead_s else ()
+    resume = int(os.environ.get(RESUME_ENV, "") or 0)
+    return dead, resume
+
+
+def last_heartbeat(text: str) -> int:
+    """Last round a rank reported complete (``MARINA_HB <k>`` lines in its
+    stdout); −1 when it never finished one."""
+    last = -1
+    for line in text.splitlines():
+        parts = line.strip().split()
+        if len(parts) == 2 and parts[0] == HEARTBEAT:
+            try:
+                last = int(parts[1])
+            except ValueError:
+                pass
+    return last
+
+
+@dataclasses.dataclass
+class ClusterOutcome:
+    """What :func:`run_resilient_cluster` observed: per-rank results (rank
+    order; survivors killed after a crash carry their buffered output),
+    the ranks that died on their own, and the last round EVERY rank had
+    completed (min over heartbeats — the resume point)."""
+
+    results: list
+    dead_ranks: tuple
+    last_round: int
+
+    @property
+    def crashed(self) -> bool:
+        return bool(self.dead_ranks)
+
+
+def run_resilient_cluster(
+    prog: str,
+    *,
+    num_processes: int = 2,
+    devices_per_process: int = 2,
+    timeout: float = 560.0,
+    extra_env: Optional[dict] = None,
+    poll_s: float = 0.2,
+) -> ClusterOutcome:
+    """Like :func:`spawn_local_cluster`, but crash-aware: polls child
+    liveness instead of blocking on rank 0. When a rank exits while others
+    run, the survivors (hung in their next gloo collective) are killed
+    immediately — the cluster does NOT stall for ``timeout`` — and the
+    heartbeat streams locate the last fleet-wide completed round. A clean
+    fleet-wide exit returns with ``dead_ranks=()``. The overall ``timeout``
+    is the hang backstop (everything killed, whatever heartbeats were seen
+    are reported)."""
+    procs = _launch_procs(
+        prog, num_processes, devices_per_process, extra_env
+    )
+    deadline = time.monotonic() + timeout
+    dead = ()
+    while time.monotonic() < deadline:
+        codes = [p.poll() for p in procs]
+        dead = tuple(
+            i for i, c in enumerate(codes) if c is not None and c != 0
+        )
+        if dead or all(c is not None for c in codes):
+            break
+        time.sleep(poll_s)
     for p in procs:
-        try:
-            out, err = p.communicate(timeout=timeout)
-        except subprocess.TimeoutExpired:
-            for q in procs:
-                q.kill()
-            raise
-        done.append(
+        if p.poll() is None:
+            p.kill()
+    results = []
+    for p in procs:
+        out, err = p.communicate()
+        results.append(
             subprocess.CompletedProcess(p.args, p.returncode, out, err)
         )
-    return done
+    beats = [last_heartbeat(r.stdout or "") for r in results]
+    return ClusterOutcome(
+        results=results,
+        dead_ranks=dead,
+        last_round=min(beats) if beats else -1,
+    )
+
+
+def run_with_recovery(
+    prog: str,
+    *,
+    num_processes: int = 2,
+    devices_per_process: int = 2,
+    timeout: float = 560.0,
+    extra_env: Optional[dict] = None,
+    retry=None,
+) -> tuple:
+    """The full straggler-tolerance loop: run ``prog`` on the local cluster
+    crash-aware; if a rank dies, relaunch ``prog`` single-process (the
+    survivors' devices fold into one process) with the crashed rank's
+    clients exported as the dead set from the first incomplete round —
+    rounds the fleet completed replay fault-free, everything after treats
+    the dead clients as permanent deadline-missers (the carry/drop
+    substitution). Returns ``(outcome, recovery)`` where ``recovery`` is
+    the recovery run's ``CompletedProcess`` (None when nothing crashed).
+    ``retry`` hardens the recovery relaunch's bring-up."""
+    outcome = run_resilient_cluster(
+        prog,
+        num_processes=num_processes,
+        devices_per_process=devices_per_process,
+        timeout=timeout,
+        extra_env=extra_env,
+    )
+    if not outcome.crashed:
+        return outcome, None
+    dead_clients = ()
+    for r in outcome.dead_ranks:
+        dead_clients += clients_of_rank(r, devices_per_process)
+    recovery_env = dict(extra_env or {})
+    recovery_env[CRASH_ENV] = ""          # the ghost must not die twice
+    recovery_env[DEAD_ENV] = ",".join(str(c) for c in sorted(dead_clients))
+    recovery_env[RESUME_ENV] = str(outcome.last_round + 1)
+    results = spawn_local_cluster(
+        prog,
+        num_processes=1,
+        devices_per_process=num_processes * devices_per_process,
+        timeout=timeout,
+        extra_env=recovery_env,
+        retry=retry,
+    )
+    return outcome, results[0]
 
 
 _DEMO_PROG = r"""

@@ -45,7 +45,8 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-from typing import Any, Optional
+import time
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -105,6 +106,72 @@ def _scatter_mean_last(vals3d, idx3d, L, backend):
 def _arr_bits(*arrays) -> float:
     """Total wire bits of the staged payload arrays (dtype-exact)."""
     return float(sum(a.size * a.dtype.itemsize * 8 for a in arrays))
+
+
+# -- retry/timeout/backoff (DESIGN.md §4.10) ---------------------------------
+#
+# Real-cluster transport operations — gloo bring-up, worker spawn, the
+# coordinator rendezvous — fail transiently (port races, slow container
+# start). The policy below is the one knob both the launch layer
+# (topology.spawn_local_cluster / run_resilient_cluster) and CI share:
+# bounded attempts, exponential backoff, a per-attempt timeout the caller
+# threads into whatever blocking call it wraps.
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Timeout/retry-with-backoff dial for flaky transport operations.
+
+    ``timeout_s`` bounds a single attempt (callers pass it to their
+    blocking primitive — ``Popen.communicate``, socket connect, …);
+    ``retries`` is the number of RE-tries after the first attempt (0 =
+    fail fast); the sleep before retry ``i`` (0-based) is
+    ``backoff_s · backoff_mult**i``. Frozen/hashable: safe as static
+    config on step bundles and CI env."""
+
+    timeout_s: float = 120.0
+    retries: int = 1
+    backoff_s: float = 1.0
+    backoff_mult: float = 2.0
+
+    def __post_init__(self):
+        if self.timeout_s <= 0.0:
+            raise ValueError("timeout_s must be positive")
+        if self.retries < 0:
+            raise ValueError("retries must be non-negative")
+        if self.backoff_s < 0.0:
+            raise ValueError("backoff_s must be non-negative")
+        if self.backoff_mult < 1.0:
+            raise ValueError("backoff_mult must be >= 1 (backoff never shrinks)")
+
+    def backoff(self, attempt: int) -> float:
+        """Sleep before retry ``attempt`` (0-based): backoff_s·mult^attempt."""
+        return self.backoff_s * self.backoff_mult ** attempt
+
+
+def retry_call(
+    fn: Callable,
+    policy: RetryPolicy,
+    *,
+    retryable: tuple = (Exception,),
+    on_retry: Optional[Callable] = None,
+    sleep: Callable = time.sleep,
+):
+    """Run ``fn()`` under ``policy``: up to ``1 + policy.retries`` attempts,
+    exponential backoff between them, re-raising the last error when the
+    budget is spent. Only ``retryable`` exception types trigger a retry —
+    anything else propagates immediately (a config error must not burn the
+    backoff budget). ``on_retry(attempt, exc)`` observes each failure
+    before the sleep; ``sleep`` is injectable for tests."""
+    for attempt in range(policy.retries + 1):
+        try:
+            return fn()
+        except retryable as exc:
+            if attempt >= policy.retries:
+                raise
+            if on_retry is not None:
+                on_retry(attempt, exc)
+            sleep(policy.backoff(attempt))
 
 
 @dataclasses.dataclass
@@ -236,6 +303,7 @@ class Transport:
         rows_n: Optional[int] = None,
         out_shardings: Optional[PyTree] = None,
         rows_sharded: bool = True,
+        uploaded_rows: Optional[int] = None,
     ) -> PyTree:
         """Per-leaf compressed exchange across workers → dense mean update.
 
@@ -273,9 +341,21 @@ class Transport:
         ``rows_sharded=False`` marks a row stack that is NOT worker-sharded
         (cohort rows replicate — the staging constraints are skipped).
         Books the staged payload's dtype-exact bits: fleet-total / n per
-        round under the worker-axis tier.
+        round under the worker-axis tier. ``uploaded_rows`` scales the
+        booking when some of the staged rows never crossed the wire —
+        dropped/crashed clients ride the collective as zero rows for shape
+        stability, but only the surviving uploads bill (DESIGN.md §4.10:
+        booked uplink == arrived·ζ_Q, mirroring the PP r·ζ_Q convention).
         """
         n = self.n if rows_n is None else rows_n
+        if uploaded_rows is not None and not 0 <= uploaded_rows <= n:
+            raise ValueError(
+                f"uploaded_rows={uploaded_rows} outside [0, {n}] staged rows"
+            )
+        up_frac = 1.0 if uploaded_rows is None else uploaded_rows / n
+
+        def book_up(kind: str, bits: float) -> None:
+            self.book("up", kind, bits * up_frac)
         waxes = self.waxes if rows_sharded else ()
         staged = self.staged_payload if rows_sharded else False
         backend = self.backend
@@ -314,7 +394,7 @@ class Transport:
                 # the replicated round key on every device — no index
                 # payload, no scatter on arrival.
                 sent = vals.astype(jnp.bfloat16) if packed else vals
-                self.book("up", "all-to-all", _arr_bits(sent) / self.n)
+                book_up("all-to-all", _arr_bits(sent) / self.n)
                 sent = jax.lax.with_sharding_constraint(sent, repl)
                 by_slot = jnp.moveaxis(
                     sent.astype(jnp.float32), 0, 1
@@ -338,17 +418,13 @@ class Transport:
                     # lane word cross the collective (0.5 B/coord)
                     words = kref.nibble_pack_ref(q.reshape(n * R, L))
                     words = words.reshape(n, R, L // 8)
-                    self.book(
-                        "up", "all-gather", _arr_bits(words, norm) / self.n
-                    )
+                    book_up("all-gather", _arr_bits(words, norm) / self.n)
                     words = jax.lax.with_sharding_constraint(words, repl)
                     q = kref.nibble_unpack_ref(
                         words.reshape(n * R, L // 8), L
                     ).reshape(n, R, L)
                 else:
-                    self.book(
-                        "up", "all-gather", _arr_bits(q, norm) / self.n
-                    )
+                    book_up("all-gather", _arr_bits(q, norm) / self.n)
                     q = jax.lax.with_sharding_constraint(q, repl)
                 norm = jax.lax.with_sharding_constraint(norm, repl)
 
@@ -377,7 +453,7 @@ class Transport:
                         vals, worker_sharded
                     )
                 # ζ-sized psum over the worker axis; stays sharded on R
-                self.book("up", "psum", _arr_bits(vals) / self.n)
+                book_up("psum", _arr_bits(vals) / self.n)
                 vals_mean = jnp.mean(vals, axis=0)                # (R, kb)
                 dense = _scatter_mean_last(
                     vals_mean[None], idx[None], L, backend
@@ -397,8 +473,8 @@ class Transport:
                     # 4 B/coord, degrading to int32 indices (8 → 6 B/coord)
                     # when L > 32767 (int16 can't address the lane)
                     idx_wire = idx if L > 32767 else idx.astype(jnp.int16)
-                    self.book(
-                        "up", "all-gather",
+                    book_up(
+                        "all-gather",
                         _arr_bits(vals.astype(jnp.bfloat16), idx_wire)
                         / self.n,
                     )
@@ -409,9 +485,7 @@ class Transport:
                         idx_wire, repl
                     ).astype(jnp.int32)
                 else:
-                    self.book(
-                        "up", "all-gather", _arr_bits(vals, idx) / self.n
-                    )
+                    book_up("all-gather", _arr_bits(vals, idx) / self.n)
                     vals = jax.lax.with_sharding_constraint(vals, repl)
                     idx = jax.lax.with_sharding_constraint(idx, repl)
                 dense = _scatter_mean_last(
@@ -429,7 +503,12 @@ class Transport:
         return jax.tree.unflatten(treedef, outs)
 
     def worker_rows(
-        self, key: jax.Array, diffs: PyTree, rows_n: int
+        self,
+        key: jax.Array,
+        diffs: PyTree,
+        rows_n: int,
+        *,
+        uploaded_rows: Optional[int] = None,
     ) -> PyTree:
         """Per-worker DENSE payload rows — what the server actually
         received from each client, before any aggregation (DESIGN.md §4.9).
@@ -444,8 +523,18 @@ class Transport:
         the same payloads cross the same link — and books identically;
         the dense row stack costs the fused path's memory saving.
         ``permk`` is refused upstream (coordinates partition across
-        workers; nothing to aggregate robustly)."""
+        workers; nothing to aggregate robustly). ``uploaded_rows`` scales
+        the booking exactly like :meth:`uplink_mean` — rows that never
+        arrived ride as zeros for shape stability but do not bill."""
         n = rows_n
+        if uploaded_rows is not None and not 0 <= uploaded_rows <= n:
+            raise ValueError(
+                f"uploaded_rows={uploaded_rows} outside [0, {n}] staged rows"
+            )
+        up_frac = 1.0 if uploaded_rows is None else uploaded_rows / n
+
+        def book_up(kind: str, bits: float) -> None:
+            self.book("up", kind, bits * up_frac)
         leaves, treedef = jax.tree.flatten(diffs)
         keys = jax.random.split(key, len(leaves))
         rows = []
@@ -460,22 +549,18 @@ class Transport:
                 q, norm = _qsgd_quantize_rows(lk, x, int(self.qsgd_s))
                 s = int(self.qsgd_s)
                 if self.packed_payload and s <= 7 and L % 8 == 0:
-                    self.book(
-                        "up", "all-gather",
+                    book_up(
+                        "all-gather",
                         (_arr_bits(norm) + _arr_bits(q) / 2) / self.n,
                     )
                     q = _nibble_roundtrip_rows(q)
                 else:
-                    self.book(
-                        "up", "all-gather", _arr_bits(q, norm) / self.n
-                    )
+                    book_up("all-gather", _arr_bits(q, norm) / self.n)
                 dense = q.astype(jnp.float32) * (norm / s)
             else:  # independent Block-RandK masks
                 idx = jax.random.randint(lk, (n, R, kb), 0, L, jnp.int32)
                 vals = _gather_along_last(x, idx, scale, self.backend)
-                self.book(
-                    "up", "all-gather", _arr_bits(vals, idx) / self.n
-                )
+                book_up("all-gather", _arr_bits(vals, idx) / self.n)
                 dense = jax.vmap(
                     lambda v, i: _scatter_mean_last(
                         v[None], i[None], L, self.backend
