@@ -1,0 +1,116 @@
+"""§Serving harness: continuous batching over the paged KV cache vs static
+batching, on a mixed-length workload (DESIGN.md §8).
+
+The workload is the serving regime static batching is worst at: every group
+of ``slots`` requests mixes one long generation with several short ones, so
+the static batch decodes at the pace of its longest member while the paged
+engine backfills freed slots from the admission queue. tokens/s counts
+USEFUL tokens only (what each request asked for) in both modes.
+
+Three configurations over the same requests:
+  * continuous — paged f32 KV pool, per-step admission (the engine);
+  * static    — pad each group to its longest prompt, decode to its longest
+                generation (the legacy serve loop);
+  * continuous_q8 — the int8 quantized-page pool (error model DESIGN.md §8).
+
+Each mode runs twice and the second (warm, compile-free) run is reported.
+Writes BENCH_serve.json — scripts/check_serve.py gates the continuous/static
+ratio against benchmarks/serve_baseline.json; scripts/update_perf.py renders
+the §Serving table in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import jax
+
+
+def _workload_pairs(quick: bool) -> list[tuple[int, int]]:
+    """(prompt_len, gen_len) pairs, skewed within each group of 4."""
+    group = [(32, 96), (8, 4), (8, 4), (16, 8)]
+    reps = 2 if quick else 4
+    return group * reps
+
+
+def bench_serve(quick: bool = False, emit=print):
+    from repro.configs import get_arch
+    from repro.launch.serve import make_workload, run_continuous, run_static
+    from repro.models import init_params, reduced
+
+    arch = get_arch("qwen3-32b")
+    cfg = reduced(arch.model, layers=2, d_model=128)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    pairs = _workload_pairs(quick)
+    slots, page_size, chunk = 4, 8, 16
+
+    def continuous(quantized):
+        return run_continuous(
+            params, cfg, make_workload(cfg, pairs), slots=slots,
+            page_size=page_size, chunk=chunk, quantized=quantized,
+        ).to_dict()
+
+    def static():
+        return run_static(
+            params, cfg, make_workload(cfg, pairs), batch=slots
+        )
+
+    reports = {}
+    for name, fn in (
+        ("continuous", lambda: continuous(False)),
+        ("static", static),
+        ("continuous_q8", lambda: continuous(True)),
+    ):
+        fn()  # compile-warm run (fresh jit closures per call)
+        reports[name] = fn()
+        emit(
+            f"serve/{name}", reports[name]["wall_s"] * 1e6,
+            f"tok_s={reports[name]['tokens_per_s']:.1f};"
+            f"p50_first_ms={reports[name]['first_token_p50_ms']:.0f};"
+            f"p99_done_ms={reports[name]['completion_p99_ms']:.0f}",
+        )
+
+    ratio = (
+        reports["continuous"]["tokens_per_s"]
+        / reports["static"]["tokens_per_s"]
+    )
+    q8_ratio = (
+        reports["continuous_q8"]["tokens_per_s"]
+        / reports["static"]["tokens_per_s"]
+    )
+    emit("serve/continuous_over_static", 0.0, f"ratio={ratio:.2f}x")
+
+    out = {
+        "arch": "qwen3-32b(reduced)",
+        "slots": slots,
+        "page_size": page_size,
+        "chunk": chunk,
+        "workload": [list(p) for p in pairs],
+        "n_requests": len(pairs),
+        "backend": "ref(cpu)" if jax.default_backend() != "tpu" else "pallas",
+        "quick": bool(quick),  # quick numbers are noisy — flagged so the
+                               # rendered table never passes them off as
+                               # the official trajectory
+        "continuous_over_static": ratio,
+        "q8_over_static": q8_ratio,
+        **{k: v for k, v in reports.items()},
+    }
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {os.path.normpath(path)}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    def _emit(name, us, derived):
+        print(f"{name},{us:.2f},{derived}", flush=True)
+
+    bench_serve(quick=args.quick, emit=_emit)

@@ -23,6 +23,9 @@
     §4.9     → bench_robust            (Byzantine adversarial grid: attack ×
                GAR × faulty fraction on PP-MARINA + robust round-time rows;
                merges into BENCH_pp.json — gated by scripts/check_robust.py)
+    §8       → bench_serve             (continuous vs static batching over
+               the paged KV cache, mixed-length workload, f32 vs int8 pages;
+               writes BENCH_serve.json — gated by scripts/check_serve.py)
     §4.10    → bench_async             (straggler wall-clock harness:
                synchronous MARINA vs deadline cohorts vs stale acceptance
                under lognormal/exponential/fixed-slow compute times; merges
@@ -202,6 +205,16 @@ def bench_async(quick=False):
     from benchmarks.bench_pp import bench_async as run_async
 
     run_async(quick=quick, emit=emit)
+
+
+def bench_serve(quick=False):
+    """Serving harness (benchmarks/bench_serve.py): continuous batching over
+    the paged KV cache vs static batching on a mixed-length workload, plus
+    the int8 quantized-page pool. Writes BENCH_serve.json — gated by
+    scripts/check_serve.py, rendered into EXPERIMENTS.md §Serving."""
+    from benchmarks.bench_serve import bench_serve as run_serve
+
+    run_serve(quick=quick, emit=emit)
 
 
 def bench_lm(quick=False):
@@ -784,6 +797,7 @@ def main():
         "robust": bench_robust,
         "async": bench_async,
         "lm": bench_lm,
+        "serve": bench_serve,
         "kernels": bench_kernels,
         "compression": bench_compression,
         "roundstep": bench_roundstep,

@@ -5,6 +5,8 @@ local pre-push run invoke ONE script with one summary line per gate:
 
 * ``roundstep`` — scripts/check_roundstep.py (compressed-round regression
   gate vs the committed baseline; pass fresh JSONs via ``--roundstep``),
+* ``serve``     — scripts/check_serve.py (continuous/static tokens/s ratio
+  vs the committed baseline; pass fresh JSONs via ``--serve``),
 * ``robust``    — scripts/check_robust.py (robust-GAR round-time + semantics),
 * ``async``     — scripts/check_async.py (deadline-cohort bit-identity:
   p_miss=0 ≡ full participation, static-slow ≡ FaultSpec drop),
@@ -98,6 +100,11 @@ def main() -> int:
         "(default: the repo-root BENCH_roundstep.json)",
     )
     ap.add_argument(
+        "--serve", nargs="*", default=None, metavar="JSON",
+        help="fresh BENCH_serve.json files for the serving gate "
+        "(default: the repo-root BENCH_serve.json)",
+    )
+    ap.add_argument(
         "--skip", default="", metavar="NAMES",
         help="comma-separated gates to skip (e.g. docs-only runners: "
         "--skip roundstep,robust,async)",
@@ -110,6 +117,11 @@ def main() -> int:
         "roundstep": (
             [py, os.path.join(SCRIPTS, "check_roundstep.py"),
              *(args.roundstep or [])],
+            False,
+        ),
+        "serve": (
+            [py, os.path.join(SCRIPTS, "check_serve.py"),
+             *(args.serve or [])],
             False,
         ),
         "robust": ([py, os.path.join(SCRIPTS, "check_robust.py")], False),

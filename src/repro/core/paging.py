@@ -1,0 +1,176 @@
+"""Paged KV-cache substrate: fixed-size page pool, free list, block tables.
+
+The serving engine's KV memory is one flat page pool per layer —
+``(npage, page_size, kv_heads, head_dim)``, the KV twin of the flat
+``(nblk, 1024)`` gradient layout in ``core/flat.py`` — plus ONE block
+table shared by every layer: request r's token t lives in page
+``table[r, t // page_size]`` at row ``t % page_size`` of every layer's
+pool. This module owns the *host-side* bookkeeping (allocation is a
+scheduling decision, not a device computation):
+
+* :class:`PagedLayout` — the static geometry (pool size, page size, block
+  table width, decode-slot count). Page 0 is the reserved **null page**:
+  the free list never hands it out, every empty block-table entry points
+  at it, and idle decode slots write their garbage k/v there — so the
+  jitted decode step needs no masking on the write path.
+* :class:`PagePool` — LIFO free list over pages ``1..npage-1`` with
+  conservation checking (a page is either free or owned by exactly one
+  request; double-free and foreign-free raise).
+* :class:`BlockTables` — the ``(n_slots, max_pages)`` int32 host mirror
+  that is shipped to the device each step (it changes with request churn;
+  the pool itself stays donated on-device).
+
+DESIGN.md §8 is the contract; ``launch/scheduler.py`` drives admission and
+eviction; ``models/model.py::paged_decode_step`` consumes the arrays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import numpy as np
+
+#: the reserved trash page: never allocated, absorbs idle-slot writes
+NULL_PAGE = 0
+
+
+class PoolExhausted(RuntimeError):
+    """Raised when an allocation asks for more pages than are free."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Static geometry of the paged KV cache.
+
+    npage:      total pages in the pool, including the reserved null page 0
+    page_size:  tokens per page (the KV-pool analogue of the flat block width)
+    max_pages:  block-table width — the per-request page budget, so a request
+                may hold at most ``max_pages * page_size`` tokens
+    n_slots:    decode batch width (concurrent requests in flight)
+    """
+
+    npage: int
+    page_size: int
+    max_pages: int
+    n_slots: int
+
+    def __post_init__(self):
+        if self.npage < 2:
+            raise ValueError("pool needs the null page plus at least one usable page")
+        if self.page_size < 1 or self.max_pages < 1 or self.n_slots < 1:
+            raise ValueError(f"degenerate layout {self}")
+
+    @property
+    def usable_pages(self) -> int:
+        """Allocatable pages (the null page is never handed out)."""
+        return self.npage - 1
+
+    @property
+    def max_len(self) -> int:
+        """Longest sequence one block-table row can address."""
+        return self.max_pages * self.page_size
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` tokens."""
+        return -(-int(n_tokens) // self.page_size)
+
+
+class PagePool:
+    """LIFO free-list allocator over pages ``1..npage-1``.
+
+    LIFO keeps recently-freed (still cache-warm) pages hot. Every page is
+    either on the free list or owned by exactly one holder; :meth:`free`
+    rejects double-frees and never-allocated ids, and
+    :meth:`check_conservation` asserts the invariant the scheduler tests
+    rely on: ``n_free + n_allocated == usable_pages`` with no overlap.
+    """
+
+    def __init__(self, layout: PagedLayout):
+        self.layout = layout
+        self._free: List[int] = list(range(layout.npage - 1, 0, -1))
+        self._allocated: set = set()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_allocated(self) -> int:
+        return len(self._allocated)
+
+    def alloc(self, k: int) -> List[int]:
+        """Pop ``k`` pages off the free list (all-or-nothing)."""
+        if k < 0:
+            raise ValueError(f"cannot allocate {k} pages")
+        if k > len(self._free):
+            raise PoolExhausted(
+                f"asked for {k} pages with {len(self._free)} free "
+                f"(pool of {self.layout.usable_pages})"
+            )
+        pages = [self._free.pop() for _ in range(k)]
+        self._allocated.update(pages)
+        return pages
+
+    def free(self, pages: Sequence[int]) -> None:
+        """Return pages to the free list; double/foreign frees raise."""
+        for p in pages:
+            if p == NULL_PAGE:
+                raise ValueError("the null page is never allocated or freed")
+            if p not in self._allocated:
+                raise ValueError(f"page {p} is not allocated (double free?)")
+        for p in pages:
+            self._allocated.remove(p)
+            self._free.append(p)
+
+    def check_conservation(self) -> None:
+        """Every usable page is free xor allocated, exactly once."""
+        free = set(self._free)
+        if len(free) != len(self._free):
+            raise AssertionError("free list holds a duplicate page")
+        if free & self._allocated:
+            raise AssertionError(
+                f"pages both free and allocated: {sorted(free & self._allocated)}"
+            )
+        union = free | self._allocated
+        expect = set(range(1, self.layout.npage))
+        if union != expect:
+            raise AssertionError(
+                f"page leak: missing {sorted(expect - union)}, "
+                f"foreign {sorted(union - expect)}"
+            )
+
+
+class BlockTables:
+    """Host mirror of the device block tables: ``(n_slots, max_pages)`` int32.
+
+    Empty entries hold :data:`NULL_PAGE`; :meth:`assign` fills a slot's row
+    with its allocated pages in order, :meth:`clear` nulls it on eviction.
+    ``array`` is the value shipped to the jitted step each iteration.
+    """
+
+    def __init__(self, layout: PagedLayout):
+        self.layout = layout
+        self._table = np.full(
+            (layout.n_slots, layout.max_pages), NULL_PAGE, dtype=np.int32
+        )
+
+    def assign(self, slot: int, pages: Sequence[int]) -> None:
+        if len(pages) > self.layout.max_pages:
+            raise ValueError(
+                f"{len(pages)} pages exceed the block-table width "
+                f"{self.layout.max_pages}"
+            )
+        self._table[slot] = NULL_PAGE
+        self._table[slot, : len(pages)] = np.asarray(pages, np.int32)
+
+    def clear(self, slot: int) -> None:
+        self._table[slot] = NULL_PAGE
+
+    def row(self, slot: int) -> np.ndarray:
+        return self._table[slot].copy()
+
+    @property
+    def array(self) -> np.ndarray:
+        """The current (n_slots, max_pages) int32 table (a defensive copy)."""
+        return self._table.copy()

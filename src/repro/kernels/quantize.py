@@ -384,3 +384,70 @@ def nibble_unpack(
         out_shape=jax.ShapeDtypeStruct((nblk, block), jnp.int8),
         interpret=(backend == "pallas_interpret"),
     )(words)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV-page rows (serving engine quantized-page mode, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+def _absmax_quant_rows_kernel(x_ref, code_ref, scale_ref):
+    x = x_ref[...].astype(jnp.float32)                       # (1, W)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)       # (1, 1)
+    scale = amax * jnp.float32(1.0 / 127.0)  # reciprocal-multiply: see ref
+    safe = jnp.where(scale > 0, scale, 1.0)
+    code_ref[...] = jnp.round(x / safe).astype(jnp.int8)
+    scale_ref[...] = scale
+
+
+def absmax_quant_rows(x2d: jax.Array, *, backend: str = "auto"):
+    """Symmetric absmax int8 quantization per row: (R, W) → (codes int8
+    (R, W), scales f32 (R,)). The KV-page write path — deterministic
+    round-to-nearest-even, no dither (cache rows are read many times, so
+    per-read stochastic noise would not average out like a gradient's);
+    error model |x − x̂| ≤ max|x|/254 per element (DESIGN.md §8)."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        return _ref.absmax_quant_rows_ref(x2d)
+    R, W = x2d.shape
+    codes, scales = pl.pallas_call(
+        _absmax_quant_rows_kernel,
+        grid=(R,),
+        in_specs=[pl.BlockSpec((1, W), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, W), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, W), jnp.int8),
+            jax.ShapeDtypeStruct((R, 1), jnp.float32),
+        ],
+        interpret=(backend == "pallas_interpret"),
+    )(x2d)
+    return codes, scales.reshape(R)
+
+
+def _absmax_dequant_rows_kernel(code_ref, scale_ref, out_ref):
+    out_ref[...] = code_ref[...].astype(jnp.float32) * scale_ref[0, 0]
+
+
+def absmax_dequant_rows(
+    codes: jax.Array, scales: jax.Array, *, backend: str = "auto"
+) -> jax.Array:
+    """(R, W) int8 codes + (R,) f32 scales → (R, W) f32 rows; exact inverse
+    of the representable points of :func:`absmax_quant_rows`."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        return _ref.absmax_dequant_rows_ref(codes, scales)
+    R, W = codes.shape
+    return pl.pallas_call(
+        _absmax_dequant_rows_kernel,
+        grid=(R,),
+        in_specs=[
+            pl.BlockSpec((1, W), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, W), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, W), jnp.float32),
+        interpret=(backend == "pallas_interpret"),
+    )(codes, scales.reshape(R, 1).astype(jnp.float32))

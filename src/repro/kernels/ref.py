@@ -531,3 +531,109 @@ def randk_qsgd_dequant_ref(
     """Composition payload → f32 values ready for scatter-accumulate:
     (n, nblk, kb) int8 + (n, nblk) f32 → (n, nblk, kb) f32. K-sized."""
     return levels.astype(jnp.float32) * (norms / s)[..., None]
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache: block-table-gather attention + int8 page rows (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+#: masking sentinel, matching models/attention.py (exp(−1e30 − m) underflows
+#: to exactly 0.0 in f32, so masked positions contribute exact zeros)
+_NEG_INF = -1e30
+
+
+def paged_gather_ref(pages: jax.Array, tables: jax.Array) -> jax.Array:
+    """(npage, P, ...) pool + (S, max_pages) int32 tables →
+    (S, max_pages·P, ...) per-slot flat cache views. Token t of slot s lands
+    at flat index t (pages are gathered in block-table order), so position
+    masks are plain ``arange(L) < n_valid`` — no indirection survives the
+    gather."""
+    g = pages[tables]                       # (S, maxp, P, ...)
+    S, maxp, P = g.shape[:3]
+    return g.reshape(S, maxp * P, *g.shape[3:])
+
+
+def paged_attend_ref(
+    q: jax.Array, k_flat: jax.Array, v_flat: jax.Array, n_valid: jax.Array
+) -> jax.Array:
+    """Single-query attention over gathered per-slot caches.
+
+    q (S, H, hd); k_flat/v_flat (S, L, KV, hd); n_valid (S,) int32 — valid
+    positions per slot INCLUDING the current token (callers write k_t/v_t
+    before attending). Same op sequence as the dense ``attn_decode`` body
+    (GQA repeat, f32 logits/softmax, v-dtype output) and, per slot, as the
+    Pallas kernel in kernels/paged.py — the bit-exactness contract."""
+    S, H, hd = q.shape
+    KV = k_flat.shape[2]
+    rep = H // KV
+    k_e = jnp.repeat(k_flat, rep, axis=2) if rep > 1 else k_flat
+    v_e = jnp.repeat(v_flat, rep, axis=2) if rep > 1 else v_flat
+    scale = 1.0 / jnp.sqrt(hd)
+    logits = jnp.einsum("shd,skhd->shk", q, k_e).astype(jnp.float32) * scale
+    L = k_flat.shape[1]
+    valid = jnp.arange(L)[None, :] < n_valid[:, None]
+    logits = jnp.where(valid[:, None, :], logits, _NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("shk,skhd->shd", w.astype(v_e.dtype), v_e)
+
+
+def paged_attn_decode_ref(
+    q: jax.Array,
+    kpages: jax.Array,
+    vpages: jax.Array,
+    tables: jax.Array,
+    n_valid: jax.Array,
+) -> jax.Array:
+    """Oracle for the paged-attention decode kernel: gather pages through the
+    block tables, then one-shot masked attention. q (S, H, hd);
+    kpages/vpages (npage, P, KV, hd); tables (S, max_pages) int32;
+    n_valid (S,) int32. Returns (S, H, hd) in v dtype."""
+    return paged_attend_ref(
+        q, paged_gather_ref(kpages, tables), paged_gather_ref(vpages, tables),
+        n_valid,
+    )
+
+
+def absmax_quant_rows_ref(x2d: jax.Array):
+    """Symmetric absmax int8 quantization per row (the quantized-page wire).
+
+    x2d (R, W) → (codes int8 (R, W), scales f32 (R,)): scale = max|x|/127,
+    code = round-to-nearest-even(x / scale). Deterministic (no dither —
+    KV entries are read many times, so unbiased-per-read stochastic noise
+    would not average out the way a gradient's does). Error model:
+    |x − x̂| ≤ scale/2 = max|x|/254 per element (DESIGN.md §8)."""
+    x = x2d.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=1)
+    # multiply by the f32 reciprocal instead of dividing: XLA rewrites x/127
+    # into x * (1/127) in some lowerings but not others, and the kernel must
+    # match this oracle bit-for-bit
+    scale = amax * jnp.float32(1.0 / 127.0)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    codes = jnp.round(x / safe[:, None]).astype(jnp.int8)
+    return codes, scale
+
+
+def absmax_dequant_rows_ref(codes: jax.Array, scales: jax.Array) -> jax.Array:
+    """(R, W) int8 codes + (R,) f32 scales → (R, W) f32 rows."""
+    return codes.astype(jnp.float32) * scales[:, None]
+
+
+def paged_attn_decode_q8_ref(
+    q: jax.Array,
+    kq: jax.Array,
+    vq: jax.Array,
+    k_scale: jax.Array,
+    v_scale: jax.Array,
+    tables: jax.Array,
+    n_valid: jax.Array,
+) -> jax.Array:
+    """Quantized-page decode attention: gather int8 pages (kq/vq
+    (npage, P, KV, hd) int8, scales (npage, P, KV) f32) through the block
+    tables, dequantize ONLY the gathered rows, then the same attention body
+    as the f32 path. HBM traffic for the cache read is int8 + one f32 scale
+    per (row, kv-head) — the 2–4× KV-memory cut of the quantized-page mode."""
+    kgf = paged_gather_ref(kq, tables).astype(jnp.float32)      # (S, L, KV, hd)
+    vgf = paged_gather_ref(vq, tables).astype(jnp.float32)
+    ks = paged_gather_ref(k_scale, tables)                      # (S, L, KV)
+    vs = paged_gather_ref(v_scale, tables)
+    return paged_attend_ref(q, kgf * ks[..., None], vgf * vs[..., None], n_valid)

@@ -29,7 +29,7 @@ from repro.configs import get_arch
 from repro.launch import param_math
 from repro.launch.dryrun import SHAPES, OUT_DIR
 from repro.launch.topology import make_production_mesh, production_topology
-from repro.roofline import analyze_compiled
+from repro.roofline import analyze_compiled, decode_bandwidth_bound_s
 
 PERF_DIR = os.path.join(os.path.dirname(OUT_DIR), "perf")
 
@@ -74,6 +74,9 @@ VARIANTS = {
     "workers_pod_data": ({}, {}, {"worker_axes": "pod_data"}),
     # serving: unembed only the final position during prefill
     "last_logits": ({"last_logits": True}, {}, {}),
+    # serving: paged KV decode — continuous-batching pool sized at 50% mean
+    # occupancy vs the dense n_slots × max_len cache (decode shapes only)
+    "paged_decode": ({"paged": True}, {}, {}),
     # staged payload constraints (new default; variant isolates the delta
     # against the v1 baselines which lowered without staging)
     "staged_payload": ({}, {}, {}),
@@ -112,6 +115,24 @@ def run_variant(arch_name, shape_name, mesh_name, variant):
         )
         tokens = spec["global_batch"] * spec["seq_len"]
         mf = param_math.model_flops(arch.model, tokens)
+    elif overrides.get("paged"):
+        from repro.launch.serve_steps import build_paged_serve_steps
+
+        if spec["kind"] != "decode":
+            raise ValueError("paged_decode variant requires a decode shape")
+        n_slots, page_size = spec["global_batch"], 64
+        max_pages = -(-spec["seq_len"] // page_size)
+        # 50% mean occupancy (+ the reserved null page): the dense cache
+        # streams n_slots × max_len KV rows per decode step regardless of
+        # how full each slot is; the pool holds half that
+        npage = 1 + (n_slots * max_pages) // 2
+        bundle = build_paged_serve_steps(
+            arch, mesh, multi_pod, n_slots=n_slots, npage=npage,
+            page_size=page_size, max_pages=max_pages, chunk=page_size,
+        )
+        tokens = n_slots
+        mf = param_math.model_flops(arch.model, tokens) / 3.0
+        paged_pool = (npage, page_size, max_pages, n_slots)
     else:
         serve_over = {
             k: v for k, v in overrides.items() if k in ("dtype", "last_logits")
@@ -131,6 +152,24 @@ def run_variant(arch_name, shape_name, mesh_name, variant):
         "arch": arch_name, "shape": shape_name, "mesh": mesh_name,
         "variant": variant, "steps": {},
     }
+
+    kv_bytes = dense_kv_bytes = param_bytes = 0.0
+    if overrides.get("paged"):
+        from repro.models import init_cache, init_paged_cache
+
+        def tree_bytes(shapes):
+            return float(sum(
+                l.size * l.dtype.itemsize for l in jax.tree.leaves(shapes)
+            ))
+
+        npage, page_size, max_pages, n_slots = paged_pool
+        kv_bytes = tree_bytes(jax.eval_shape(
+            lambda: init_paged_cache(arch.model, npage, page_size, jnp.bfloat16)
+        ))
+        dense_kv_bytes = tree_bytes(jax.eval_shape(
+            lambda: init_cache(arch.model, n_slots, spec["seq_len"], jnp.bfloat16)
+        ))
+        param_bytes = float(param_math.count_params(arch.model)) * 2.0
     with bundle.mesh:
         for name, (fn, args) in bundle.fns.items():
             entry = {}
@@ -155,6 +194,29 @@ def run_variant(arch_name, shape_name, mesh_name, variant):
                     }
                 except Exception:
                     pass
+                if overrides.get("paged") and name == "paged_decode_step":
+                    # analytic streaming floor for the step: the paged pool's
+                    # live bytes vs the dense cache it replaces, collectives
+                    # priced on the dominant-by-bytes link tier
+                    stats = rep.collective
+                    tier = (
+                        max(stats.by_tier_bytes, key=stats.by_tier_bytes.get)
+                        if stats.by_tier_bytes else "ici"
+                    )
+                    bound = decode_bandwidth_bound_s(
+                        kv_bytes, param_bytes, n_dev, topology=topo,
+                        collective_bytes=stats.per_device_bytes,
+                        n_collectives=sum(stats.counts.values()), tier=tier,
+                    )
+                    dense = decode_bandwidth_bound_s(
+                        dense_kv_bytes, param_bytes, n_dev, topology=topo,
+                        collective_bytes=stats.per_device_bytes,
+                        n_collectives=sum(stats.counts.values()), tier=tier,
+                    )
+                    bound["kv_bytes"] = kv_bytes
+                    bound["dense_kv_bytes"] = dense_kv_bytes
+                    bound["dense_bound_s"] = dense["bound_s"]
+                    entry["decode_bound"] = bound
                 entry["ok"] = True
             except Exception as e:
                 entry["ok"] = False

@@ -1,0 +1,275 @@
+"""Continuous-batching scheduler over the paged KV pool (DESIGN.md §8).
+
+The scheduler owns the host-side bookkeeping: a FIFO admission queue, the
+slot table, and the page pool / block tables from core/paging.py. Admission
+is by *reservation* — a request is admitted only when a slot is free AND the
+pool can hand over every page the request could ever touch
+(``ceil((prompt + max_new) / P)``), so an admitted request never hits a
+mid-stream pool-exhausted preemption.
+
+The engine turns that bookkeeping into dispatches: per iteration it joins at
+most one prefill chunk (the longest-admitted unfinished prompt) into the
+running batch and then runs ONE decode step over all slots — a single jitted
+donated-cache dispatch regardless of how many requests are in flight. Slots
+that are idle or still prefilling ride along with a nulled block-table row:
+their decode write lands in the reserved null page (page 0) and their logits
+are ignored, so no masking is needed on the device path.
+
+Completion (``n_generated == max_new`` or EOS) frees the request's pages
+back to the pool and clears its slot, making room for the next admission —
+requests join and leave the batch every step, which is exactly the
+continuous-vs-static tokens/s win BENCH_serve measures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.paging import NULL_PAGE, BlockTables, PagePool, PagedLayout
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request: a prompt and a generation budget."""
+
+    rid: int
+    prompt: np.ndarray          # (prompt_len,) int32
+    max_new: int                # tokens to generate (including the first)
+
+    # engine bookkeeping (filled in as the request moves through the system)
+    slot: int = -1
+    pages: tuple = ()
+    prefill_done: int = 0       # prompt tokens already written to the cache
+    generated: list = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_first: float = 0.0        # first generated token
+    t_done: float = 0.0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def prefilling(self) -> bool:
+        return self.prefill_done < self.prompt_len
+
+    @property
+    def decoding(self) -> bool:
+        return not self.prefilling and len(self.generated) < self.max_new
+
+
+class ContinuousScheduler:
+    """FIFO admission with up-front page reservation; slot/pool bookkeeping."""
+
+    def __init__(self, layout: PagedLayout):
+        self.layout = layout
+        self.pool = PagePool(layout)
+        self.tables = BlockTables(layout)
+        self.queue: deque[Request] = deque()
+        self.slots: list[Optional[Request]] = [None] * layout.n_slots
+        self.finished: list[Request] = []
+
+    def submit(self, req: Request, now: float = 0.0) -> None:
+        need = self.layout.pages_for(req.prompt_len + req.max_new)
+        if need > self.layout.usable_pages:
+            raise ValueError(
+                f"request {req.rid} needs {need} pages; pool has "
+                f"{self.layout.usable_pages} total"
+            )
+        if need > self.layout.max_pages:
+            raise ValueError(
+                f"request {req.rid} needs {need} pages; block-table rows hold "
+                f"{self.layout.max_pages}"
+            )
+        req.t_submit = now
+        self.queue.append(req)
+
+    def admit(self, now: float = 0.0) -> list[Request]:
+        """Admit queued requests while a slot is free and the pool can cover
+        the full reservation. FIFO: the head of the queue blocks admission
+        (no starvation by smaller requests jumping ahead)."""
+        admitted = []
+        while self.queue:
+            req = self.queue[0]
+            slot = next(
+                (i for i, s in enumerate(self.slots) if s is None), None
+            )
+            if slot is None:
+                break
+            need = self.layout.pages_for(req.prompt_len + req.max_new)
+            if self.pool.n_free < need:
+                break
+            self.queue.popleft()
+            req.pages = tuple(self.pool.alloc(need))
+            req.slot = slot
+            req.t_admit = now
+            self.tables.assign(slot, req.pages)
+            self.slots[slot] = req
+            admitted.append(req)
+        return admitted
+
+    def complete(self, req: Request, now: float = 0.0) -> None:
+        """Release every page the request reserved and free its slot."""
+        req.t_done = now
+        self.pool.free(req.pages)
+        self.tables.clear(req.slot)
+        self.slots[req.slot] = None
+        req.pages = ()
+        self.finished.append(req)
+
+    @property
+    def active(self) -> list[Request]:
+        return [r for r in self.slots if r is not None]
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)
+
+    def decode_view(self):
+        """(tokens, lengths, tables) device-ready arrays for one decode step.
+
+        Only slots in the decode phase expose their real block-table row and
+        length; idle and still-prefilling slots are nulled so their write
+        lands in the trash page and their (garbage) logits cost nothing to
+        ignore."""
+        S = self.layout.n_slots
+        toks = np.zeros((S,), np.int32)
+        lengths = np.zeros((S,), np.int32)
+        tables = np.full(
+            (S, self.layout.max_pages), NULL_PAGE, np.int32
+        )
+        for s, req in enumerate(self.slots):
+            if req is not None and req.decoding:
+                toks[s] = req.generated[-1]
+                lengths[s] = req.prompt_len + len(req.generated) - 1
+                tables[s] = self.tables.row(s)
+        return toks, lengths, tables
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """What BENCH_serve records for one run."""
+
+    n_requests: int
+    total_new_tokens: int
+    wall_s: float
+    tokens_per_s: float
+    first_token_p50_ms: float
+    first_token_p99_ms: float
+    completion_p50_ms: float
+    completion_p99_ms: float
+    decode_steps: int
+    prefill_chunks: int
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _pct(xs: list, q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+
+class ContinuousEngine:
+    """Drives jitted paged steps from the scheduler's bookkeeping.
+
+    ``prefill_fn(cache, tokens (1,C), start, table_row, n_valid)`` and
+    ``decode_fn(cache, tokens (S,), lengths (S,), tables (S,maxp))`` both
+    return ``(sampled_tokens, new_cache)`` with the cache donated — the
+    engine threads one live cache value through every dispatch.
+    """
+
+    def __init__(
+        self,
+        scheduler: ContinuousScheduler,
+        cache,
+        prefill_fn: Callable,
+        decode_fn: Callable,
+        *,
+        chunk: int,
+        eos_id: Optional[int] = None,
+        clock: Callable[[], float] = time.perf_counter,
+    ):
+        self.sched = scheduler
+        self.cache = cache
+        self.prefill_fn = prefill_fn
+        self.decode_fn = decode_fn
+        self.chunk = chunk
+        self.eos_id = eos_id
+        self.clock = clock
+        self.decode_steps = 0
+        self.prefill_chunks = 0
+
+    def _prefill_one(self) -> None:
+        """One chunk of the longest-admitted request still prefilling."""
+        cands = [r for r in self.sched.active if r.prefilling]
+        if not cands:
+            return
+        req = min(cands, key=lambda r: r.t_admit)
+        start = req.prefill_done
+        nv = min(self.chunk, req.prompt_len - start)
+        toks = np.zeros((1, self.chunk), np.int32)
+        toks[0, :nv] = req.prompt[start:start + nv]
+        row = self.sched.tables.row(req.slot)
+        tok, self.cache = self.prefill_fn(
+            self.cache, toks, np.int32(start), row.astype(np.int32),
+            np.int32(nv),
+        )
+        self.prefill_chunks += 1
+        req.prefill_done = start + nv
+        if not req.prefilling:
+            req.generated.append(int(tok))
+            req.t_first = self.clock()
+            self._maybe_complete(req)
+
+    def _decode_all(self) -> None:
+        toks, lengths, tables = self.sched.decode_view()
+        if not int((lengths > 0).sum()):
+            return
+        out, self.cache = self.decode_fn(self.cache, toks, lengths, tables)
+        self.decode_steps += 1
+        out = np.asarray(out)
+        now = self.clock()
+        for s, req in enumerate(list(self.sched.slots)):
+            if req is not None and req.decoding and lengths[s] > 0:
+                req.generated.append(int(out[s]))
+                self._maybe_complete(req, now)
+
+    def _maybe_complete(self, req: Request, now: Optional[float] = None) -> None:
+        done = len(req.generated) >= req.max_new or (
+            self.eos_id is not None and req.generated[-1] == self.eos_id
+        )
+        if done:
+            self.sched.complete(req, now if now is not None else self.clock())
+
+    def run(self, requests: list[Request]) -> ServeReport:
+        """Serve every request to completion; return the latency report."""
+        t0 = self.clock()
+        for req in requests:
+            self.sched.submit(req, t0)
+        while self.sched.busy:
+            self.sched.admit(self.clock())
+            self._prefill_one()
+            self._decode_all()
+        wall = self.clock() - t0
+        done = self.sched.finished
+        total = sum(len(r.generated) for r in done)
+        first = [(r.t_first - r.t_submit) * 1e3 for r in done]
+        comp = [(r.t_done - r.t_submit) * 1e3 for r in done]
+        return ServeReport(
+            n_requests=len(done),
+            total_new_tokens=total,
+            wall_s=wall,
+            tokens_per_s=total / wall if wall > 0 else 0.0,
+            first_token_p50_ms=_pct(first, 50),
+            first_token_p99_ms=_pct(first, 99),
+            completion_p50_ms=_pct(comp, 50),
+            completion_p99_ms=_pct(comp, 99),
+            decode_steps=self.decode_steps,
+            prefill_chunks=self.prefill_chunks,
+        )

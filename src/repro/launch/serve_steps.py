@@ -6,10 +6,17 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ArchConfig
-from repro.models import init_cache, init_params, decode_step as model_decode, prefill as model_prefill
+from repro.models import (
+    init_cache,
+    init_paged_cache,
+    init_params,
+    decode_step as model_decode,
+    paged_decode_step,
+    paged_prefill_chunk,
+    prefill as model_prefill,
+)
 from repro.launch import sharding as shd
 
 
@@ -42,20 +49,12 @@ def build_serve_steps(
         P_len = arch.prefix_len
         tok_len = seq_len - P_len
         toks = jax.ShapeDtypeStruct((batch, tok_len), jnp.int32)
-        tok_shard = NamedSharding(
-            mesh, P(baxes if not baxes or len(baxes) > 1 else baxes[0], None)
-        )
         args = [toks]
-        shards = [tok_shard]
+        shards = [shd.serve_batch_sharding(mesh, baxes, 2)]
         if P_len:
             pre = jax.ShapeDtypeStruct((batch, P_len, cfg.d_model), dtype)
             args.append(pre)
-            shards.append(
-                NamedSharding(
-                    mesh,
-                    P(baxes if not baxes or len(baxes) > 1 else baxes[0], None, None),
-                )
-            )
+            shards.append(shd.serve_batch_sharding(mesh, baxes, 3))
 
         def prefill_step(params, tokens, prefix=None):
             return model_prefill(
@@ -91,6 +90,111 @@ def build_serve_steps(
             ),
             (param_shapes, cache_shapes, tok, pos),
         )
+    return StepBundle(
+        mesh=mesh,
+        n_workers=1,
+        param_shapes=param_shapes,
+        param_shardings=p_shard,
+        fns=fns,
+    )
+
+
+def build_paged_serve_steps(
+    arch: ArchConfig,
+    mesh,
+    multi_pod: bool,
+    *,
+    n_slots: int,
+    npage: int,
+    page_size: int,
+    max_pages: int,
+    chunk: int,
+    dtype=jnp.bfloat16,
+    quantized: bool = False,
+    temperature: float = 0.0,
+):
+    """Jitted continuous-batching steps over a paged KV cache (DESIGN.md §8):
+
+    * ``paged_decode_step`` — one token for every slot against the page pool
+      (donated), sampling fused in: argmax when ``temperature == 0``, else a
+      categorical draw from the passed key. One dispatch per engine step.
+    * ``paged_prefill_chunk`` — one chunk of one request's prompt written into
+      its block-table row (pool donated), returning the would-be first
+      generated token (only the final chunk's matters).
+
+    Global-attention archs only — models.init_paged_cache raises otherwise.
+    """
+    from repro.launch.distributed import StepBundle
+
+    cfg = arch.model
+    param_shapes = jax.eval_shape(
+        lambda k: init_params(k, cfg, dtype), jax.random.PRNGKey(0)
+    )
+    p_shard = shd.param_sharding_tree(param_shapes, mesh, arch.fsdp)
+    baxes = shd.serve_batch_axes(mesh, n_slots)
+    repl = shd.replicated(mesh)
+
+    cache_shapes = jax.eval_shape(
+        lambda: init_paged_cache(cfg, npage, page_size, dtype, quantized=quantized)
+    )
+    c_shard = shd.cache_sharding_tree(cache_shapes, mesh, None)
+    tok = jax.ShapeDtypeStruct((n_slots,), jnp.int32)
+    lengths = jax.ShapeDtypeStruct((n_slots,), jnp.int32)
+    tables = jax.ShapeDtypeStruct((n_slots, max_pages), jnp.int32)
+    vec_shard = shd.serve_batch_sharding(mesh, baxes, 1)
+    tbl_shard = shd.serve_batch_sharding(mesh, baxes, 2)
+
+    def sample(logits, key):
+        if temperature > 0:
+            return jax.random.categorical(key, logits / temperature, axis=-1)
+        return jnp.argmax(logits, axis=-1)
+
+    fns = {}
+
+    def decode_fn(params, cache, token, lens, tbl, key=None):
+        logits, cache = paged_decode_step(params, cfg, cache, token, lens, tbl)
+        return sample(logits, key).astype(jnp.int32), cache
+
+    dec_args = [param_shapes, cache_shapes, tok, lengths, tables]
+    dec_shards = [p_shard, c_shard, vec_shard, vec_shard, tbl_shard]
+    if temperature > 0:
+        dec_args.append(jax.random.PRNGKey(0))
+        dec_shards.append(repl)
+    fns["paged_decode_step"] = (
+        jax.jit(
+            decode_fn,
+            in_shardings=tuple(dec_shards),
+            out_shardings=(vec_shard, c_shard),
+            donate_argnums=(1,),
+        ),
+        tuple(dec_args),
+    )
+
+    chunk_toks = jax.ShapeDtypeStruct((1, chunk), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((), jnp.int32)
+    row = jax.ShapeDtypeStruct((max_pages,), jnp.int32)
+
+    def prefill_fn(params, cache, tokens, start, table_row, n_valid, key=None):
+        logits, cache = paged_prefill_chunk(
+            params, cfg, cache, tokens, start, table_row, n_valid
+        )
+        return sample(logits, key).astype(jnp.int32), cache
+
+    pre_args = [param_shapes, cache_shapes, chunk_toks, scalar, row, scalar]
+    pre_shards = [p_shard, c_shard, repl, repl, repl, repl]
+    if temperature > 0:
+        pre_args.append(jax.random.PRNGKey(0))
+        pre_shards.append(repl)
+    fns["paged_prefill_chunk"] = (
+        jax.jit(
+            prefill_fn,
+            in_shardings=tuple(pre_shards),
+            out_shardings=(repl, c_shard),
+            donate_argnums=(1,),
+        ),
+        tuple(pre_args),
+    )
+
     return StepBundle(
         mesh=mesh,
         n_workers=1,

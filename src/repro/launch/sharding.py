@@ -134,6 +134,25 @@ def serve_batch_axes(mesh: Mesh, B: int) -> Optional[tuple]:
     return tuple(chosen)
 
 
+def serve_batch_spec(batch_axes, ndim: int) -> P:
+    """Spec for a serving array with the batch on dim 0: batch axes (or their
+    tuple) on dim 0, everything else replicated. The single shared spelling of
+    ``P(baxes if not baxes or len(baxes) > 1 else baxes[0], None, ...)`` that
+    serve_steps.py used to repeat inline."""
+    if not batch_axes:
+        lead = None
+    elif len(batch_axes) > 1:
+        lead = batch_axes
+    else:
+        lead = batch_axes[0]
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def serve_batch_sharding(mesh: Mesh, batch_axes, ndim: int) -> NamedSharding:
+    """NamedSharding form of :func:`serve_batch_spec`."""
+    return NamedSharding(mesh, serve_batch_spec(batch_axes, ndim))
+
+
 def cache_leaf_spec(path, leaf, mesh: Mesh, batch_axes) -> P:
     """Decode-cache leaves: (repeat, B, ...). Shard B over batch axes, then try
     the model axis on head-ish dims, then the unused data axes on the time dim

@@ -11,8 +11,11 @@ from .model import (
     decode_step,
     forward,
     init_cache,
+    init_paged_cache,
     init_params,
     lm_loss,
+    paged_decode_step,
+    paged_prefill_chunk,
     param_count,
     prefill,
 )
@@ -20,5 +23,6 @@ from .model import (
 __all__ = [
     "LayerSpec", "MLAConfig", "MoEConfig", "ModelConfig", "Segment",
     "dense_stack", "reduced", "decode_step", "forward", "init_cache",
-    "init_params", "lm_loss", "param_count", "prefill",
+    "init_paged_cache", "init_params", "lm_loss", "paged_decode_step",
+    "paged_prefill_chunk", "param_count", "prefill",
 ]

@@ -242,6 +242,136 @@ def attn_decode(p, cfg: ModelConfig, cache, x_t, pos, *, local: bool):
 
 
 # ---------------------------------------------------------------------------
+# Paged-KV GQA (serving engine, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+def init_paged_attn_cache(
+    cfg: ModelConfig, npage: int, page_size: int, dtype, *, quantized: bool = False
+):
+    """One layer's KV page pool: (npage, P, KV, hd) with page 0 reserved as
+    the null/trash page (core/paging.py). ``quantized`` stores int8 codes
+    plus one f32 absmax scale per (page, row, kv-head)."""
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    if quantized:
+        return {
+            "kq": jnp.zeros((npage, page_size, KV, hd), jnp.int8),
+            "vq": jnp.zeros((npage, page_size, KV, hd), jnp.int8),
+            "k_scale": jnp.zeros((npage, page_size, KV), jnp.float32),
+            "v_scale": jnp.zeros((npage, page_size, KV), jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((npage, page_size, KV, hd), dtype),
+        "v": jnp.zeros((npage, page_size, KV, hd), dtype),
+    }
+
+
+def _paged_write(cache, k_rows, v_rows, page, row, *, backend):
+    """Scatter per-token k/v rows into the page pool at (page, row) — both
+    (T,) int32. Idle/invalid tokens carry page 0 (the null page), so their
+    writes are absorbed without masking. k_rows/v_rows: (T, KV, hd)."""
+    if "kq" in cache:
+        from repro.kernels import quantize as qz
+
+        T, KV, hd = k_rows.shape
+        kc, ks = qz.absmax_quant_rows(k_rows.reshape(T * KV, hd), backend=backend)
+        vc, vs = qz.absmax_quant_rows(v_rows.reshape(T * KV, hd), backend=backend)
+        return {
+            "kq": cache["kq"].at[page, row].set(kc.reshape(T, KV, hd)),
+            "vq": cache["vq"].at[page, row].set(vc.reshape(T, KV, hd)),
+            "k_scale": cache["k_scale"].at[page, row].set(ks.reshape(T, KV)),
+            "v_scale": cache["v_scale"].at[page, row].set(vs.reshape(T, KV)),
+        }
+    return {
+        "k": cache["k"].at[page, row].set(k_rows.astype(cache["k"].dtype)),
+        "v": cache["v"].at[page, row].set(v_rows.astype(cache["v"].dtype)),
+    }
+
+
+def _paged_attend_multi(cache, q, tables, key_mask):
+    """Chunked-prefill attention against gathered pages (jnp — this path is
+    compute-bound, the Pallas kernel covers the memory-bound decode).
+    q (S, C, H, hd); tables (S, maxp); key_mask (S, C, L) True = visible.
+    Returns (S, C, H, hd)."""
+    from repro.kernels import ref as kref
+
+    H, hd = q.shape[2], q.shape[3]
+    if "kq" in cache:
+        k_flat = kref.paged_gather_ref(cache["kq"], tables).astype(jnp.float32)
+        v_flat = kref.paged_gather_ref(cache["vq"], tables).astype(jnp.float32)
+        k_flat = k_flat * kref.paged_gather_ref(cache["k_scale"], tables)[..., None]
+        v_flat = v_flat * kref.paged_gather_ref(cache["v_scale"], tables)[..., None]
+    else:
+        k_flat = kref.paged_gather_ref(cache["k"], tables)
+        v_flat = kref.paged_gather_ref(cache["v"], tables)
+    KV = k_flat.shape[2]
+    rep = H // KV
+    k_e = jnp.repeat(k_flat, rep, axis=2) if rep > 1 else k_flat
+    v_e = jnp.repeat(v_flat, rep, axis=2) if rep > 1 else v_flat
+    scale = 1.0 / jnp.sqrt(hd)
+    logits = jnp.einsum("schd,slhd->shcl", q, k_e).astype(jnp.float32) * scale
+    logits = jnp.where(key_mask[:, None, :, :], logits, _NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("shcl,slhd->schd", w.astype(v_e.dtype), v_e)
+
+
+def paged_attn_decode(
+    p, cfg: ModelConfig, cache, x_t, lengths, tables, *, backend: str = "auto"
+):
+    """Paged decode: x_t (S,1,d); lengths (S,) tokens already cached per slot
+    (= the rope position of x_t); tables (S, max_pages) int32. Writes k_t/v_t
+    at page ``tables[s, lengths[s]//P]`` row ``lengths[s]%P`` (idle slots
+    point at the null page), then attends over the gathered pages through
+    the block-table-gather kernel. Returns (y (S,1,d), new cache)."""
+    from repro.kernels import paged as paged_kernels
+
+    S = x_t.shape[0]
+    lengths = lengths.astype(jnp.int32)
+    positions = lengths[:, None]
+    q, k_t, v_t = _qkv(p, cfg, x_t, positions)
+    P = (cache["kq"] if "kq" in cache else cache["k"]).shape[1]
+    page = jnp.take_along_axis(tables, (lengths // P)[:, None], axis=1)[:, 0]
+    row = lengths % P
+    cache = _paged_write(cache, k_t[:, 0], v_t[:, 0], page, row, backend=backend)
+    n_valid = lengths + 1
+    if "kq" in cache:
+        out = paged_kernels.paged_attn_decode_q8(
+            q[:, 0], cache["kq"], cache["vq"], cache["k_scale"],
+            cache["v_scale"], tables, n_valid, backend=backend,
+        )
+    else:
+        out = paged_kernels.paged_attn_decode(
+            q[:, 0], cache["k"], cache["v"], tables, n_valid, backend=backend
+        )
+    y = out.reshape(S, 1, -1) @ p["wo"]
+    return y, cache
+
+
+def paged_attn_prefill_chunk(
+    p, cfg: ModelConfig, cache, x, start, table_row, n_valid, *,
+    backend: str = "auto",
+):
+    """One request's prompt chunk: x (1, C, d) holds prompt tokens
+    [start, start+C) with only the first ``n_valid`` real. Writes their k/v
+    rows into the pages of ``table_row`` (max_pages,), then attends causally
+    over everything this request has cached (earlier chunks included — the
+    writes land before the gather). Returns (y (1, C, d), new cache)."""
+    C = x.shape[1]
+    offs = jnp.arange(C, dtype=jnp.int32)
+    tok = start + offs
+    positions = tok[None]
+    q, k, v = _qkv(p, cfg, x, positions)
+    P = (cache["kq"] if "kq" in cache else cache["k"]).shape[1]
+    page = jnp.where(offs < n_valid, table_row[tok // P], 0)
+    cache = _paged_write(cache, k[0], v[0], page, tok % P, backend=backend)
+    L = table_row.shape[0] * P
+    key_mask = (jnp.arange(L)[None, :] <= tok[:, None])[None]  # (1, C, L)
+    out = _paged_attend_multi(cache, q, table_row[None], key_mask)
+    y = out.reshape(1, C, -1) @ p["wo"]
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
 # DeepSeek MLA
 # ---------------------------------------------------------------------------
 

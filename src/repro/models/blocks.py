@@ -122,6 +122,76 @@ def layer_decode(
     return x_t, cache
 
 
+def _ff_decode(p: PyTree, cfg: ModelConfig, spec: LayerSpec, x_t: jax.Array):
+    if spec.ff == "mlp":
+        return x_t + mlp(p["ff"], rmsnorm(x_t, p["ln2"], cfg.norm_eps))
+    if spec.ff == "moe":
+        y, _ = moe_mod.moe_ff(p["ff"], cfg, rmsnorm(x_t, p["ln2"], cfg.norm_eps))
+        return x_t + y
+    return x_t
+
+
+def layer_paged_decode(
+    p: PyTree,
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    cache: PyTree,
+    x_t: jax.Array,
+    lengths: jax.Array,
+    tables: jax.Array,
+    *,
+    backend: str = "auto",
+):
+    """Paged twin of :func:`layer_decode` — global-attention mixers only
+    (paging a ring buffer or an O(1) recurrent state buys nothing)."""
+    if spec.mixer != "attn":
+        raise ValueError(
+            f"paged serving supports global-attention mixers only, got {spec.mixer!r}"
+        )
+    h = rmsnorm(x_t, p["ln1"], cfg.norm_eps)
+    y, cache = attn.paged_attn_decode(
+        p["mixer"], cfg, cache, h, lengths, tables, backend=backend
+    )
+    return _ff_decode(p, cfg, spec, x_t + y), cache
+
+
+def layer_paged_prefill(
+    p: PyTree,
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    cache: PyTree,
+    x: jax.Array,
+    start,
+    table_row: jax.Array,
+    n_valid,
+    *,
+    backend: str = "auto",
+):
+    """Paged twin of :func:`layer_train` for one request's prompt chunk."""
+    if spec.mixer != "attn":
+        raise ValueError(
+            f"paged serving supports global-attention mixers only, got {spec.mixer!r}"
+        )
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    y, cache = attn.paged_attn_prefill_chunk(
+        p["mixer"], cfg, cache, h, start, table_row, n_valid, backend=backend
+    )
+    return _ff_decode(p, cfg, spec, x + y), cache
+
+
+def init_layer_paged_cache(
+    cfg: ModelConfig, spec: LayerSpec, npage: int, page_size: int, dtype,
+    *, quantized: bool = False,
+):
+    if spec.mixer != "attn":
+        raise ValueError(
+            f"paged serving supports global-attention mixers only, got {spec.mixer!r}"
+        )
+    return attn.init_paged_attn_cache(
+        cfg, npage, page_size, dtype, quantized=quantized
+    )
+
+
 def init_layer_cache(cfg: ModelConfig, spec: LayerSpec, B: int, max_len: int, dtype):
     if spec.mixer in ("attn", "attn_local"):
         return attn.init_attn_cache(

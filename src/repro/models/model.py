@@ -17,7 +17,15 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from .blocks import init_layer, init_layer_cache, layer_decode, layer_train
+from .blocks import (
+    init_layer,
+    init_layer_cache,
+    init_layer_paged_cache,
+    layer_decode,
+    layer_paged_decode,
+    layer_paged_prefill,
+    layer_train,
+)
 from .config import LayerSpec, ModelConfig, Segment
 from .layers import (
     embed,
@@ -268,6 +276,144 @@ def decode_step(
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
     logits = unembed(table, x)[:, 0, :]
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# paged serving (continuous batching, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+def init_paged_cache(
+    cfg: ModelConfig, npage: int, page_size: int, dtype=jnp.float32,
+    *, quantized: bool = False,
+) -> PyTree:
+    """Per-layer KV page pools, same nesting as :func:`init_cache` but with
+    (repeat, npage, P, KV, hd) leaves: every layer owns its pool, all layers
+    share ONE block table (token t of slot s lives at the same (page, row)
+    coordinate in every layer — core/paging.py). Global-attention mixers
+    only; page 0 is the reserved null page."""
+    caches = []
+    for seg in cfg.segments:
+        seg_caches = []
+        for spec in seg.period:
+            one = init_layer_paged_cache(
+                cfg, spec, npage, page_size, dtype, quantized=quantized
+            )
+            seg_caches.append(
+                jax.tree.map(lambda t: jnp.broadcast_to(t[None], (seg.repeat, *t.shape)), one)
+            )
+        caches.append(seg_caches)
+    return caches
+
+
+def paged_decode_step(
+    params: PyTree,
+    cfg: ModelConfig,
+    cache: PyTree,
+    token_t: jax.Array,   # (S,)
+    lengths: jax.Array,   # (S,) int32: tokens already cached per slot
+    tables: jax.Array,    # (S, max_pages) int32 block tables
+    *,
+    backend: str = "auto",
+):
+    """One continuous-batching decode step: slot s's token at position
+    ``lengths[s]`` (idle slots carry length 0 and null tables; their logits
+    are garbage the scheduler ignores). Returns (logits (S,V), new cache)."""
+    x = embed(params["embed"], token_t[:, None])
+    if cfg.pos_emb == "sinusoidal":
+        x = x + sinusoidal_pos(lengths[:, None].astype(jnp.int32), cfg.d_model).astype(x.dtype)
+
+    new_caches = []
+    for seg, pos_params, seg_cache in zip(cfg.segments, params["segments"], cache):
+        if seg.repeat == 1:
+            new_seg = []
+            for spec, pp, c in zip(seg.period, pos_params, seg_cache):
+                p0 = jax.tree.map(lambda t: t[0], pp)
+                c0 = jax.tree.map(lambda t: t[0], c)
+                x, c_new = layer_paged_decode(
+                    p0, cfg, spec, c0, x, lengths, tables, backend=backend
+                )
+                new_seg.append(jax.tree.map(lambda t: t[None], c_new))
+            new_caches.append(new_seg)
+        else:
+            def body(x_c, slice_in, seg=seg):
+                slice_params, slice_cache = slice_in
+                new_slice = []
+                for spec, pp, c in zip(seg.period, slice_params, slice_cache):
+                    x_c, c_new = layer_paged_decode(
+                        pp, cfg, spec, c, x_c, lengths, tables, backend=backend
+                    )
+                    new_slice.append(c_new)
+                return x_c, new_slice
+
+            x, new_seg = jax.lax.scan(body, x, (pos_params, seg_cache))
+            new_caches.append(new_seg)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(table, x)[:, 0, :]
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits, new_caches
+
+
+def paged_prefill_chunk(
+    params: PyTree,
+    cfg: ModelConfig,
+    cache: PyTree,
+    tokens: jax.Array,    # (1, C): prompt tokens [start, start+C), padded
+    start,                # scalar int32: first position of this chunk
+    table_row: jax.Array, # (max_pages,) int32: the request's block-table row
+    n_valid,              # scalar int32: real tokens in this chunk (≤ C)
+    *,
+    backend: str = "auto",
+):
+    """One chunked-prefill dispatch for ONE request: embeds the chunk, writes
+    its k/v rows into the request's pages, and attends causally over the
+    request's whole cached prefix. Returns (logits (V,) at the chunk's last
+    valid position, new cache) — the logits matter only on the final chunk,
+    where they seed the first generated token."""
+    x = embed(params["embed"], tokens)
+    C = tokens.shape[1]
+    if cfg.pos_emb == "sinusoidal":
+        pos = (start + jnp.arange(C, dtype=jnp.int32))[None]
+        x = x + sinusoidal_pos(pos, cfg.d_model).astype(x.dtype)
+
+    new_caches = []
+    for seg, pos_params, seg_cache in zip(cfg.segments, params["segments"], cache):
+        if seg.repeat == 1:
+            new_seg = []
+            for spec, pp, c in zip(seg.period, pos_params, seg_cache):
+                p0 = jax.tree.map(lambda t: t[0], pp)
+                c0 = jax.tree.map(lambda t: t[0], c)
+                x, c_new = layer_paged_prefill(
+                    p0, cfg, spec, c0, x, start, table_row, n_valid,
+                    backend=backend,
+                )
+                new_seg.append(jax.tree.map(lambda t: t[None], c_new))
+            new_caches.append(new_seg)
+        else:
+            def body(x_c, slice_in, seg=seg):
+                slice_params, slice_cache = slice_in
+                new_slice = []
+                for spec, pp, c in zip(seg.period, slice_params, slice_cache):
+                    x_c, c_new = layer_paged_prefill(
+                        pp, cfg, spec, c, x_c, start, table_row, n_valid,
+                        backend=backend,
+                    )
+                    new_slice.append(c_new)
+                return x_c, new_slice
+
+            x, new_seg = jax.lax.scan(body, x, (pos_params, seg_cache))
+            new_caches.append(new_seg)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    h_last = jax.lax.dynamic_index_in_dim(x[0], n_valid - 1, 0, keepdims=True)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(table, h_last[None])[0, 0]
     if cfg.logit_softcap > 0:
         logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
     return logits, new_caches

@@ -5,6 +5,7 @@ from .analysis import (
     alpha_beta_disagreement,
     analyze_compiled,
     collective_bytes_from_hlo,
+    decode_bandwidth_bound_s,
 )
 
 __all__ = [
@@ -14,4 +15,5 @@ __all__ = [
     "alpha_beta_disagreement",
     "analyze_compiled",
     "collective_bytes_from_hlo",
+    "decode_bandwidth_bound_s",
 ]

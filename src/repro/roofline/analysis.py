@@ -325,6 +325,54 @@ def alpha_beta_disagreement(
     }
 
 
+def decode_bandwidth_bound_s(
+    kv_bytes: float,
+    param_bytes: float,
+    n_devices: int,
+    hw: HW = HW(),
+    topology: Optional[Any] = None,
+    collective_bytes: float = 0.0,
+    n_collectives: int = 0,
+    tier: str = "ici",
+) -> dict:
+    """Analytic floor for one single-token decode step (DESIGN.md §8).
+
+    A decode step touches every parameter byte and every LIVE KV byte
+    exactly once per token with trivial arithmetic intensity, so its floor
+    is pure streaming:
+
+        hbm_s = (param_bytes + kv_bytes) / (n_devices · hbm_bw)
+
+    ``kv_bytes`` is the point where paging pays: a dense cache streams
+    ``n_slots × max_len`` rows regardless of occupancy, while the page pool
+    streams only Σ ceil(len_i/P) occupied pages — pass the pool's actual
+    byte footprint and the bound shrinks with it.
+
+    The decode step's collectives (the per-token logit/activation
+    all-reduces over the model axis) are priced under the launch-layer link
+    tiers (``launch/topology.py::DEFAULT_LINKS``): ``n_collectives`` α
+    launches plus ``collective_bytes`` wire over the named ``tier``'s β,
+    falling back to the flat-ici constant of :class:`HW` when no topology
+    is given — the same convention :meth:`RooflineReport.collective_s`
+    uses, so the bound and the compiled-HLO term are comparable.
+
+    Returns ``{"hbm_s", "collective_s", "bound_s"}`` with
+    ``bound_s = hbm_s + collective_s`` (a decode step too small to overlap
+    wire with streaming — the pessimistic additive floor).
+    """
+    hbm_s = (param_bytes + kv_bytes) / (n_devices * hw.hbm_bw)
+    if topology is not None:
+        link = topology.link(tier)
+        coll_s = n_collectives * link.alpha_s + collective_bytes / link.bw
+    else:
+        coll_s = collective_bytes / hw.ici_bw
+    return {
+        "hbm_s": hbm_s,
+        "collective_s": coll_s,
+        "bound_s": hbm_s + coll_s,
+    }
+
+
 def analyze_compiled(
     compiled,
     n_devices: int,
