@@ -13,10 +13,20 @@ Three configurations over the same requests:
                 generation (the legacy serve loop);
   * continuous_q8 — the int8 quantized-page pool (error model DESIGN.md §8).
 
+Two more sections exercise the COW/preemption machinery (DESIGN.md §8):
+  * shared_prefix — grouped requests over a few distinct long prompt
+    prefixes (the shared-system-prompt regime), served with and without
+    prefix sharing. ``prefill_token_reduction`` is deterministic arithmetic
+    (prompt tokens actually prefilled, unshared / shared) and is what CI
+    gates; ``shared_over_unshared`` is the wall-clock tokens/s ratio.
+  * preemption — the mixed workload over a pool ~half its working set, so
+    expected-admission must preempt (swap pages to host, resume later);
+    the section records that every request still completed.
+
 Each mode runs twice and the second (warm, compile-free) run is reported.
 Writes BENCH_serve.json — scripts/check_serve.py gates the continuous/static
-ratio against benchmarks/serve_baseline.json; scripts/update_perf.py renders
-the §Serving table in EXPERIMENTS.md.
+ratio and the shared-prefix win against benchmarks/serve_baseline.json;
+scripts/update_perf.py renders the §Serving table in EXPERIMENTS.md.
 """
 
 from __future__ import annotations
@@ -26,6 +36,7 @@ import os
 import sys
 
 import jax
+import numpy as np
 
 
 def _workload_pairs(quick: bool) -> list[tuple[int, int]]:
@@ -35,9 +46,45 @@ def _workload_pairs(quick: bool) -> list[tuple[int, int]]:
     return group * reps
 
 
+def _shared_prefix_workload(cfg, quick: bool, seed: int = 2):
+    """Requests grouped over distinct long prefixes: 64 requests over 8
+    prefixes (full) / 16 over 4 (quick), generating 8 tokens each. The
+    first request of a group is the bare 50-token prefix (the system
+    prompt alone); the rest extend it with a 6-token unique tail. Grouped
+    arrival order, the way a shared-system-prompt batch actually lands.
+    The prefix length is deliberately NOT page-aligned (50 = 6 full pages
+    + 2 rows at page size 8): followers map the donor's partial tail page
+    too and COW-split it on their first prefill write."""
+    from repro.launch.scheduler import Request
+
+    rng = np.random.default_rng(seed)
+    n_prefix, per = (4, 4) if quick else (8, 8)
+    plen, tail_len, gen = 50, 6, 8
+    reqs = []
+    for _ in range(n_prefix):
+        prefix = rng.integers(0, cfg.vocab_size, size=plen)
+        for j in range(per):
+            tail = rng.integers(0, cfg.vocab_size, size=tail_len)
+            prompt = prefix if j == 0 else np.concatenate([prefix, tail])
+            reqs.append(
+                Request(
+                    rid=len(reqs),
+                    prompt=np.asarray(prompt, np.int32),
+                    max_new=gen,
+                )
+            )
+    return reqs, {"n_prefixes": n_prefix, "per_prefix": per,
+                  "prefix_len": plen, "tail_len": tail_len, "gen": gen}
+
+
 def bench_serve(quick: bool = False, emit=print):
     from repro.configs import get_arch
-    from repro.launch.serve import make_workload, run_continuous, run_static
+    from repro.launch.serve import (
+        build_paged_steps,
+        make_workload,
+        run_continuous,
+        run_static,
+    )
     from repro.models import init_params, reduced
 
     arch = get_arch("qwen3-32b")
@@ -45,16 +92,22 @@ def bench_serve(quick: bool = False, emit=print):
     params = init_params(jax.random.PRNGKey(0), cfg)
     pairs = _workload_pairs(quick)
     slots, page_size, chunk = 4, 8, 16
+    # one compiled step set / static jit cache for EVERY run below: the warm
+    # pass pays compilation once, measured passes never recompile
+    steps = build_paged_steps(params, cfg)
+    static_jits: dict = {}
 
     def continuous(quantized):
         return run_continuous(
             params, cfg, make_workload(cfg, pairs), slots=slots,
             page_size=page_size, chunk=chunk, quantized=quantized,
+            steps=steps,
         ).to_dict()
 
     def static():
         return run_static(
-            params, cfg, make_workload(cfg, pairs), batch=slots
+            params, cfg, make_workload(cfg, pairs), batch=slots,
+            jit_cache=static_jits,
         )
 
     reports = {}
@@ -82,6 +135,67 @@ def bench_serve(quick: bool = False, emit=print):
     )
     emit("serve/continuous_over_static", 0.0, f"ratio={ratio:.2f}x")
 
+    # -- shared-prefix section (COW prefix sharing on vs off) ---------------
+    def shared_run(share):
+        reqs, _ = _shared_prefix_workload(cfg, quick)
+        return run_continuous(
+            params, cfg, reqs, slots=slots, page_size=page_size,
+            chunk=chunk, share_prefix=share, steps=steps,
+        ).to_dict()
+
+    for share in (True, False):
+        shared_run(share)  # compile-warm
+    sp_on, sp_off = shared_run(True), shared_run(False)
+    _, sp_meta = _shared_prefix_workload(cfg, quick)
+    sp = {
+        **sp_meta,
+        "n_requests": sp_on["n_requests"],
+        "shared": sp_on,
+        "unshared": sp_off,
+        "shared_over_unshared": (
+            sp_on["tokens_per_s"] / sp_off["tokens_per_s"]
+        ),
+        "prefill_token_reduction": (
+            sp_off["prefill_tokens"] / max(1, sp_on["prefill_tokens"])
+        ),
+    }
+    emit(
+        "serve/shared_prefix", sp_on["wall_s"] * 1e6,
+        f"tok_s_ratio={sp['shared_over_unshared']:.2f}x;"
+        f"prefill_reduction={sp['prefill_token_reduction']:.2f}x;"
+        f"cow_splits={sp_on['cow_splits']}",
+    )
+
+    # -- preemption section (pool ~half the working set) --------------------
+    longest = max(p + g for p, g in pairs)
+    max_pages = -(-longest // page_size)
+    # 1.5 worst-case residents: the workload's two concurrent long
+    # generations cannot both fit, so the engine must preempt
+    tight_npage = 1 + max_pages + max_pages // 2
+
+    def preempt_run():
+        return run_continuous(
+            params, cfg, make_workload(cfg, pairs), slots=slots,
+            page_size=page_size, chunk=chunk, npage=tight_npage,
+            steps=steps,
+        ).to_dict()
+
+    preempt_run()  # compile-warm
+    pre = preempt_run()
+    assert pre["preemptions"] > 0, "tight pool failed to force preemption"
+    assert pre["n_requests"] == len(pairs), "a preempted request was lost"
+    preemption = {
+        "npage": tight_npage,
+        "roomy_tokens_per_s": reports["continuous"]["tokens_per_s"],
+        **pre,
+    }
+    emit(
+        "serve/preemption", pre["wall_s"] * 1e6,
+        f"tok_s={pre['tokens_per_s']:.1f};"
+        f"preemptions={pre['preemptions']};"
+        f"swapped_pages={pre['swapped_pages']}",
+    )
+
     out = {
         "arch": "qwen3-32b(reduced)",
         "slots": slots,
@@ -95,6 +209,8 @@ def bench_serve(quick: bool = False, emit=print):
                                # the official trajectory
         "continuous_over_static": ratio,
         "q8_over_static": q8_ratio,
+        "shared_prefix": sp,
+        "preemption": preemption,
         **{k: v for k, v in reports.items()},
     }
     path = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")

@@ -6,7 +6,9 @@ local pre-push run invoke ONE script with one summary line per gate:
 * ``roundstep`` — scripts/check_roundstep.py (compressed-round regression
   gate vs the committed baseline; pass fresh JSONs via ``--roundstep``),
 * ``serve``     — scripts/check_serve.py (continuous/static tokens/s ratio
-  vs the committed baseline; pass fresh JSONs via ``--serve``),
+  vs the committed baseline, the shared-prefix win — tokens/s OR
+  prefill-token reduction — and the tight-pool preemption section; pass
+  fresh JSONs via ``--serve``),
 * ``robust``    — scripts/check_robust.py (robust-GAR round-time + semantics),
 * ``async``     — scripts/check_async.py (deadline-cohort bit-identity:
   p_miss=0 ≡ full participation, static-slow ≡ FaultSpec drop),

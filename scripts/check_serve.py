@@ -15,6 +15,13 @@ divides out; what remains is the scheduling win the paged engine exists to
 deliver (slot backfill vs decode-at-the-pace-of-the-longest). A fresh ratio
 below ``baseline * 0.75`` fails the job.
 
+A second gate covers the prefix-sharing section: sharing must keep EITHER
+a >=1.5x tokens/s win over the unshared run OR a >=2x reduction in prompt
+tokens actually prefilled. The token reduction is deterministic arithmetic
+(scheduler bookkeeping, no wall clock), so it is the reliable leg; the
+tokens/s ratio leg exists so a future change that keeps the bookkeeping
+but destroys the win (e.g. COW-splitting every page) still trips the gate.
+
 Multiple fresh JSONs may be passed; the gate takes the MAXIMUM ratio across
 them — transient load depresses whichever mode it lands on, so the best of
 several runs is the honest estimate of the machine-independent ratio.
@@ -33,6 +40,10 @@ THRESHOLD = 0.75  # fail if fresh ratio < baseline ratio * 0.75
 
 METRIC = "continuous_over_static"
 
+# prefix-sharing floors (absolute, within-run): pass if EITHER holds
+SHARED_TOKPS_FLOOR = 1.5
+SHARED_PREFILL_FLOOR = 2.0
+
 
 def load(path):
     with open(path) as f:
@@ -49,6 +60,8 @@ def main():
     fresh_paths = args or [os.path.join(ROOT, "BENCH_serve.json")]
     freshes, base = [load(p) for p in fresh_paths], load(base_path)
 
+    fail = 0
+
     fresh = max(f[METRIC] for f in freshes)
     floor = base[METRIC] * THRESHOLD
     status = "OK" if fresh >= floor else "REGRESSED"
@@ -62,9 +75,47 @@ def main():
             "over static batching vs the committed baseline",
             file=sys.stderr,
         )
-        return 1
-    print("serve gate passed")
-    return 0
+        fail = 1
+
+    sections = [f.get("shared_prefix") for f in freshes]
+    sections = [s for s in sections if s]
+    if not sections:
+        print("FAIL: no fresh run carries a shared_prefix section", file=sys.stderr)
+        fail = 1
+    else:
+        tokps = max(s["shared_over_unshared"] for s in sections)
+        red = max(s["prefill_token_reduction"] for s in sections)
+        ok = tokps >= SHARED_TOKPS_FLOOR or red >= SHARED_PREFILL_FLOOR
+        print(
+            f"shared_prefix: tokens/s {tokps:.2f}x (floor {SHARED_TOKPS_FLOOR}x), "
+            f"prefill reduction {red:.2f}x (floor {SHARED_PREFILL_FLOOR}x) "
+            f"{'OK' if ok else 'REGRESSED'}"
+        )
+        if not ok:
+            print(
+                "FAIL: prefix sharing delivers neither a >=1.5x tokens/s win "
+                "nor a >=2x prefill-token reduction",
+                file=sys.stderr,
+            )
+            fail = 1
+
+    pre = [f.get("preemption") for f in freshes]
+    pre = [p for p in pre if p]
+    if not pre:
+        print("FAIL: no fresh run carries a preemption section", file=sys.stderr)
+        fail = 1
+    elif any(p["preemptions"] < 1 for p in pre):
+        print("FAIL: the tight-pool run did not preempt", file=sys.stderr)
+        fail = 1
+    else:
+        print(
+            f"preemption: {min(p['preemptions'] for p in pre)}+ preemptions, "
+            f"all {pre[0]['n_requests']} requests completed OK"
+        )
+
+    if not fail:
+        print("serve gate passed")
+    return fail
 
 
 if __name__ == "__main__":

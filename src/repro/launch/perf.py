@@ -29,7 +29,11 @@ from repro.configs import get_arch
 from repro.launch import param_math
 from repro.launch.dryrun import SHAPES, OUT_DIR
 from repro.launch.topology import make_production_mesh, production_topology
-from repro.roofline import analyze_compiled, decode_bandwidth_bound_s
+from repro.roofline import (
+    analyze_compiled,
+    decode_bandwidth_bound_s,
+    prefill_sharing_savings,
+)
 
 PERF_DIR = os.path.join(os.path.dirname(OUT_DIR), "perf")
 
@@ -217,6 +221,19 @@ def run_variant(arch_name, shape_name, mesh_name, variant):
                     bound["dense_kv_bytes"] = dense_kv_bytes
                     bound["dense_bound_s"] = dense["bound_s"]
                     entry["decode_bound"] = bound
+                    # COW prefix-sharing price for the shared-system-prompt
+                    # regime on this pool: all n_slots residents share one
+                    # seq_len prompt, so followers map the donor's pages
+                    # instead of re-prefilling (DESIGN.md §8)
+                    entry["prefix_sharing"] = prefill_sharing_savings(
+                        tokens_unshared=float(n_slots * spec["seq_len"]),
+                        tokens_shared=float(spec["seq_len"]),
+                        flops_per_token=(
+                            param_math.model_flops(arch.model, 1) / 3.0
+                        ),
+                        kv_bytes_per_token=kv_bytes / (npage * page_size),
+                        n_devices=n_dev,
+                    )
                 entry["ok"] = True
             except Exception as e:
                 entry["ok"] = False

@@ -14,8 +14,11 @@ from .model import (
     init_paged_cache,
     init_params,
     lm_loss,
+    paged_copy_pages,
     paged_decode_step,
+    paged_gather_pages,
     paged_prefill_chunk,
+    paged_scatter_pages,
     param_count,
     prefill,
 )
@@ -23,6 +26,7 @@ from .model import (
 __all__ = [
     "LayerSpec", "MLAConfig", "MoEConfig", "ModelConfig", "Segment",
     "dense_stack", "reduced", "decode_step", "forward", "init_cache",
-    "init_paged_cache", "init_params", "lm_loss", "paged_decode_step",
-    "paged_prefill_chunk", "param_count", "prefill",
+    "init_paged_cache", "init_params", "lm_loss", "paged_copy_pages",
+    "paged_decode_step", "paged_gather_pages", "paged_prefill_chunk",
+    "paged_scatter_pages", "param_count", "prefill",
 ]

@@ -309,6 +309,33 @@ def init_paged_cache(
     return caches
 
 
+def paged_copy_pages(cache: PyTree, src: jax.Array, dst: jax.Array) -> PyTree:
+    """Copy pool pages ``src[i] -> dst[i]`` in every layer's pool (the COW
+    split: a shared page is duplicated before its new owner writes into it).
+    ``src``/``dst`` are fixed-width (W,) int32 vectors padded with the null
+    page — padded lanes copy page 0 onto itself, which is free garbage by
+    design, so one compiled shape covers every split. Every pool leaf has
+    the page axis at position 1 ((repeat, npage, ...) — init_paged_cache)."""
+    return jax.tree.map(lambda leaf: leaf.at[:, dst].set(leaf[:, src]), cache)
+
+
+def paged_gather_pages(cache: PyTree, ids: jax.Array) -> PyTree:
+    """Snapshot pool pages ``ids`` (a (W,) int32 vector, null-padded) out of
+    every layer's pool — the swap-out half of preemption. Returns a pytree
+    of (repeat, W, ...) leaves the host parks until resume."""
+    return jax.tree.map(lambda leaf: leaf[:, ids], cache)
+
+
+def paged_scatter_pages(cache: PyTree, ids: jax.Array, snap: PyTree) -> PyTree:
+    """Write a :func:`paged_gather_pages` snapshot back into pages ``ids`` —
+    the resume half of preemption (fresh pages, identical content, so the
+    resumed request's token stream is unchanged). Padded lanes write the
+    null page."""
+    return jax.tree.map(
+        lambda leaf, s: leaf.at[:, ids].set(s.astype(leaf.dtype)), cache, snap
+    )
+
+
 def paged_decode_step(
     params: PyTree,
     cfg: ModelConfig,

@@ -6,6 +6,7 @@ from .analysis import (
     analyze_compiled,
     collective_bytes_from_hlo,
     decode_bandwidth_bound_s,
+    prefill_sharing_savings,
 )
 
 __all__ = [
@@ -16,4 +17,5 @@ __all__ = [
     "analyze_compiled",
     "collective_bytes_from_hlo",
     "decode_bandwidth_bound_s",
+    "prefill_sharing_savings",
 ]

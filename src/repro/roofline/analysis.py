@@ -373,6 +373,53 @@ def decode_bandwidth_bound_s(
     }
 
 
+def prefill_sharing_savings(
+    tokens_unshared: float,
+    tokens_shared: float,
+    flops_per_token: float,
+    kv_bytes_per_token: float,
+    n_devices: int,
+    hw: HW = HW(),
+) -> dict:
+    """Analytic price of COW prefix sharing on the prefill bill (DESIGN.md §8).
+
+    Prefix sharing removes prompt tokens from the prefill path entirely —
+    a follower maps the donor's cached pages instead of recomputing them —
+    so the saving is linear in tokens skipped:
+
+        tokens_saved = tokens_unshared - tokens_shared
+
+    Each skipped token saves its forward FLOPs (``flops_per_token``, ~2·N
+    for an N-parameter model) and the KV write traffic it would have issued
+    (``kv_bytes_per_token``, the per-token KV footprint across layers; the
+    COW pages are written once by the donor and only re-read). Parameter
+    streaming amortizes over the prefill chunk either way and is excluded.
+
+    Returns the saved FLOPs/bytes plus the time each converts to on the
+    ``hw`` roofline (compute at peak, KV writes at HBM bandwidth) — prefill
+    is compute-bound at any realistic chunk, so ``saved_s`` takes the
+    compute leg as the headline and keeps the HBM leg for reference.
+    """
+    tokens_saved = max(0.0, tokens_unshared - tokens_shared)
+    flops_saved = tokens_saved * flops_per_token
+    hbm_saved = tokens_saved * kv_bytes_per_token
+    compute_s = flops_saved / (n_devices * hw.peak_flops)
+    hbm_s = hbm_saved / (n_devices * hw.hbm_bw)
+    return {
+        "tokens_unshared": tokens_unshared,
+        "tokens_shared": tokens_shared,
+        "tokens_saved": tokens_saved,
+        "prefill_token_reduction": (
+            tokens_unshared / tokens_shared if tokens_shared > 0 else float("inf")
+        ),
+        "flops_saved": flops_saved,
+        "kv_write_bytes_saved": hbm_saved,
+        "compute_s_saved": compute_s,
+        "hbm_s_saved": hbm_s,
+        "saved_s": compute_s,
+    }
+
+
 def analyze_compiled(
     compiled,
     n_devices: int,

@@ -1,0 +1,182 @@
+"""Property-based fuzz of the refcounted page pool + block tables.
+
+Random interleaved alloc / fork / COW-split / release / row-clear / free
+sequences, mirrored against a dumb reference model (a dict of refcounts and
+a free set). After EVERY op the pool's cross-checked audit must hold:
+page conservation, page 0 never handed out or freed, no double-free,
+and each refcount equal to the number of block-table rows referencing the
+page. Driven by a single integer seed (hypothesis when installed, the
+tests/_hyp.py sampled grid otherwise) with the repro command printed on
+failure.
+"""
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+
+from repro.core.paging import (
+    NULL_PAGE,
+    BlockTables,
+    PagePool,
+    PagedLayout,
+    PoolExhausted,
+)
+
+N_OPS = 200
+
+
+class _RefModel:
+    """Independent bookkeeping the pool is checked against."""
+
+    def __init__(self, layout):
+        self.free = set(range(1, layout.npage))
+        self.ref = {}
+
+    def alloc(self, page):
+        self.free.remove(page)
+        self.ref[page] = 1
+
+    def fork(self, page):
+        self.ref[page] += 1
+
+    def release(self, page):
+        self.ref[page] -= 1
+        if self.ref[page] == 0:
+            del self.ref[page]
+            self.free.add(page)
+
+
+def _entries(tbl, layout):
+    """All (slot, idx, page) triples, split into mapped and empty."""
+    arr = tbl.array
+    mapped, empty = [], []
+    for s in range(layout.n_slots):
+        for i in range(layout.max_pages):
+            p = int(arr[s, i])
+            (empty if p == NULL_PAGE else mapped).append((s, i, p))
+    return mapped, empty
+
+
+def _check(pool, tbl, model, layout, where):
+    pool.check_conservation(tbl)
+    assert pool.n_free == len(model.free), where
+    for p in range(1, layout.npage):
+        assert pool.refcount(p) == model.ref.get(p, 0), (where, p)
+
+
+def _run_fuzz(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    layout = PagedLayout(
+        npage=int(rng.integers(4, 14)),
+        page_size=4,
+        max_pages=int(rng.integers(2, 6)),
+        n_slots=int(rng.integers(1, 5)),
+    )
+    pool, tbl, model = PagePool(layout), BlockTables(layout), _RefModel(layout)
+
+    for opno in range(N_OPS):
+        mapped, empty = _entries(tbl, layout)
+        op = rng.choice(
+            ["alloc", "fork", "cow", "release", "clear_row", "free", "abuse"]
+        )
+        where = f"op {opno} ({op}) layout {layout}"
+
+        if op == "alloc" and empty:
+            s, i, _ = empty[rng.integers(len(empty))]
+            if pool.n_free == 0:
+                with pytest.raises(PoolExhausted):
+                    pool.alloc(1)
+            else:
+                (p,) = pool.alloc(1)
+                assert p != NULL_PAGE
+                tbl.set_entry(s, i, p)
+                model.alloc(p)
+
+        elif op == "fork" and mapped and empty:
+            _, _, p = mapped[rng.integers(len(mapped))]
+            s2, i2, _ = empty[rng.integers(len(empty))]
+            pool.fork(p)
+            tbl.set_entry(s2, i2, p)
+            model.fork(p)
+
+        elif op == "cow" and mapped:
+            # split a shared page under one of its rows (the scheduler's
+            # prepare_write path: alloc, repoint, release the old page)
+            shared = [(s, i, p) for s, i, p in mapped if pool.refcount(p) > 1]
+            if shared and pool.n_free > 0:
+                s, i, p = shared[rng.integers(len(shared))]
+                (new,) = pool.alloc(1)
+                tbl.set_entry(s, i, new)
+                model.alloc(new)
+                pool.release(p)
+                model.release(p)
+
+        elif op == "release" and mapped:
+            s, i, p = mapped[rng.integers(len(mapped))]
+            tbl.set_entry(s, i, NULL_PAGE)
+            left = pool.release(p)
+            model.release(p)
+            assert left == model.ref.get(p, 0)
+
+        elif op == "clear_row" and mapped:
+            # swap-out: drop every reference one slot holds
+            s = int(rng.integers(layout.n_slots))
+            for _, i, p in [(a, b, c) for a, b, c in mapped if a == s]:
+                pool.release(p)
+                model.release(p)
+            tbl.clear(s)
+
+        elif op == "free" and mapped:
+            # the strict exclusive path, only legal at refcount exactly 1
+            excl = [(s, i, p) for s, i, p in mapped if pool.refcount(p) == 1]
+            if excl:
+                s, i, p = excl[rng.integers(len(excl))]
+                tbl.set_entry(s, i, NULL_PAGE)
+                pool.free([p])
+                model.release(p)
+
+        elif op == "abuse":
+            # illegal calls must raise and must not corrupt any state
+            with pytest.raises(ValueError):
+                pool.fork(NULL_PAGE)
+            with pytest.raises(ValueError):
+                pool.free([NULL_PAGE])
+            if pool.n_free:
+                free_page = next(
+                    q for q in range(1, layout.npage) if pool.refcount(q) == 0
+                )
+                with pytest.raises(ValueError):
+                    pool.release(free_page)
+                with pytest.raises(ValueError, match="double free"):
+                    pool.free([free_page])
+            shared = [p for _, _, p in mapped if pool.refcount(p) > 1]
+            if shared:
+                with pytest.raises(ValueError, match="release"):
+                    pool.free([shared[0]])
+            with pytest.raises(PoolExhausted):
+                pool.alloc(pool.n_free + 1)
+
+        _check(pool, tbl, model, layout, where)
+
+    # drain everything: the pool must come back whole
+    mapped, _ = _entries(tbl, layout)
+    for s, i, p in mapped:
+        tbl.set_entry(s, i, NULL_PAGE)
+        pool.release(p)
+        model.release(p)
+    _check(pool, tbl, model, layout, "drain")
+    assert pool.n_free == layout.usable_pages
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+def test_pool_fuzz_conservation(seed):
+    try:
+        _run_fuzz(seed)
+    except Exception:
+        print(
+            "\nreproduce with: PYTHONPATH=src:tests python -c "
+            f'"import test_paging_fuzz as m; m._run_fuzz({seed})"'
+        )
+        raise

@@ -24,8 +24,11 @@ from repro.models import (
     decode_step,
     init_paged_cache,
     init_params,
+    paged_copy_pages,
     paged_decode_step,
+    paged_gather_pages,
     paged_prefill_chunk,
+    paged_scatter_pages,
     prefill,
     reduced,
 )
@@ -303,7 +306,7 @@ def test_scheduler_reservation_blocks_admission():
     layout = PagedLayout(npage=5, page_size=4, max_pages=4, n_slots=2)
     r1 = Request(rid=0, prompt=np.arange(9, dtype=np.int32), max_new=2)  # 3 pages
     r2 = Request(rid=1, prompt=np.arange(9, dtype=np.int32), max_new=2)
-    sched = ContinuousScheduler(layout)
+    sched = ContinuousScheduler(layout, admission="reserve")
     sched.submit(r1)
     sched.submit(r2)
     admitted = sched.admit()
@@ -312,4 +315,163 @@ def test_scheduler_reservation_blocks_admission():
     r1.generated = [7, 7]
     sched.complete(r1)
     assert [r.rid for r in sched.admit()] == [1]
-    sched.pool.check_conservation()
+    sched.pool.check_conservation(sched.tables)
+
+
+def test_pool_audit_rejects_referenced_free_page():
+    """The cross-checked audit catches the two COW corruption modes: a page
+    that went back to the free list while a block-table row still points at
+    it, and a pool refcount that drifted from the number of referencing
+    rows."""
+    layout = PagedLayout(npage=9, page_size=4, max_pages=4, n_slots=2)
+    pool, tbl = PagePool(layout), BlockTables(layout)
+
+    # released-but-still-mapped: the row keeps pointing at a freed page
+    pages = pool.alloc(2)
+    tbl.assign(0, pages)
+    pool.check_conservation(tbl)
+    pool.release(pages[1])  # bug: row entry not cleared
+    with pytest.raises(AssertionError, match="still referenced"):
+        pool.check_conservation(tbl)
+    tbl.set_entry(0, 1, NULL_PAGE)
+    pool.check_conservation(tbl)
+
+    # refcount drift: fork without mapping the page into a second row
+    pool.fork(pages[0])
+    with pytest.raises(AssertionError, match="refcounts"):
+        pool.check_conservation(tbl)
+    tbl.set_entry(1, 0, pages[0])
+    pool.check_conservation(tbl)
+
+
+def test_share_prefix_requires_expected_admission():
+    layout = PagedLayout(npage=9, page_size=4, max_pages=4, n_slots=2)
+    with pytest.raises(ValueError, match="expected"):
+        ContinuousScheduler(layout, admission="reserve", share_prefix=True)
+
+
+def _logit_capture_engine(params, cfg, layout, *, chunk, share_prefix, quantized):
+    """Real-model engine whose prefill/decode record per-request logits: the
+    prefix-sharing regression compares these arrays bit-for-bit against an
+    engine that prefills everything from scratch."""
+    cache = init_paged_cache(
+        cfg, layout.npage, layout.page_size, quantized=quantized
+    )
+    sched = ContinuousScheduler(layout, share_prefix=share_prefix)
+    captured = {}  # rid -> [logits for each generated token, in order]
+
+    def prefill_fn(cache, toks, start, row, nv):
+        lg, cache = paged_prefill_chunk(
+            params, cfg, cache, jnp.asarray(toks), jnp.int32(start),
+            jnp.asarray(row), jnp.int32(nv),
+        )
+        cands = [r for r in sched.active if r.prefilling]
+        req = min(cands, key=lambda r: r.t_admit)
+        if req.prefill_done + int(nv) == req.prompt_len:
+            captured.setdefault(req.rid, []).append(np.asarray(lg))
+        return jnp.argmax(lg).astype(jnp.int32), cache
+
+    def decode_fn(cache, toks, lengths, tables):
+        lg, cache = paged_decode_step(
+            params, cfg, cache, jnp.asarray(toks), jnp.asarray(lengths),
+            jnp.asarray(tables),
+        )
+        for s, req in enumerate(sched.slots):
+            if req is not None and req.decoding and int(lengths[s]) > 0:
+                captured.setdefault(req.rid, []).append(np.asarray(lg[s]))
+        return jnp.argmax(lg, axis=-1).astype(jnp.int32), cache
+
+    eng = ContinuousEngine(
+        sched, cache, prefill_fn, decode_fn, chunk=chunk,
+        copy_fn=lambda c, s, d: paged_copy_pages(c, jnp.asarray(s), jnp.asarray(d)),
+        gather_fn=lambda c, i: jax.tree.map(
+            np.asarray, paged_gather_pages(c, jnp.asarray(i))
+        ),
+        scatter_fn=lambda c, i, sn: paged_scatter_pages(c, jnp.asarray(i), sn),
+    )
+    return eng, sched, captured
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_shared_prefix_logits_bit_identical(quantized):
+    """Two requests sharing a prompt prefix (COW pages) produce logits
+    BIT-identical to fully independent prefills: aliasing only changes
+    block-table content, never the values the kernel gathers. Covers both
+    full-page sharing and the COW split of a shared partial page."""
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    P, chunk = 4, 4
+    prefix = rng.integers(0, cfg.vocab_size, size=(14,))  # 3.5 pages
+
+    def reqs():
+        # A holds the prefix resident while C admits (B is churn in between);
+        # C extends A's prompt past its partial tail page -> COW split
+        return [
+            Request(rid=0, prompt=np.asarray(prefix, np.int32), max_new=12),
+            Request(
+                rid=1,
+                prompt=np.asarray(
+                    rng.integers(0, cfg.vocab_size, size=(10,)), np.int32
+                ),
+                max_new=2,
+            ),
+            Request(
+                rid=2,
+                prompt=np.asarray(
+                    list(prefix) + [11, 13], np.int32
+                ),
+                max_new=3,
+            ),
+        ]
+
+    layout = PagedLayout(npage=17, page_size=P, max_pages=7, n_slots=2)
+    rng_state = rng.bit_generator.state
+    eng, sched, shared = _logit_capture_engine(
+        params, cfg, layout, chunk=chunk, share_prefix=True,
+        quantized=quantized,
+    )
+    shared_reqs = reqs()
+    eng.run(shared_reqs)
+    sched.pool.check_conservation(sched.tables)
+    assert sched.shared_tokens_total == 14, "C must map A's prompt pages"
+    assert sched.cow_splits >= 1, "writing A's shared partial page must split"
+
+    rng.bit_generator.state = rng_state  # identical workload for the baseline
+    eng0, sched0, base = _logit_capture_engine(
+        params, cfg, layout, chunk=chunk, share_prefix=False,
+        quantized=quantized,
+    )
+    base_reqs = reqs()
+    eng0.run(base_reqs)
+    assert sched0.shared_tokens_total == 0
+
+    assert set(shared) == set(base)
+    for rid in base:
+        assert len(shared[rid]) == len(base[rid])
+        for step, (got, want) in enumerate(zip(shared[rid], base[rid])):
+            np.testing.assert_array_equal(
+                got, want, err_msg=f"rid {rid} token {step} ({quantized=})"
+            )
+    for rs, rb in zip(shared_reqs, base_reqs):
+        assert rs.generated == rb.generated
+
+
+def test_scheduler_preemption_oversubscribed_completes_all():
+    """Expected admission over a pool far too small for the whole workload:
+    preemption must kick in, every request must still complete, and every
+    page must come back."""
+    layout = PagedLayout(npage=9, page_size=4, max_pages=8, n_slots=3)
+    reqs = [
+        Request(rid=i, prompt=np.arange(6, dtype=np.int32) + i, max_new=18)
+        for i in range(5)
+    ]  # each grows to 6+18=24 tokens = 6 pages; the pool holds 8
+    eng, sched = _fake_engine(layout, reqs)
+    rep = eng.run(reqs)
+    assert rep.n_requests == len(reqs)
+    assert rep.preemptions > 0, "an oversubscribed pool must preempt"
+    for r in reqs:
+        assert len(r.generated) == r.max_new
+    sched.pool.check_conservation(sched.tables)
+    assert sched.pool.n_free == layout.usable_pages
+    assert all(s is None for s in sched.slots)

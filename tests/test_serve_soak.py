@@ -1,0 +1,159 @@
+"""Scheduler soak (slow tier): over-subscribed randomized serving.
+
+The model here is fake but CONTENT-SENSITIVE: the "KV cache" is a numpy
+page pool of token values, prefill/decode write real tokens through the
+block tables, and every emitted token is a deterministic hash of the
+request's own cached history. Any paging bug — a COW split that loses a
+page, a swap-out that restores the wrong snapshot, a lazy allocation that
+lands in another request's page — changes some request's token stream.
+
+Each seeded workload runs twice: once over a pool far too small (forcing
+preemption and COW prefix sharing) and once over a roomy pool with sharing
+off (every request fully independent). The streams must match token for
+token, every admitted request must complete, and the latency percentiles
+must be ordered. Opt in with ``-m slow``; the failing parametrize id names
+the seed.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.paging import NULL_PAGE, PagedLayout
+from repro.launch.scheduler import ContinuousEngine, ContinuousScheduler, Request
+
+PAGE = 4
+SLOTS = 4
+VOCAB = 997
+
+
+def _content_engine(layout, *, share_prefix, admission="expected"):
+    """Engine over the numpy content model described in the module docstring."""
+    sched = ContinuousScheduler(
+        layout, admission=admission, share_prefix=share_prefix
+    )
+    cache = np.zeros((layout.npage, layout.page_size), np.int64)
+
+    def _gather(cache, row, n):
+        pages = row[: -(-n // layout.page_size)]
+        flat = cache[pages].reshape(-1)[:n]
+        return flat
+
+    def _emit(cache, row, n):
+        h = 1469
+        for v in _gather(cache, row, n):
+            h = (h * 31 + int(v) + 1) % VOCAB
+        return h
+
+    def prefill_fn(cache, toks, start, row, nv):
+        start, nv = int(start), int(nv)
+        for j in range(nv):
+            pos = start + j
+            cache[row[pos // layout.page_size], pos % layout.page_size] = toks[0, j]
+        return np.int64(_emit(cache, row, start + nv)), cache
+
+    def decode_fn(cache, toks, lengths, tables):
+        out = np.zeros(toks.shape, np.int64)
+        for s in range(len(toks)):
+            n = int(lengths[s])
+            row = tables[s]
+            cache[row[n // layout.page_size], n % layout.page_size] = toks[s]
+            if n > 0:
+                out[s] = _emit(cache, row, n + 1)
+        return out, cache
+
+    def copy_fn(cache, src, dst):
+        cache[dst] = cache[src]
+        return cache
+
+    def gather_fn(cache, ids):
+        return cache[ids].copy()
+
+    def scatter_fn(cache, ids, snap):
+        cache[ids] = snap
+        return cache
+
+    eng = ContinuousEngine(
+        sched, cache, prefill_fn, decode_fn, chunk=PAGE,
+        copy_fn=copy_fn, gather_fn=gather_fn, scatter_fn=scatter_fn,
+    )
+    return eng, sched
+
+
+def _workload(rng, n_requests):
+    """Mixed lengths; about half the requests draw one of 4 common prompt
+    prefixes (grouped arrivals, like a shared system prompt)."""
+    prefixes = [
+        rng.integers(1, VOCAB, size=int(rng.integers(5, 12))) for _ in range(4)
+    ]
+    reqs = []
+    for rid in range(n_requests):
+        tail = rng.integers(1, VOCAB, size=int(rng.integers(1, 8)))
+        if rng.random() < 0.5:
+            prompt = np.concatenate([prefixes[rid % 4], tail])
+        else:
+            prompt = tail
+        reqs.append(
+            Request(
+                rid=rid,
+                prompt=np.asarray(prompt, np.int32),
+                max_new=int(rng.integers(2, 10)),
+            )
+        )
+    # grouped by prefix, so same-prefix requests overlap in flight
+    reqs.sort(key=lambda r: r.rid % 4)
+    for i, r in enumerate(reqs):
+        r.rid = i
+    return reqs
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [11, 23, 47])
+def test_soak_preempted_streams_match_unpreempted(seed):
+    rng = np.random.default_rng(seed)
+    n_requests = 40
+    longest = 0
+
+    reqs_tight = _workload(np.random.default_rng(seed), n_requests)
+    reqs_roomy = _workload(np.random.default_rng(seed), n_requests)
+    for a, b in zip(reqs_tight, reqs_roomy):
+        np.testing.assert_array_equal(a.prompt, b.prompt)
+        assert a.max_new == b.max_new
+        longest = max(longest, a.prompt_len + a.max_new)
+
+    max_pages = -(-longest // PAGE)
+
+    # tight: ~2 worst-case requests' worth of pages for 4 slots + sharing
+    tight = PagedLayout(
+        npage=1 + 2 * max_pages, page_size=PAGE,
+        max_pages=max_pages, n_slots=SLOTS,
+    )
+    eng_t, sched_t = _content_engine(tight, share_prefix=True)
+    rep_t = eng_t.run(reqs_tight)
+
+    roomy = PagedLayout(
+        npage=1 + SLOTS * max_pages, page_size=PAGE,
+        max_pages=max_pages, n_slots=SLOTS,
+    )
+    eng_r, sched_r = _content_engine(roomy, share_prefix=False)
+    rep_r = eng_r.run(reqs_roomy)
+
+    assert rep_t.preemptions > 0, "the tight pool must force preemption"
+    assert rep_t.shared_tokens > 0, "grouped prefixes must share pages"
+    assert rep_r.preemptions == 0 and rep_r.shared_tokens == 0
+
+    assert rep_t.n_requests == n_requests == rep_r.n_requests
+    for rt, rr in zip(reqs_tight, reqs_roomy):
+        assert len(rt.generated) == rt.max_new
+        assert rt.generated == rr.generated, (
+            f"rid {rt.rid}: preempted/shared stream diverged "
+            f"(repro seed {seed})"
+        )
+
+    for rep in (rep_t, rep_r):
+        assert rep.first_token_p50_ms <= rep.first_token_p99_ms
+        assert rep.completion_p50_ms <= rep.completion_p99_ms
+
+    for sched in (sched_t, sched_r):
+        sched.pool.check_conservation(sched.tables)
+        assert sched.pool.n_free == sched.layout.usable_pages
+        assert (sched.tables.array == NULL_PAGE).all()
